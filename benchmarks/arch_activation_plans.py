@@ -1,0 +1,27 @@
+"""Benchmark: DMO on the assigned architectures' block activation arenas
+(one decoder block, batch 1 x seq 128, bf16) — the paper's technique carried
+to the transformer substrate."""
+from __future__ import annotations
+
+import time
+
+from repro.configs import registry
+from repro.core.activation_planner import plan_block
+
+
+def run(csv_rows):
+    for name, cfg in registry().items():
+        t0 = time.perf_counter()
+        orig, dmo = plan_block(cfg, batch=1, seq=128)
+        us = (time.perf_counter() - t0) * 1e6
+        sav = 100 * (1 - dmo.peak_bytes / orig.peak_bytes)
+        csv_rows.append((
+            f"activation/{name}", us,
+            f"orig={orig.peak_bytes / 1024:.0f}KB dmo={dmo.peak_bytes / 1024:.0f}KB "
+            f"saving={sav:.1f}%"))
+    return csv_rows
+
+
+if __name__ == "__main__":
+    for r in run([]):
+        print(",".join(str(x) for x in r))

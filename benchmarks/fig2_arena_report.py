@@ -1,0 +1,44 @@
+"""Benchmark: Fig. 1/2 analogue — arena layout report for the example model
+(MobileNet v1 0.25 128 8-bit): buffer offsets/scopes before and after DMO,
+plus an ASCII rendering of the diagonal packing."""
+from __future__ import annotations
+
+import time
+
+from repro.core import zoo
+from repro.core.planner import plan_original, plan_search
+
+
+def ascii_arena(plan, width: int = 72) -> str:
+    scopes = plan.graph.scopes(plan.order)
+    peak = plan.peak_bytes
+    lines = []
+    for t in sorted(plan.offsets, key=lambda t: scopes[t][0]):
+        off, size = plan.offsets[t], t.nbytes
+        a = int(off / peak * width)
+        b = max(a + 1, int((off + size) / peak * width))
+        s, e = scopes[t]
+        lines.append(" " * a + "#" * (b - a) + " " * (width - b)
+                     + f"| {t.name[:18]:18s} [{s:>2},{e:>2}]")
+    return "\n".join(lines)
+
+
+def run(csv_rows):
+    t0 = time.perf_counter()
+    g = zoo.mobilenet_v1(0.25, 128, 1)
+    p0 = plan_original(g)
+    p1 = plan_search(g, method="algorithmic", budget_s=10.0)
+    us = (time.perf_counter() - t0) * 1e6
+    csv_rows.append(("fig2/arena_original_kb", us, f"{p0.peak_bytes / 1024:.0f}"))
+    csv_rows.append(("fig2/arena_dmo_kb", us, f"{p1.peak_bytes / 1024:.0f}"))
+    return csv_rows
+
+
+if __name__ == "__main__":
+    g = zoo.mobilenet_v1(0.25, 128, 1)
+    p0 = plan_original(g)
+    p1 = plan_search(g, method="algorithmic", budget_s=10.0)
+    print(f"== original ({p0.peak_bytes / 1024:.0f} KB, strategy {p0.strategy})")
+    print(ascii_arena(p0))
+    print(f"\n== DMO ({p1.peak_bytes / 1024:.0f} KB, strategy {p1.strategy})")
+    print(ascii_arena(p1))

@@ -1,0 +1,49 @@
+"""Benchmark: Pallas kernel wall-time (interpret mode on CPU — correctness
+costs, not TPU perf) + arena footprint savings of the DMO dwconv kernel."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, n=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run(csv_rows):
+    r = np.random.default_rng(0)
+    x = jnp.asarray(r.standard_normal((32, 32, 8)), jnp.float32)
+    w = jnp.asarray(r.standard_normal((3, 3, 8)), jnp.float32)
+    us = _time(lambda a, b: ops.dmo_dwconv2d(a, b, stride=1, pad=1), x, w)
+    arena, two = ops.dmo_dwconv2d_footprint(32, 32, 8, 3, 1, 1)
+    csv_rows.append(("kernels/dmo_dwconv_32x32x8", us,
+                     f"arena={arena}B two-buffer={two}B "
+                     f"saving={100 * (1 - arena / two):.0f}%"))
+
+    q = jnp.asarray(r.standard_normal((256, 4, 64)), jnp.float32)
+    k = jnp.asarray(r.standard_normal((256, 4, 64)), jnp.float32)
+    us = _time(lambda a, b: ops.flash_attention(a, b, b), q, k)
+    err = float(jnp.max(jnp.abs(ops.flash_attention(q, k, k)
+                                - ref.attention(q, k, k))))
+    csv_rows.append(("kernels/flash_attention_256x4x64", us,
+                     f"max_err_vs_oracle={err:.2e}"))
+
+    xx = jnp.asarray(r.standard_normal((512, 128)), jnp.float32)
+    g = jnp.asarray(r.standard_normal((128,)), jnp.float32)
+    us = _time(lambda a, b: ops.rmsnorm_residual(a, b, a), xx, g)
+    csv_rows.append(("kernels/inplace_rmsnorm_512x128", us, "aliased in/out"))
+    return csv_rows
+
+
+if __name__ == "__main__":
+    for row in run([]):
+        print(",".join(str(x) for x in row))

@@ -1,0 +1,47 @@
+"""Benchmark: paper §II.C operation removal (concat elision) on SqueezeNet.
+
+Branch outputs become views into the aggregated tensor, so the double copy
+disappears. SqueezeNet's global peak is conv1-bound (our graph), so the
+removal shows up in the fire-module region footprint; removal composes with
+DMO exactly as §II.C claims.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.planner import plan_dmo, plan_original
+from repro.core.removal import remove_concats
+from repro.core.zoo import squeezenet
+
+
+def _fire_live(g):
+    scopes = g.scopes()
+    worst = 0
+    for i, op in enumerate(g.ops):
+        if "fire" in op.name:
+            worst = max(worst, sum(t.nbytes for t, (a, b) in scopes.items()
+                                   if a <= i <= b))
+    return worst
+
+
+def run(csv_rows):
+    t0 = time.perf_counter()
+    g = squeezenet()
+    g2 = remove_concats(g)
+    a, b = _fire_live(g), _fire_live(g2)
+    p0 = plan_original(g).peak_bytes
+    p1 = plan_dmo(g2, method="algorithmic").peak_bytes
+    us = (time.perf_counter() - t0) * 1e6
+    csv_rows.append(("removal/squeezenet_fire_region", us,
+                     f"{a / 1024:.0f}->{b / 1024:.0f}KB "
+                     f"({100 * (1 - b / a):.0f}% of the concat-dominated "
+                     f"region)"))
+    csv_rows.append(("removal/squeezenet_peak_with_dmo", us,
+                     f"orig={p0 / 1024:.0f}KB removal+dmo={p1 / 1024:.0f}KB "
+                     f"(peak is conv1-bound; techniques compose)"))
+    return csv_rows
+
+
+if __name__ == "__main__":
+    for r in run([]):
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,40 @@
+"""Benchmark: the roofline table, rendered from the dry-run results
+(experiments/dryrun_results*.jsonl — produced by repro.launch.dryrun)."""
+from __future__ import annotations
+
+import json
+import os
+
+FILES = ("experiments/dryrun_results.jsonl",
+         "experiments/dryrun_results_multipod.jsonl")
+
+
+def load(files=FILES):
+    recs = {}
+    for f in files:
+        if not os.path.exists(f):
+            continue
+        for line in open(f):
+            r = json.loads(line)
+            if r.get("ok"):
+                recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def run(csv_rows):
+    recs = load()
+    for (arch, shape, mesh), r in sorted(recs.items()):
+        csv_rows.append((
+            f"roofline/{arch}/{shape}/{mesh}", r.get("compile_s", 0) * 1e6,
+            f"comp={r['t_compute_s'] * 1e3:.1f}ms mem={r['t_memory_s'] * 1e3:.1f}ms "
+            f"coll={r['t_collective_s'] * 1e3:.1f}ms bneck={r['bottleneck']} "
+            f"useful={r['useful_flops_ratio']:.2f}"))
+    if not recs:
+        csv_rows.append(("roofline/missing", 0.0,
+                         "run: python -m repro.launch.dryrun --all"))
+    return csv_rows
+
+
+if __name__ == "__main__":
+    for row in run([]):
+        print(",".join(str(x) for x in row))

@@ -1,0 +1,33 @@
+"""Benchmark harness: one module per paper table/figure + framework extras.
+Prints ``name,us_per_call,derived`` CSV rows."""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (arch_activation_plans, fig2_arena_report,
+                            kernel_bench, op_removal, op_splitting,
+                            roofline_report, table2_os_precision,
+                            table3_memory_savings)
+    rows = []
+    mods = [
+        ("table2 (O_s precision)", table2_os_precision),
+        ("table3 (memory savings)", table3_memory_savings),
+        ("fig2 (arena report)", fig2_arena_report),
+        ("op splitting (§II.A)", op_splitting),
+        ("op removal (§II.C)", op_removal),
+        ("activation plans", arch_activation_plans),
+        ("kernels", kernel_bench),
+        ("roofline", roofline_report),
+    ]
+    for name, mod in mods:
+        print(f"# --- {name}", file=sys.stderr, flush=True)
+        mod.run(rows)
+    print("name,us_per_call,derived")
+    for n, us, d in rows:
+        print(f"{n},{us:.1f},{d}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Continuous batching: 6 requests with different prompt lengths share 3
+slots of one donated KV cache; finished slots are recycled mid-flight.
+
+    PYTHONPATH=src python examples/continuous_serving.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import transformer as T
+from repro.serve.continuous import ContinuousConfig, ContinuousEngine, Request
+
+cfg = get_arch("qwen2.5-3b").reduced()
+params = T.init_params(cfg, jax.random.PRNGKey(0))
+eng = ContinuousEngine(cfg, params, ContinuousConfig(slots=3, cache_len=128))
+
+rng = np.random.default_rng(0)
+reqs = []
+for i in range(6):
+    plen = int(rng.integers(6, 40))
+    reqs.append(Request(i, rng.integers(1, cfg.vocab_size, plen)
+                        .astype(np.int32), max_new_tokens=8 + i))
+    eng.submit(reqs[-1])
+
+t0 = time.time()
+steps = 0
+while any(not r.done for r in reqs) and steps < 200:
+    eng.step()
+    steps += 1
+dt = time.time() - t0
+
+print(f"6 ragged requests through 3 slots in {steps} engine steps ({dt:.1f}s)")
+for r in reqs:
+    print(f"  req{r.rid}: prompt={len(r.tokens):2d} tok -> "
+          f"{len(r.out)} generated {r.out[:6]}...")
+print("\nslots are recycled in place — the scheduler-level face of the "
+      "paper's storage-reuse discipline.")

@@ -1,0 +1,30 @@
+"""Batched serving with donated KV caches (reduced configs of three
+families: dense GQA, MLA, attention-free RWKV).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import transformer as T
+from repro.serve.engine import Engine, ServeConfig
+
+for arch in ("yi-6b", "minicpm3-4b", "rwkv6-1.6b"):
+    cfg = get_arch(arch).reduced()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, ServeConfig(cache_len=96, max_new_tokens=24))
+    prompts = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (8, 32)).astype(np.int32)
+    t0 = time.time()
+    out = eng.generate(prompts)
+    dt = time.time() - t0
+    kinds = {"gqa": "KV ring cache", "mla": "compressed-latent cache",
+             "none": "O(1) recurrent state"}
+    print(f"{arch:14s} [{kinds[cfg.attention]:24s}] "
+          f"generated {out.shape[0]}x{out.shape[1]} tokens in {dt:5.1f}s "
+          f"-> {out[0, :10].tolist()}...")
+print("\nall caches are donated every step: the serving-side realisation of "
+      "the paper's in-place (O_s=|out|) overlap.")

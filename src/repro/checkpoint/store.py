@@ -1,0 +1,70 @@
+"""Checkpointing: pytree <-> npz with '/'-joined key paths.
+
+Single-file npz per step; sharded arrays are gathered through addressable
+shards (single-host container) and restored with the caller's shardings.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+import jax
+
+
+def _flatten(tree, prefix="") -> Dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def save(path: str, tree, step: Optional[int] = None) -> str:
+    if step is not None:
+        path = os.path.join(path, f"step_{step:08d}.npz")
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+    np.savez(path, **flat)
+    return path
+
+
+def restore(path: str, like, shardings=None):
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs); device placement follows ``shardings`` if given."""
+    with np.load(path) as z:
+        flat = {k: z[k] for k in z.files}
+
+    leaves_like, treedef = jax.tree.flatten(like)
+    flat_like = _flatten(like)
+    assert set(flat_like) == set(flat), (
+        f"checkpoint keys mismatch: {set(flat_like) ^ set(flat)}")
+
+    def build(template, prefix=""):
+        if isinstance(template, dict):
+            return {k: build(v, f"{prefix}{k}/") for k, v in template.items()}
+        if isinstance(template, (list, tuple)):
+            return type(template)(
+                build(v, f"{prefix}{i}/") for i, v in enumerate(template))
+        return flat[prefix[:-1]]
+
+    arrs = build(like)
+    if shardings is not None:
+        arrs = jax.tree.map(
+            lambda a, s: jax.device_put(a, s), arrs, shardings)
+    del leaves_like, treedef
+    return arrs
+
+
+def latest(path: str) -> Optional[str]:
+    if not os.path.isdir(path):
+        return None
+    cands = sorted(f for f in os.listdir(path)
+                   if f.startswith("step_") and f.endswith(".npz"))
+    return os.path.join(path, cands[-1]) if cands else None

@@ -1,0 +1,403 @@
+"""Tensor-arena planners (paper §II.D + §IV).
+
+Strategies:
+
+- ``naive``          — classic greedy heap in execution order (allocate at
+                       first use, free at last use, lowest-address-first).
+                       This is the "Original" column of Table III.
+- ``modified_heap``  — the paper's heuristic ordering: repeatedly allocate,
+                       out of the frontier of unallocated tensors whose scope
+                       overlaps an allocated one, the tensor that heap-packs
+                       lowest. Forwards or backwards.
+- ``dmo``            — modified heap, *backwards* (reverse execution order),
+                       with the diagonal overlap relaxation: an op's input may
+                       overlap the tail of the op's output by ``O_s`` bytes.
+
+All planners return a :class:`Plan` mapping storage tensors to byte offsets,
+with the peak arena size and a safety validator.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.graph import Graph, Op, Tensor
+from repro.core import overlap as overlap_mod
+
+OverlapFn = Callable[[Op, int], int]
+
+
+def _default_overlap(method: str = "auto", profile: str = "paper") -> OverlapFn:
+    return lambda op, idx: overlap_mod.safe_overlap(op, idx, method=method,
+                                                    profile=profile)
+
+
+@dataclasses.dataclass
+class Plan:
+    graph: Graph
+    order: List[Op]
+    offsets: Dict[Tensor, int]
+    overlaps: Dict[Tuple[int, int], int]  # (op index, input index) -> O_s bytes
+    strategy: str = ""
+
+    @property
+    def peak_bytes(self) -> int:
+        return max((off + t.nbytes for t, off in self.offsets.items()), default=0)
+
+    def offset_of(self, t: Tensor) -> int:
+        return self.offsets[t.storage()]
+
+    def validate(self) -> None:
+        """Assert no live value can be clobbered under the overlap rules."""
+        scopes = self.graph.scopes(self.order)
+        tensors = list(self.offsets)
+        for i, a in enumerate(tensors):
+            sa, ea = scopes[a]
+            xa, na = self.offsets[a], a.nbytes
+            for b in tensors[i + 1:]:
+                sb, eb = scopes[b]
+                if ea < sb or eb < sa:
+                    continue  # time-disjoint
+                xb, nb = self.offsets[b], b.nbytes
+                if xa + na <= xb or xb + nb <= xa:
+                    continue  # space-disjoint
+                os_ = self._allowed_overlap(a, b, scopes)
+                if os_ is None:
+                    raise AssertionError(
+                        f"plan clobbers: {a.name}@{xa} vs {b.name}@{xb}")
+                inp, outp = os_
+                xi, xo = self.offsets[inp], self.offsets[outp]
+                if xi < xo + outp.nbytes - os_bytes(self, inp, outp):
+                    raise AssertionError(
+                        f"overlap beyond O_s: {inp.name}@{xi} vs {outp.name}@{xo}")
+
+    def _allowed_overlap(self, a: Tensor, b: Tensor, scopes):
+        """If (a, b) are an (input, output) pair of some op with a recorded
+        O_s, return them ordered (input, output); else None."""
+        for (oi, ii), _ in self.overlaps.items():
+            op = self.order[oi]
+            inp = op.inputs[ii].storage()
+            outp = op.output.storage()
+            if {inp, outp} == {a, b}:
+                return inp, outp
+        return None
+
+    def report(self) -> str:
+        lines = [f"# plan {self.strategy}: peak {self.peak_bytes} bytes"]
+        scopes = self.graph.scopes(self.order)
+        for t in sorted(self.offsets, key=lambda t: self.offsets[t]):
+            s, e = scopes[t]
+            lines.append(
+                f"  {t.name:32s} off={self.offsets[t]:>10d} size={t.nbytes:>10d}"
+                f" scope=[{s},{e}]")
+        return "\n".join(lines)
+
+
+def os_bytes(plan: Plan, inp: Tensor, outp: Tensor) -> int:
+    for (oi, ii), v in plan.overlaps.items():
+        op = plan.order[oi]
+        if op.inputs[ii].storage() is inp and op.output.storage() is outp:
+            return v
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# Constraint machinery
+# ---------------------------------------------------------------------------
+
+
+def _compute_overlaps(order: List[Op], overlap_fn: Optional[OverlapFn],
+                      scopes) -> Dict[Tuple[int, int], int]:
+    """O_s for every (op, input) pair where the relaxation is legal: the input
+    is an intermediate whose *last* use is this op (paper §II.D)."""
+    if overlap_fn is None:
+        return {}
+    out: Dict[Tuple[int, int], int] = {}
+    for oi, op in enumerate(order):
+        if not op.outputs:
+            continue
+        if op.output.alias_of is not None:
+            # §II.C removal: this op writes into an aggregated view — its
+            # write offsets shift, so the overlap relaxation is dropped
+            # (the conservative O_s=0 route the paper describes)
+            continue
+        for ii, t in enumerate(op.inputs):
+            s = t.storage()
+            if s.kind == "weight" or s.kind == "output":
+                continue
+            if t.alias_of is not None:
+                continue
+            if scopes[s][1] != oi:  # value needed later: no overwrite allowed
+                continue
+            if s is op.output.storage():
+                continue
+            v = overlap_fn(op, ii)
+            if v > 0:
+                out[(oi, ii)] = v
+        # multiple overlappable inputs of one op would collide with each
+        # other inside the overlap region; keep only the largest O_s.
+        cand = [(k, v) for k, v in out.items() if k[0] == oi]
+        if len(cand) > 1:
+            cand.sort(key=lambda kv: -kv[1])
+            for k, _ in cand[1:]:
+                del out[k]
+    return out
+
+
+def _forbidden_intervals(t: Tensor, placed: Dict[Tensor, int], scopes,
+                         order: List[Op],
+                         overlaps: Dict[Tuple[int, int], int]) -> List[Tuple[int, int]]:
+    """Intervals of start offsets forbidden for tensor ``t``."""
+    # map (input storage, output storage) -> O_s for quick lookup
+    relax: Dict[Tuple[Tensor, Tensor], int] = {}
+    for (oi, ii), v in overlaps.items():
+        op = order[oi]
+        relax[(op.inputs[ii].storage(), op.output.storage())] = v
+    sa, ea = scopes[t]
+    out: List[Tuple[int, int]] = []
+    for b, xb in placed.items():
+        sb, eb = scopes[b]
+        if ea < sb or eb < sa:
+            continue
+        nb = b.nbytes
+        if (t, b) in relax:        # t is input overlapping output b's tail
+            hi = xb + nb - relax[(t, b)]
+        elif (b, t) in relax:      # t is the output; b the (placed) input:
+            # constraint: xb >= x_t + n_t - O_s  ->  x_t <= xb - n_t + O_s,
+            # i.e. forbidden to START in (xb - n_t + O_s, xb + nb) unless
+            # fully above b.  Lower edge of forbidden zone:
+            hi = xb + b.nbytes     # fully-above bound handled below
+            lo = xb - t.nbytes + relax[(b, t)]
+            if lo < hi:
+                out.append((lo + 1, xb + nb))
+            continue
+        else:
+            hi = xb + nb
+        lo = xb - t.nbytes
+        if lo < hi:
+            out.append((lo + 1, hi))  # forbidden start offsets [lo+1, hi)
+    return out
+
+
+def _lowest_feasible(t: Tensor, placed, scopes, order, overlaps) -> int:
+    iv = sorted(_forbidden_intervals(t, placed, scopes, order, overlaps))
+    x = 0
+    for lo, hi in iv:
+        if x < lo:
+            break
+        x = max(x, hi)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Strategies
+# ---------------------------------------------------------------------------
+
+
+def plan_naive(graph: Graph, order: Optional[Sequence[Op]] = None) -> Plan:
+    """Greedy heap in forward execution order, no overlap."""
+    order = list(order or graph.ops)
+    scopes = graph.scopes(order)
+    placed: Dict[Tensor, int] = {}
+    overlaps: Dict[Tuple[int, int], int] = {}
+    # allocate exactly when the executor would: model inputs up front, then
+    # each op's outputs at the moment the op runs (TFLite heap behaviour)
+    alloc_order: List[Tensor] = [t for t in scopes if t.kind == "input"]
+    for op in order:
+        for t in op.outputs:
+            s = t.storage()
+            if s in scopes and s not in alloc_order:
+                alloc_order.append(s)
+    for t in scopes:  # stragglers (defensive)
+        if t not in alloc_order:
+            alloc_order.append(t)
+    for t in alloc_order:
+        placed[t] = _lowest_feasible(t, placed, scopes, order, overlaps)
+    return Plan(graph, order, placed, overlaps, "naive")
+
+
+def plan_greedy_size(graph: Graph, order: Optional[Sequence[Op]] = None,
+                     overlap_fn: Optional[OverlapFn] = None) -> Plan:
+    """TFLite-Micro-style greedy pre-allocator: place buffers largest-first at
+    the lowest conflict-free offset, optionally with the DMO overlap
+    relaxation. Without overlap this is the strongest non-overlapping
+    baseline; with overlap it recovers the paper's diagonal cascades on the
+    sequential models (big consumer outputs are placed first, and every input
+    then tucks into its consumer's tail)."""
+    order = list(order or graph.ops)
+    scopes = graph.scopes(order)
+    overlaps = _compute_overlaps(order, overlap_fn, scopes)
+    placed: Dict[Tensor, int] = {}
+    for t in sorted(scopes, key=lambda t: (-t.nbytes, scopes[t][0])):
+        placed[t] = _lowest_feasible(t, placed, scopes, order, overlaps)
+    name = "greedy_size+dmo" if overlap_fn else "greedy_size"
+    return Plan(graph, order, placed, overlaps, name)
+
+
+def plan_reverse_heap(graph: Graph, order: Optional[Sequence[Op]] = None,
+                      overlap_fn: Optional[OverlapFn] = None) -> Plan:
+    """The paper's §II.D DMO allocator: heap allocation in *reverse execution
+    order* (each op's output, then its inputs), so that every input can be
+    placed overlapping the tail of its consumer's already-placed output.
+    Produces the diagonal cascade of Fig. 2b."""
+    order = list(order or graph.ops)
+    scopes = graph.scopes(order)
+    overlaps = _compute_overlaps(order, overlap_fn, scopes)
+    placed: Dict[Tensor, int] = {}
+    for op in reversed(order):
+        cands = [t.storage() for t in op.outputs]
+        cands += sorted((t.storage() for t in op.intermediate_inputs()),
+                        key=lambda s: -s.nbytes)
+        for s in cands:
+            if s.kind == "weight" or s in placed or s not in scopes:
+                continue
+            placed[s] = _lowest_feasible(s, placed, scopes, order, overlaps)
+    for s in scopes:  # unconsumed stragglers
+        if s not in placed:
+            placed[s] = _lowest_feasible(s, placed, scopes, order, overlaps)
+    name = "dmo_reverse" if overlap_fn else "reverse_heap"
+    return Plan(graph, order, placed, overlaps, name)
+
+
+def plan_modified_heap(graph: Graph, order: Optional[Sequence[Op]] = None,
+                       overlap_fn: Optional[OverlapFn] = None,
+                       direction: str = "backward") -> Plan:
+    """The paper's modified heap (§IV), optionally with DMO overlap."""
+    order = list(order or graph.ops)
+    scopes = graph.scopes(order)
+    overlaps = _compute_overlaps(order, overlap_fn, scopes)
+    todo = list(scopes.keys())
+    if not todo:
+        return Plan(graph, order, {}, overlaps, "modified_heap")
+    # seed: output buffer (backward) / input buffer (forward) at offset 0
+    key = (lambda t: scopes[t][1]) if direction == "backward" else (
+        lambda t: -scopes[t][0])
+    seed = max(todo, key=lambda t: (key(t), t.nbytes))
+    placed: Dict[Tensor, int] = {seed: 0}
+    todo.remove(seed)
+    while todo:
+        frontier = [
+            t for t in todo
+            if any(scopes[t][0] <= scopes[p][1] and scopes[p][0] <= scopes[t][1]
+                   for p in placed)
+        ] or todo
+        best, best_x = None, None
+        for t in frontier:
+            x = _lowest_feasible(t, placed, scopes, order, overlaps)
+            if best_x is None or x < best_x or (x == best_x and t.nbytes > best.nbytes):
+                best, best_x = t, x
+        placed[best] = best_x
+        todo.remove(best)
+    name = "dmo" if overlap_fn is not None else f"modified_heap_{direction}"
+    return Plan(graph, order, placed, overlaps, name)
+
+
+def plan_dmo(graph: Graph, order: Optional[Sequence[Op]] = None,
+             method: str = "auto", profile: str = "paper") -> Plan:
+    """Diagonal memory optimisation: the better of the strict reverse-order
+    heap (§II.D) and the modified-heap frontier heuristic (§IV), both with
+    the O_s overlap relaxation."""
+    fn = _default_overlap(method, profile)
+    plans = [
+        plan_greedy_size(graph, order, fn),
+        plan_reverse_heap(graph, order, fn),
+        plan_modified_heap(graph, order, fn, direction="backward"),
+    ]
+    return min(plans, key=lambda p: p.peak_bytes)
+
+
+def plan_search(graph: Graph, order: Optional[Sequence[Op]] = None,
+                method: str = "auto", budget_s: float = 10.0,
+                seed: int = 0, with_overlap: bool = True,
+                profile: str = "paper") -> Plan:
+    """Beyond-paper: iterated local search over the *insertion order* of the
+    lowest-feasible-offset allocator (with DMO overlap constraints).
+
+    The buffer-placement problem is NP-hard (paper §IV); greedy orders get
+    trapped when an overlap partner is placed before its constraint becomes
+    visible. ILS over insertion orders escapes those traps and recovers the
+    paper's optimal diagonal cascades (e.g. MobileNet v1's 33.3 %).
+    """
+    import random
+    import time as _time
+
+    order = list(order or graph.ops)
+    scopes = graph.scopes(order)
+    overlap_fn = (_default_overlap(method, profile)
+                  if with_overlap else None)
+    overlaps = _compute_overlaps(order, overlap_fn, scopes)
+    tensors = list(scopes)
+
+    def evaluate(insertion: List[Tensor]):
+        placed: Dict[Tensor, int] = {}
+        for t in insertion:
+            placed[t] = _lowest_feasible(t, placed, scopes, order, overlaps)
+        peak = max((x + t.nbytes for t, x in placed.items()), default=0)
+        return peak, placed
+
+    seeds = [
+        sorted(tensors, key=lambda t: (-t.nbytes, scopes[t][0])),
+        sorted(tensors, key=lambda t: (-t.nbytes, -scopes[t][1])),
+        sorted(tensors, key=lambda t: (-scopes[t][1], -t.nbytes)),
+        sorted(tensors, key=lambda t: (scopes[t][0], -t.nbytes)),
+    ]
+    best_peak, best_placed, best_ins = None, None, None
+    for ins in seeds:
+        p, placed = evaluate(ins)
+        if best_peak is None or p < best_peak:
+            best_peak, best_placed, best_ins = p, placed, list(ins)
+
+    rng = random.Random(seed)
+    cur = list(best_ins)
+    cur_peak = best_peak
+    t0 = _time.time()
+    n = len(tensors)
+    while _time.time() - t0 < budget_s and n > 2:
+        nxt = list(cur)
+        for _ in range(rng.randint(1, 3)):
+            i, j = rng.randrange(n), rng.randrange(n)
+            if rng.random() < 0.5:
+                nxt[i], nxt[j] = nxt[j], nxt[i]
+            else:
+                nxt.insert(j, nxt.pop(i))
+        p, placed = evaluate(nxt)
+        if p <= cur_peak:
+            cur, cur_peak = nxt, p
+            if p < best_peak:
+                best_peak, best_placed, best_ins = p, placed, list(nxt)
+        elif rng.random() < 0.02:  # occasional uphill restart from best
+            cur, cur_peak = list(best_ins), best_peak
+    return Plan(graph, order, best_placed, overlaps,
+                "search+dmo" if with_overlap else "search")
+
+
+def plan_original(graph: Graph, order: Optional[Sequence[Op]] = None) -> Plan:
+    """Best non-overlapping baseline (the paper's "Original" column): min of
+    the first-fit heap, greedy-by-size, and both modified-heap directions."""
+    plans = [
+        plan_naive(graph, order),
+        plan_greedy_size(graph, order),
+        plan_modified_heap(graph, order, None, "forward"),
+        plan_modified_heap(graph, order, None, "backward"),
+    ]
+    return min(plans, key=lambda p: p.peak_bytes)
+
+
+def best_plan(graph: Graph, orders: Optional[Sequence[Sequence[Op]]] = None,
+              strategy: str = "dmo", method: str = "auto") -> Plan:
+    """Best (lowest-peak) plan over candidate serialisation orders, as the
+    paper does with eager & lazy orders."""
+    from repro.core.serialise import candidate_orders
+
+    orders = orders or candidate_orders(graph)
+    plans = []
+    for o in orders:
+        if strategy == "dmo":
+            plans.append(plan_dmo(graph, o, method))
+        elif strategy == "naive":
+            plans.append(plan_naive(graph, o))
+        elif strategy == "modified_heap":
+            plans.append(plan_modified_heap(graph, o))
+        else:
+            raise ValueError(strategy)
+    return min(plans, key=lambda p: p.peak_bytes)

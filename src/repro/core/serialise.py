@@ -1,0 +1,141 @@
+"""Graph serialisation (paper §II.B).
+
+Connected graphs (Inception, DenseNet, NasNet, ...) admit many valid
+execution orders; the order changes which tensors are live simultaneously and
+therefore the peak arena size. Finding the optimal order is NP-hard; the
+paper evaluates an *eager* and a *lazy* heuristic order per model and keeps
+the better plan. Both are implemented here, plus a memory-greedy order
+(beyond-paper: pick the ready op that minimises live bytes after execution).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Set
+
+from repro.core.graph import Graph, Op, Tensor
+
+
+def _deps(graph: Graph) -> Dict[Op, Set[Op]]:
+    producer: Dict[Tensor, Op] = {}
+    for op in graph.ops:
+        for t in op.outputs:
+            producer[t.storage()] = op
+    deps: Dict[Op, Set[Op]] = {}
+    for op in graph.ops:
+        deps[op] = {
+            producer[t.storage()]
+            for t in op.inputs
+            if t.storage() in producer
+        }
+    return deps
+
+
+def eager_order(graph: Graph) -> List[Op]:
+    """FIFO topological order: run each op as soon as its inputs exist
+    (breadth-first, construction order as tie-break)."""
+    deps = _deps(graph)
+    done: Set[Op] = set()
+    order: List[Op] = []
+    pending = list(graph.ops)
+    while pending:
+        for op in pending:
+            if deps[op] <= done:
+                order.append(op)
+                done.add(op)
+                pending.remove(op)
+                break
+        else:  # pragma: no cover - cyclic graph
+            raise ValueError("graph has a cycle")
+    return order
+
+
+def lazy_order(graph: Graph) -> List[Op]:
+    """Depth-first from the model outputs: each value is computed as late as
+    its deepest consumer chain requires (post-order DFS)."""
+    deps = _deps(graph)
+    consumers: Dict[Op, int] = {op: 0 for op in graph.ops}
+    for op in graph.ops:
+        for d in deps[op]:
+            consumers[d] += 1
+    roots = [op for op in graph.ops if consumers[op] == 0]
+    order: List[Op] = []
+    seen: Set[Op] = set()
+
+    def visit(op: Op) -> None:
+        if op in seen:
+            return
+        seen.add(op)
+        for d in sorted(deps[op], key=graph.ops.index):
+            visit(d)
+        order.append(op)
+
+    for r in roots:
+        visit(r)
+    return order
+
+
+def memory_greedy_order(graph: Graph) -> List[Op]:
+    """Beyond-paper heuristic: among ready ops, run the one minimising the
+    total bytes live after it executes (ties: construction order)."""
+    deps = _deps(graph)
+    remaining_uses: Dict[Tensor, int] = {}
+    for op in graph.ops:
+        for t in op.inputs:
+            s = t.storage()
+            if s.kind != "weight":
+                remaining_uses[s] = remaining_uses.get(s, 0) + 1
+    live: Set[Tensor] = {
+        t.storage() for t in graph.tensors if t.kind == "input"
+    }
+    done: Set[Op] = set()
+    order: List[Op] = []
+    pending = list(graph.ops)
+    while pending:
+        ready = [op for op in pending if deps[op] <= done]
+        if not ready:  # pragma: no cover
+            raise ValueError("graph has a cycle")
+
+        def after_bytes(op: Op) -> int:
+            uses = dict(remaining_uses)
+            nxt = set(live)
+            for t in op.outputs:
+                s = t.storage()
+                if s.kind != "weight":
+                    nxt.add(s)
+            for t in op.inputs:
+                s = t.storage()
+                if s in uses:
+                    uses[s] -= 1
+                    if uses[s] == 0 and s.kind not in ("input", "output"):
+                        nxt.discard(s)
+            return sum(t.nbytes for t in nxt)
+
+        best = min(ready, key=lambda op: (after_bytes(op), pending.index(op)))
+        order.append(best)
+        done.add(best)
+        pending.remove(best)
+        for t in best.outputs:
+            s = t.storage()
+            if s.kind != "weight":
+                live.add(s)
+        for t in best.inputs:
+            s = t.storage()
+            if s in remaining_uses:
+                remaining_uses[s] -= 1
+                if remaining_uses[s] == 0 and s.kind not in ("input", "output"):
+                    live.discard(s)
+    return order
+
+
+def candidate_orders(graph: Graph) -> List[List[Op]]:
+    """The paper's eager & lazy orders (+ the memory-greedy extension)."""
+    orders = [eager_order(graph), lazy_order(graph)]
+    try:
+        orders.append(memory_greedy_order(graph))
+    except Exception:  # pragma: no cover - defensive
+        pass
+    # dedupe
+    uniq: List[List[Op]] = []
+    for o in orders:
+        if o not in uniq:
+            uniq.append(o)
+    return uniq

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dwconv2d(x: jax.Array, w: jax.Array, stride: int = 1,
+             pad: int = 0) -> jax.Array:
+    """x: (IH, IW, C); w: (KH, KW, C) -> (OH, OW, C)."""
+    ih, iw, c = x.shape
+    kh, kw, _ = w.shape
+    oh = (ih + 2 * pad - kh) // stride + 1
+    ow = (iw + 2 * pad - kw) // stride + 1
+    xp = jnp.pad(x, ((pad, pad), (pad, pad), (0, 0)))
+    out = jnp.zeros((oh, ow, c), jnp.float32)
+    for fy in range(kh):
+        for fx in range(kw):
+            sl = xp[fy:fy + oh * stride:stride, fx:fx + ow * stride:stride]
+            out = out + sl.astype(jnp.float32) * w[fy, fx][None, None, :]
+    return out.astype(x.dtype)
+
+
+def rmsnorm_scale_residual(x: jax.Array, g: jax.Array, r: jax.Array,
+                           eps: float = 1e-6) -> jax.Array:
+    """out = r + rmsnorm(x) * g (rows along leading dims)."""
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (r.astype(jnp.float32) + y * g.astype(jnp.float32)).astype(x.dtype)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array,
+              causal: bool = True) -> jax.Array:
+    """q,k,v: (S, H, D) / (T, H, D) single batch; full softmax oracle."""
+    s, h, d = q.shape
+    t = k.shape[0]
+    sc = jnp.einsum("shd,thd->hst", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) / jnp.sqrt(d)
+    if causal:
+        mask = jnp.arange(t)[None, :] <= jnp.arange(s)[:, None] + (t - s)
+        sc = jnp.where(mask[None], sc, -1e30)
+    w = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("hst,thd->shd", w,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,209 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) on the production
+meshes and extract memory / cost / collective statistics.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both
+
+This is the ONLY entry point that forces 512 host devices; smoke tests and
+benchmarks see the real single CPU device.
+"""
+import argparse
+import functools
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import roofline as RL
+from repro import sharding as SH
+from repro.configs import arch_names, get_arch, get_shape
+from repro.launch import mesh as M
+from repro.launch import specs as SP
+from repro.models import transformer as T
+from repro.models.config import SHAPES, ArchConfig, ShapeConfig
+from repro.optim.adamw import OptConfig
+from repro.train import steps as TS
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "experiments", "dryrun")
+
+
+def _lower_train(cfg: ArchConfig, shape: ShapeConfig, mesh, ba):
+    # pure data parallel for small models (params replicated, batch over
+    # data AND model axes) — see specs.parallel_policy / §Perf hillclimb 3
+    policy = SP.parallel_policy(cfg, mesh)
+    if policy == "dp":
+        ext = (*ba, "model")
+        n = 1
+        for a in ext:
+            n *= mesh.shape[a]
+        if shape.global_batch % n == 0:  # else keep batch on (pod,)data only
+            ba = ext
+    specs = SP.input_specs(cfg, shape)
+    st_sh = SP.state_shardings(cfg, mesh, policy=policy)
+    b_sh = SP.batch_shardings(cfg, shape, mesh, batch_ax=ba)
+    data_shards = 1
+    for a in ba:
+        data_shards *= mesh.shape[a]
+    micro = TS.default_microbatches(cfg, shape.global_batch, shape.seq_len,
+                                    data_shards)
+    fn = functools.partial(TS.train_step, cfg, TS.opt_config_for(cfg),
+                           remat=True, microbatches=micro,
+                           accum_dtype=TS.accum_dtype_for(cfg))
+    jitted = jax.jit(fn, donate_argnums=(0,),
+                     in_shardings=(st_sh, b_sh),
+                     out_shardings=(st_sh, None))
+    return (jitted.lower(specs["state"], specs["batch"]),
+            {"microbatches": micro, "policy": policy})
+
+
+def _lower_prefill(cfg: ArchConfig, shape: ShapeConfig, mesh, ba):
+    specs = SP.input_specs(cfg, shape)
+    p_sh = SP.param_shardings(cfg, mesh)
+    cache_sh = SP.cache_shardings(cfg, shape, mesh)
+    from jax.sharding import NamedSharding
+    ax = ba if len(ba) > 1 else ba[0]
+    tok_dims = [ax] + [None] * (len(specs["inputs"].shape) - 1)
+    tok_sh = NamedSharding(mesh, SP._fit(mesh, specs["inputs"].shape, tok_dims))
+    fn = functools.partial(T.prefill, cfg, cache_len=shape.seq_len)
+    jitted = jax.jit(fn, in_shardings=(p_sh, tok_sh),
+                     out_shardings=(None, cache_sh))
+    return jitted.lower(specs["params"], specs["inputs"]), {}
+
+
+def _lower_decode(cfg: ArchConfig, shape: ShapeConfig, mesh, ba):
+    specs = SP.input_specs(cfg, shape)
+    p_sh = SP.param_shardings(cfg, mesh)
+    c_sh = SP.cache_shardings(cfg, shape, mesh)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    ax = ba if len(ba) > 1 else ba[0]
+    tok_sh = NamedSharding(mesh, SP._fit(mesh, specs["tokens"].shape,
+                                         [ax, None]))
+    pos_sh = NamedSharding(mesh, P())
+    window = SP.decode_window(cfg, shape)
+
+    def fn(params, cache, tokens, pos):
+        return T.decode_step(cfg, params, cache, tokens, pos, window=window)
+
+    jitted = jax.jit(fn, donate_argnums=(1,),
+                     in_shardings=(p_sh, c_sh, tok_sh, pos_sh),
+                     out_shardings=(None, c_sh))
+    return jitted.lower(specs["params"], specs["cache"], specs["tokens"],
+                        specs["pos"]), {"window": window,
+                                        "cache_len": SP.cache_len_for(cfg, shape)}
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            compile_: bool = True) -> Dict[str, Any]:
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    mesh = M.make_production_mesh(multi_pod=multi_pod)
+    ba = M.batch_axes(mesh)
+    chips = 1
+    for a in mesh.axis_names:
+        chips *= mesh.shape[a]
+    t0 = time.time()
+    env_ba = ba
+    if shape.kind == "train" and SP.parallel_policy(cfg, mesh) == "dp":
+        ext = (*ba, "model")
+        n = 1
+        for a in ext:
+            n *= mesh.shape[a]
+        if shape.global_batch % n == 0:
+            env_ba = ext
+    with mesh, SH.axis_env(mesh, batch=env_ba):
+        if shape.kind == "train":
+            lowered, extra = _lower_train(cfg, shape, mesh, ba)
+        elif shape.kind == "prefill":
+            lowered, extra = _lower_prefill(cfg, shape, mesh, ba)
+        else:
+            lowered, extra = _lower_decode(cfg, shape, mesh, ba)
+        t_lower = time.time() - t0
+        rec: Dict[str, Any] = {
+            "arch": arch, "shape": shape_name,
+            "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+            "chips": chips, "lower_s": round(t_lower, 1), **extra,
+        }
+        if compile_:
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 1)
+            rl = RL.analyse(f"{arch}/{shape_name}/{rec['mesh']}", compiled,
+                            None, RL.model_flops_for(cfg, shape), chips)
+            ma = compiled.memory_analysis()
+            rec.update({
+                "hlo_flops": rl.hlo_flops,
+                "hlo_bytes": rl.hlo_bytes,
+                "collective_bytes": rl.coll_bytes,
+                "collectives": rl.coll_breakdown,
+                "t_compute_s": rl.t_compute,
+                "t_memory_s": rl.t_memory,
+                "t_collective_s": rl.t_collective,
+                "bottleneck": rl.bottleneck,
+                "model_flops": rl.model_flops,
+                "useful_flops_ratio": rl.useful_flops_ratio,
+                "per_device_bytes": {
+                    "arguments": ma.argument_size_in_bytes,
+                    "outputs": ma.output_size_in_bytes,
+                    "temps": ma.temp_size_in_bytes,
+                    "code": ma.generated_code_size_in_bytes,
+                },
+            })
+            print(rl.row(), flush=True)
+            print(f"  per-device: args={ma.argument_size_in_bytes / 2**30:.2f}"
+                  f"GiB out={ma.output_size_in_bytes / 2**30:.2f}GiB "
+                  f"temps={ma.temp_size_in_bytes / 2**30:.2f}GiB "
+                  f"(HBM 16GiB)", flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["off", "on", "both"], default="off")
+    ap.add_argument("--no-compile", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun_results.jsonl")
+    args = ap.parse_args()
+
+    pairs = []
+    archs = arch_names() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    pods = {"off": [False], "on": [True], "both": [False, True]}[args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in pods:
+                pairs.append((a, s, mp))
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    ok = fail = 0
+    with open(args.out, "a") as f:
+        for a, s, mp in pairs:
+            tag = f"{a} × {s} × {'2x16x16' if mp else '16x16'}"
+            print(f"=== dry-run {tag}", flush=True)
+            try:
+                rec = run_one(a, s, mp, compile_=not args.no_compile)
+                rec["ok"] = True
+                ok += 1
+            except Exception as e:  # record failures: they are bugs
+                traceback.print_exc()
+                rec = {"arch": a, "shape": s, "multi_pod": mp, "ok": False,
+                       "error": f"{type(e).__name__}: {e}"}
+                fail += 1
+            f.write(json.dumps(rec) + "\n")
+            f.flush()
+    print(f"dry-run complete: {ok} ok, {fail} failed")
+    if fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

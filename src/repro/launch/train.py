@@ -1,0 +1,82 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b --reduced \\
+        --steps 200 --batch 8 --seq 256
+
+Reduced configs train for real on the host CPU; full configs require the
+production mesh (use launch/dryrun.py to validate those without hardware).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import store
+from repro.configs import get_arch
+from repro.data.pipeline import DataConfig, SyntheticCorpus, embedding_batches
+from repro.launch.mesh import make_host_mesh
+from repro.optim.adamw import OptConfig
+from repro.train import steps as TS
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the 2-layer smoke variant (CPU-feasible)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+        cfg = dataclasses.replace(cfg, name=cfg.name.replace("-smoke", ""))
+    opt = OptConfig(lr=args.lr, warmup_steps=max(10, args.steps // 20),
+                    total_steps=args.steps)
+
+    dc = DataConfig(cfg.vocab_size, args.seq, args.batch, seed=args.seed)
+    if cfg.frontend != "none":
+        batches = embedding_batches(dc, cfg.d_model, seed=args.seed)
+    else:
+        batches = SyntheticCorpus(dc).packed_batches()
+
+    state = TS.init_state(cfg, jax.random.PRNGKey(args.seed), opt)
+    n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(state["params"]))
+    print(f"arch={cfg.name} params={n_params:,} steps={args.steps} "
+          f"batch={args.batch}x{args.seq}")
+
+    step_fn = jax.jit(
+        lambda st, b: TS.train_step(cfg, opt, st, b, remat=False,
+                                    microbatches=args.microbatches),
+        donate_argnums=(0,))
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(batches).items()}
+        state, m = step_fn(state, batch)
+        if i % args.log_every == 0 or i == args.steps - 1:
+            dt = time.time() - t0
+            tok_s = (i + 1) * args.batch * args.seq / max(dt, 1e-9)
+            print(f"step {i:5d} loss={float(m['loss']):8.4f} "
+                  f"ce={float(m['ce']):8.4f} gnorm={float(m['grad_norm']):7.3f} "
+                  f"lr={float(m['lr']):.2e} tok/s={tok_s:,.0f}", flush=True)
+        if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
+            p = store.save(args.ckpt_dir, state, step=i + 1)
+            print(f"checkpoint -> {p}", flush=True)
+    print(f"done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,394 @@
+"""Transformer building blocks: norms, RoPE, GQA/MLA attention, MLPs.
+
+Pure functions over parameter dicts (pytrees). All attention math keeps a
+float32 softmax; parameters live in ``cfg.dtype``.
+
+Cache convention: decode caches are ring buffers of length ``cache_len``
+(= full seq for decode_32k, = sliding window for long_500k); ``pos`` is the
+number of tokens already consumed (scalar int32).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+
+Params = Dict[str, jax.Array]
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float = 0.02,
+               bias: bool = False) -> Params:
+    p = {"w": jax.random.normal(key, (d_in, d_out), dtype) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rms_norm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                      # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Masked multi-head attention core
+# ---------------------------------------------------------------------------
+
+
+#: sequences longer than this use the blockwise online-softmax path
+FLASH_THRESHOLD = 2048
+FLASH_BLOCK = 1024
+
+
+def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array,
+          mask: Optional[jax.Array]) -> jax.Array:
+    """q: (B,S,H,D); k/v: (B,T,KV,D) with H % KV == 0; mask (B,1,S,T) bool."""
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qf = q.reshape(b, s, kv, g, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qf, kf) / jnp.sqrt(d)
+    if mask is not None:
+        scores = jnp.where(mask[:, None, ...], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v.astype(jnp.float32))
+    return out.reshape(b, s, h, d).astype(q.dtype)
+
+
+def _sdpa_blockwise(q: jax.Array, k: jax.Array, v: jax.Array,
+                    offset: int, window: int,
+                    block: int = FLASH_BLOCK) -> jax.Array:
+    """Causal attention with online softmax over KV blocks (flash-style):
+    never materialises the (S,T) score matrix. q:(B,S,H,D), k/v:(B,T,KV,D)."""
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    kvh = k.shape[2]
+    g = h // kvh
+    nb = -(-t // block)
+    tp = nb * block
+    if tp != t:
+        k = jnp.pad(k, ((0, 0), (0, tp - t), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, tp - t), (0, 0), (0, 0)))
+    qf = q.reshape(b, s, kvh, g, d).astype(jnp.float32) / jnp.sqrt(d)
+    kb = k.reshape(b, nb, block, kvh, d)
+    vb = v.reshape(b, nb, block, kvh, d)
+    qpos = offset + jnp.arange(s)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kblk, vblk, bi = xs
+        kpos = bi * block + jnp.arange(block)
+        sc = jnp.einsum("bskgd,btkd->bkgst", qf, kblk.astype(jnp.float32))
+        msk = (kpos[None, :] <= qpos[:, None]) & (kpos[None, :] < t)
+        if window:
+            msk &= kpos[None, :] > qpos[:, None] - window
+        sc = jnp.where(msk[None, None, None], sc, -jnp.inf)
+        m_new = jnp.maximum(m, sc.max(-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(sc - m_safe[..., None])
+        p = jnp.where(jnp.isfinite(sc), p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l = l * corr + p.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", p, vblk.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, kvh, g, s), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, s), jnp.float32)
+    a0 = jnp.zeros((b, kvh, g, s, d), jnp.float32)
+    kb_t = jnp.moveaxis(kb, 1, 0)
+    vb_t = jnp.moveaxis(vb, 1, 0)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (kb_t, vb_t, jnp.arange(nb)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = jnp.moveaxis(out, 3, 1).reshape(b, s, h, d)
+    return out.astype(q.dtype)
+
+
+def causal_mask(s: int, t: int, offset: int, window: int = 0) -> jax.Array:
+    """(1,1,S,T) bool: query i (global pos offset+i) may see key j<=pos,
+    optionally within a trailing window."""
+    qpos = offset + jnp.arange(s)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    m = kpos <= qpos
+    if window:
+        m &= kpos > qpos - window
+    return m[None, None]
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (optional sliding window; optional QKV bias)
+# ---------------------------------------------------------------------------
+
+
+def attn_init(cfg: ArchConfig, key) -> Params:
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.q_dim, dt, bias=cfg.qkv_bias),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.kv_dim, dt, bias=cfg.qkv_bias),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.kv_dim, dt, bias=cfg.qkv_bias),
+        "wo": dense_init(ks[3], cfg.q_dim, cfg.d_model, dt),
+    }
+
+
+def _qkv(p: Params, x: jax.Array, cfg: ArchConfig, positions) -> Tuple:
+    b, s, _ = x.shape
+    q = linear(p["wq"], x).reshape(b, s, cfg.num_heads, cfg.head_dim)
+    k = linear(p["wk"], x).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    v = linear(p["wv"], x).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_forward(p: Params, x: jax.Array, cfg: ArchConfig,
+                 window: int = 0) -> Tuple[jax.Array, Params]:
+    """Training / prefill: full causal attention over x. Returns output and
+    the KV cache {k, v} (B,S,KV,D). Long sequences take the blockwise
+    online-softmax path (never materialising the S×S score matrix)."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = _qkv(p, x, cfg, positions)
+    if s > FLASH_THRESHOLD:
+        y = _sdpa_blockwise(q, k, v, offset=0, window=window)
+    else:
+        y = _sdpa(q, k, v, causal_mask(s, s, 0, window))
+    y = linear(p["wo"], y.reshape(b, s, cfg.q_dim))
+    return y, {"k": k, "v": v}
+
+
+def _quantize_kv(t: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """t: (B,1,KV,D) -> int8 values + per-(B,1,KV) scale."""
+    scale = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def attn_decode(p: Params, x: jax.Array, cache: Params, pos: jax.Array,
+                cfg: ArchConfig, window: int = 0) -> Tuple[jax.Array, Params]:
+    """One-token decode. cache: {k,v} (B,C,KV,D) ring buffer; pos = tokens
+    already in cache — a scalar, or a (B,) vector for ragged batches
+    (continuous-batching serving). When the cache is int8 (cfg.kv_quant)
+    values carry per-(slot, kv-head) scales and are dequantised on read —
+    halving decode's dominant HBM term. Returns output (B,1,d), new cache."""
+    b = x.shape[0]
+    cache_len = cache["k"].shape[1]
+    posv = jnp.broadcast_to(jnp.asarray(pos), (b,))
+    slot = posv % cache_len                                   # (B,)
+    q, k, v = _qkv(p, x, cfg, posv[:, None])
+    bi = jnp.arange(b)
+    quant = cache["k"].dtype == jnp.int8
+    if quant:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        cache = dict(cache)
+        cache["k_scale"] = cache["k_scale"].at[bi, slot].set(ks[:, 0])
+        cache["v_scale"] = cache["v_scale"].at[bi, slot].set(vs[:, 0])
+        k, v = kq, vq
+    ck = cache["k"].at[bi, slot].set(k[:, 0])
+    cv = cache["v"].at[bi, slot].set(v[:, 0])
+    if quant:
+        new_cache = {"k": ck, "v": cv, "k_scale": cache["k_scale"],
+                     "v_scale": cache["v_scale"]}
+        ck = ck.astype(jnp.float32) * cache["k_scale"][..., None]
+        cv = cv.astype(jnp.float32) * cache["v_scale"][..., None]
+    # validity: ring slots holding tokens (pos-window, pos], per request
+    idx = jnp.arange(cache_len)
+    age = (slot[:, None] - idx[None, :]) % cache_len          # (B,C), 0=newest
+    valid = age < jnp.minimum(posv + 1, cache_len)[:, None]
+    if window:
+        valid &= age < window
+    mask = valid[:, None, None, :]
+    y = _sdpa(q, ck, cv, jnp.broadcast_to(mask, (b, 1, 1, cache_len)))
+    y = linear(p["wo"], y.reshape(b, 1, cfg.q_dim))
+    return y, (new_cache if quant else {"k": ck, "v": cv})
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (MiniCPM3 / DeepSeek-style latent KV compression)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(cfg: ArchConfig, key) -> Params:
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 7)
+    h, dn, dr, dv = (cfg.num_heads, cfg.head_dim, cfg.rope_head_dim,
+                     cfg.v_head_dim or cfg.head_dim)
+    return {
+        "wq_a": dense_init(ks[0], cfg.d_model, cfg.q_lora_rank, dt),
+        "q_norm": rms_norm_init(cfg.q_lora_rank, dt),
+        "wq_b": dense_init(ks[1], cfg.q_lora_rank, h * (dn + dr), dt),
+        "wkv_a": dense_init(ks[2], cfg.d_model, cfg.kv_lora_rank + dr, dt),
+        "kv_norm": rms_norm_init(cfg.kv_lora_rank, dt),
+        "wk_b": dense_init(ks[3], cfg.kv_lora_rank, h * dn, dt),
+        "wv_b": dense_init(ks[4], cfg.kv_lora_rank, h * dv, dt),
+        "wo": dense_init(ks[5], h * dv, cfg.d_model, dt),
+    }
+
+
+def _mla_q(p: Params, x: jax.Array, cfg: ArchConfig, positions):
+    b, s, _ = x.shape
+    h, dn, dr = cfg.num_heads, cfg.head_dim, cfg.rope_head_dim
+    q = linear(p["wq_b"], rms_norm(p["q_norm"], linear(p["wq_a"], x)))
+    q = q.reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(p: Params, x: jax.Array, cfg: ArchConfig, positions):
+    dr = cfg.rope_head_dim
+    kv = linear(p["wkv_a"], x)
+    c_kv = rms_norm(p["kv_norm"], kv[..., :cfg.kv_lora_rank])
+    k_rope = apply_rope(kv[..., None, cfg.kv_lora_rank:], positions,
+                        cfg.rope_theta)[..., 0, :]
+    del dr
+    return c_kv, k_rope
+
+
+def mla_forward(p: Params, x: jax.Array, cfg: ArchConfig,
+                window: int = 0) -> Tuple[jax.Array, Params]:
+    b, s, _ = x.shape
+    h, dn, dv = cfg.num_heads, cfg.head_dim, cfg.v_head_dim or cfg.head_dim
+    positions = jnp.arange(s)[None, :]
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+    c_kv, k_rope = _mla_latent(p, x, cfg, positions)
+    k_nope = linear(p["wk_b"], c_kv).reshape(b, s, h, dn)
+    v = linear(p["wv_b"], c_kv).reshape(b, s, h, dv)
+    # fold the shared rope sub-dim into per-head keys so both score terms run
+    # through one (possibly blockwise) SDPA
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None],
+                                  (b, s, h, cfg.rope_head_dim))], axis=-1)
+    if dv < dn + cfg.rope_head_dim:
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, 0),
+                        (0, dn + cfg.rope_head_dim - dv)))
+    if s > FLASH_THRESHOLD:
+        y = _sdpa_blockwise(q_full, k_full, v, offset=0, window=window)
+    else:
+        y = _sdpa(q_full, k_full, v, causal_mask(s, s, 0, window))
+    y = y[..., :dv]
+    y = linear(p["wo"], y.reshape(b, s, h * dv))
+    return y, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def mla_decode(p: Params, x: jax.Array, cache: Params, pos: jax.Array,
+               cfg: ArchConfig, window: int = 0) -> Tuple[jax.Array, Params]:
+    """Absorbed-form MLA decode: attention runs in the compressed latent
+    space (the cache stores c_kv + k_rope only — the technique's memory win)."""
+    b = x.shape[0]
+    h, dn, dv = cfg.num_heads, cfg.head_dim, cfg.v_head_dim or cfg.head_dim
+    r = cfg.kv_lora_rank
+    cache_len = cache["c_kv"].shape[1]
+    posv = jnp.broadcast_to(jnp.asarray(pos), (b,))
+    slot = posv % cache_len
+    positions = posv[:, None]
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+    c_kv, k_rope = _mla_latent(p, x, cfg, positions)
+    bi = jnp.arange(b)
+    cc = cache["c_kv"].at[bi, slot].set(c_kv[:, 0])
+    cr = cache["k_rope"].at[bi, slot].set(k_rope[:, 0])
+    # absorb W_uk into q: (B,1,H,dn) @ (r,H,dn) -> (B,H,r)
+    wk_b = p["wk_b"]["w"].reshape(r, h, dn)
+    q_lat = jnp.einsum("bshd,rhd->bhr", q_nope.astype(jnp.float32),
+                       wk_b.astype(jnp.float32))
+    scores = (jnp.einsum("bhr,btr->bht", q_lat,
+                         cc.astype(jnp.float32))
+              + jnp.einsum("bshd,btd->bht", q_rope.astype(jnp.float32),
+                           cr.astype(jnp.float32)))
+    scores = scores / jnp.sqrt(dn + cfg.rope_head_dim)
+    idx = jnp.arange(cache_len)
+    age = (slot[:, None] - idx[None, :]) % cache_len
+    valid = age < jnp.minimum(posv + 1, cache_len)[:, None]
+    if window:
+        valid &= age < window
+    scores = jnp.where(valid[:, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    lat = jnp.einsum("bht,btr->bhr", w, cc.astype(jnp.float32))
+    wv_b = p["wv_b"]["w"].reshape(r, h, dv)
+    y = jnp.einsum("bhr,rhd->bhd", lat, wv_b.astype(jnp.float32))
+    y = y.reshape(b, 1, h * dv).astype(x.dtype)
+    return linear(p["wo"], y), {"c_kv": cc, "k_rope": cr}
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(cfg: ArchConfig, key, d_ff: Optional[int] = None) -> Params:
+    dt = _dtype(cfg)
+    ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(ks[0], cfg.d_model, ff, dt),
+        "w_down": dense_init(ks[1], ff, cfg.d_model, dt),
+    }
+    if cfg.activation == "silu":  # gated (SwiGLU)
+        p["w_gate"] = dense_init(ks[2], cfg.d_model, ff, dt)
+    return p
+
+
+def mlp(p: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    up = linear(p["w_up"], x)
+    if cfg.activation == "silu":
+        h = jax.nn.silu(linear(p["w_gate"], x)) * up
+    elif cfg.activation == "sq_relu":
+        r = jax.nn.relu(up)
+        h = r * r
+    elif cfg.activation == "gelu":
+        h = jax.nn.gelu(up)
+    else:
+        raise ValueError(cfg.activation)
+    return linear(p["w_down"], h)

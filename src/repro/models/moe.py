@@ -1,0 +1,196 @@
+"""Mixture-of-Experts layer: top-k router + capacity-based dispatch.
+
+Dispatch strategy (GShard/Switch-style, FLOPs-honest): each token copy is
+assigned a slot in its expert's capacity buffer via a cumulative-sum
+position; copies beyond capacity are dropped (capacity factor 1.25 by
+default, so drops are rare at balanced load). Expert FFNs are computed as a
+single 3-way einsum over the (E, C, d) buffer, so the expert dimension
+shards cleanly over the ``model`` mesh axis (expert parallelism) and the
+compiled FLOPs are ≈ capacity_factor × the active-parameter FLOPs.
+
+Router auxiliary load-balancing loss follows Switch Transformer (importance
+× load), returned alongside the output for the training loss.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import dense_init
+
+Params = Dict[str, jax.Array]
+
+
+def moe_init(cfg: ArchConfig, key) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.moe_d_ff
+    ks = jax.random.split(key, 4)
+    s = 0.02
+    return {
+        "router": dense_init(ks[0], d, e, jnp.float32),
+        "w_gate": jax.random.normal(ks[1], (e, d, f), dt) * s,
+        "w_up": jax.random.normal(ks[2], (e, d, f), dt) * s,
+        "w_down": jax.random.normal(ks[3], (e, f, d), dt) * s,
+    }
+
+
+def _capacity(tokens: int, cfg: ArchConfig) -> int:
+    c = int(tokens * cfg.experts_per_token * cfg.capacity_factor
+            / cfg.num_experts)
+    return max(cfg.experts_per_token, c)
+
+
+def moe_ffn(p: Params, x: jax.Array, cfg: ArchConfig
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B,S,d) -> (B,S,d), aux load-balance loss (scalar f32).
+
+    Under an installed mesh AxisEnv this takes the expert-parallel
+    ``shard_map`` path (GShard groups = data shards, experts local to model
+    shards — no cross-shard scatter); without a mesh it runs the plain
+    single-device dispatch below."""
+    from repro.sharding import current_env
+    env = current_env()
+    if env is not None:
+        return _moe_ffn_shardmap(p, x, cfg, env)
+    return _moe_ffn_local(p, x, cfg)
+
+
+def _moe_ffn_local(p: Params, x: jax.Array, cfg: ArchConfig
+                   ) -> Tuple[jax.Array, jax.Array]:
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    t = b * s
+    xf = x.reshape(t, d)
+
+    logits = (xf @ p["router"]["w"].astype(xf.dtype)).astype(jnp.float32)  # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_i = jax.lax.top_k(probs, k)                        # (T,k)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # Switch aux loss: E * mean(importance) . mean(load)
+    importance = probs.mean(0)                                      # (E,)
+    load = jnp.zeros((e,), jnp.float32).at[gate_i.reshape(-1)].add(1.0) / (t * k)
+    aux = e * jnp.sum(importance * load)
+
+    # slot assignment: position of each copy within its expert, by cumsum
+    flat_e = gate_i.reshape(t * k)                                  # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)             # (T*k,E)
+    pos = (jnp.cumsum(onehot, axis=0) - onehot) * onehot
+    pos = pos.sum(-1)                                               # (T*k,)
+    cap = _capacity(t, cfg)
+    keep = pos < cap
+    dest = jnp.where(keep, flat_e * cap + pos, e * cap)             # drop->OOB
+
+    # dispatch: (E*C, d) buffer of token copies (pad row at the end)
+    token_row = jnp.repeat(jnp.arange(t), k)
+    buf = jnp.zeros((e * cap + 1, d), x.dtype).at[dest].set(
+        xf[token_row], mode="drop")
+    expert_in = buf[:e * cap].reshape(e, cap, d)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, p["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", expert_in, p["w_up"])
+    y_exp = jnp.einsum("ecf,efd->ecd", h, p["w_down"])               # (E,C,d)
+
+    # combine: gather each copy's expert output, weight, sum per token
+    y_flat = y_exp.reshape(e * cap, d)
+    y_copy = jnp.where(keep[:, None],
+                       y_flat[jnp.minimum(dest, e * cap - 1)], 0.0)
+    w_copy = (gate_w.reshape(t * k) * keep).astype(x.dtype)
+    out = jnp.zeros((t, d), x.dtype).at[token_row].add(
+        y_copy * w_copy[:, None])
+    return out.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Expert-parallel shard_map path
+# ---------------------------------------------------------------------------
+
+
+def _moe_ffn_shardmap(p: Params, x: jax.Array, cfg: ArchConfig, env
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Each (pod, data) shard routes its local tokens; each model shard
+    computes only its local experts and contributes a partial output that is
+    psum'ed over the model axis. FSDP-sharded expert weights are explicitly
+    all-gathered over the data axis per layer (standard FSDP schedule)."""
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    e, k = cfg.num_experts, cfg.experts_per_token
+    ba = env.batch
+    model = env.model
+    e_loc = e // env.mesh.shape[model]
+    n_data = 1
+    for a in ba:
+        n_data *= env.mesh.shape[a]
+    if x.shape[0] % n_data:       # e.g. batch-1 long-context decode:
+        ba = ()                   # replicate tokens over the data axis
+    bspec = (ba if len(ba) > 1 else ba[0]) if ba else None
+    fsdp_ax = "data" if env.fsdp else None
+    wcol = P(model, None, fsdp_ax)      # (E,d,f) sharded
+    wrow = P(model, fsdp_ax, None)      # (E,f,d) sharded
+
+    def local_fn(router_w, wg, wu, wd, xl):
+        bl, sl, d = xl.shape
+        t = bl * sl
+        xf = xl.reshape(t, d)
+        if env.fsdp:  # gather the FSDP-split expert dims
+            wg = _ag_last(wg, "data")
+            wu = _ag_last(wu, "data")
+            wd = jnp.moveaxis(_ag_last(jnp.moveaxis(wd, 1, 2), "data"), 2, 1)
+        # matmul in activation dtype, f32 afterwards: keeps the remat
+        # residual of this shard_map in bf16 (an f32 (T,d) cast here would
+        # be saved per layer and double the carry stack — §Perf)
+        logits = (xf @ router_w.astype(xf.dtype)).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_w, gate_i = jax.lax.top_k(probs, k)
+        gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+        importance = probs.mean(0)
+        load = jnp.zeros((e,), jnp.float32).at[gate_i.reshape(-1)].add(
+            1.0) / (t * k)
+        aux = e * jnp.sum(importance * load)
+        for ax in ba:
+            aux = jax.lax.pmean(aux, ax)
+
+        cap = _capacity(t, cfg)
+        flat_e = gate_i.reshape(t * k)
+        onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+        pos = ((jnp.cumsum(onehot, axis=0) - onehot) * onehot).sum(-1)
+        keep = pos < cap
+        e0 = jax.lax.axis_index(model) * e_loc
+        local = (flat_e >= e0) & (flat_e < e0 + e_loc) & keep
+        dest = jnp.where(local, (flat_e - e0) * cap + pos, e_loc * cap)
+
+        token_row = jnp.repeat(jnp.arange(t), k)
+        buf = jnp.zeros((e_loc * cap + 1, d), xl.dtype).at[dest].set(
+            xf[token_row], mode="drop")
+        expert_in = buf[:e_loc * cap].reshape(e_loc, cap, d)
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, wg))
+        h = h * jnp.einsum("ecd,edf->ecf", expert_in, wu)
+        y_exp = jnp.einsum("ecf,efd->ecd", h, wd).reshape(e_loc * cap, d)
+        y_copy = jnp.where(local[:, None],
+                           y_exp[jnp.minimum(dest, e_loc * cap - 1)], 0.0)
+        w_copy = (gate_w.reshape(t * k) * local).astype(xl.dtype)
+        part = jnp.zeros((t, d), xl.dtype).at[token_row].add(
+            y_copy * w_copy[:, None])
+        out = jax.lax.psum(part, model)
+        return out.reshape(bl, sl, d), aux
+
+    fn = shard_map(
+        local_fn, mesh=env.mesh,
+        in_specs=(P(None, None), wcol, wcol, wrow, P(bspec, None, None)),
+        out_specs=(P(bspec, None, None), P()),
+        check_rep=False)
+    # shard_map's linearisation residuals (f32 router probs, dispatch
+    # buffers) leak through an OUTER jax.checkpoint — an inner remat pins
+    # the saved state to this call's bf16 inputs only (§Perf hillclimb 2)
+    fn = jax.checkpoint(fn)
+    return fn(p["router"]["w"], p["w_gate"], p["w_up"], p["w_down"], x)
+
+
+def _ag_last(w: jax.Array, axis: str) -> jax.Array:
+    """all-gather (concatenate) the last dim — the FSDP weight gather."""
+    return jax.lax.all_gather(w, axis, axis=w.ndim - 1, tiled=True)

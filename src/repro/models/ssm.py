@@ -1,0 +1,268 @@
+"""Attention-free sequence mixers: RWKV6 (Finch) and a Mamba-style selective
+SSM (used by the Hymba hybrid blocks).
+
+Both are written as (a) a full-sequence form built on ``jax.lax.scan`` over
+time for train/prefill, and (b) an O(1)-state single-step form for decode.
+State pytrees are the DMO ``O_s = |out|`` case: they are donated and updated
+in place by the serving engine.
+
+RWKV6 recurrence (per head, D = head dim, state S in R^{D x D}):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+with data-dependent decay w_t = exp(-exp(decay(x_t))) — the Finch change.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import dense_init, linear, rms_norm, rms_norm_init
+
+Params = Dict[str, jax.Array]
+
+_RWKV_HEAD = 64
+
+
+def rwkv_heads(cfg: ArchConfig) -> int:
+    return cfg.d_model // _RWKV_HEAD
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 time mixing
+# ---------------------------------------------------------------------------
+
+
+def rwkv_init(cfg: ArchConfig, key) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    ks = jax.random.split(key, 7)
+    return {
+        "mu": jax.random.uniform(ks[0], (5, d), dt),  # token-shift mixes r,k,v,w,g
+        "wr": dense_init(ks[1], d, d, dt),
+        "wk": dense_init(ks[2], d, d, dt),
+        "wv": dense_init(ks[3], d, d, dt),
+        "wd": dense_init(ks[4], d, d, dt, scale=0.002),   # data-dependent decay
+        "wg": dense_init(ks[5], d, d, dt),
+        "wo": dense_init(ks[6], d, d, dt),
+        "u": jnp.zeros((d,), dt),                          # bonus (per channel)
+    }
+
+
+def _rwkv_proj(p: Params, x: jax.Array, x_prev: jax.Array):
+    """Token-shift interpolation then the five projections.
+    x, x_prev: (B,S,d) where x_prev is x shifted right by one."""
+    mix = lambda i: x * p["mu"][i] + x_prev * (1 - p["mu"][i])
+    r = linear(p["wr"], mix(0))
+    k = linear(p["wk"], mix(1))
+    v = linear(p["wv"], mix(2))
+    w = jnp.exp(-jnp.exp(linear(p["wd"], mix(3)).astype(jnp.float32)))
+    g = jax.nn.silu(linear(p["wg"], mix(4)))
+    return r, k, v, w, g
+
+
+def _heads(x: jax.Array, h: int) -> jax.Array:
+    return x.reshape(*x.shape[:-1], h, _RWKV_HEAD)
+
+
+def _rwkv_step(state, rkvw, u):
+    """state: (B,H,D,D). r,k,v: (B,H,D); w: (B,H,D) decay in [0,1]."""
+    r, k, v, w = rkvw
+    kv = k[..., :, None] * v[..., None, :]                    # (B,H,D,D)
+    out = jnp.einsum("bhd,bhde->bhe", r, state + u[..., :, None] * kv)
+    state = w[..., :, None] * state + kv
+    return state, out
+
+
+#: sequence length from which the chunked (vectorised) WKV form is used.
+#: The per-step scan round-trips the (B,H,D,D) state through HBM every
+#: token; the chunked closed form turns S steps into S/Q einsum chunks
+#: (§Perf hillclimb 1). 0 < CHUNK keeps both paths testable.
+WKV_CHUNK = 64
+
+
+def rwkv_forward(p: Params, x: jax.Array, cfg: ArchConfig,
+                 chunked: bool = True) -> Tuple[jax.Array, Params]:
+    """Full-sequence RWKV6 time mixing. Returns (y, final state)."""
+    b, s, d = x.shape
+    h = rwkv_heads(cfg)
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, w, g = _rwkv_proj(p, x, x_prev)
+    rh, kh, vh = (_heads(t, h).astype(jnp.float32) for t in (r, k, v))
+    wh = _heads(w, h)
+    u = _heads(p["u"].astype(jnp.float32)[None], h)[0]        # (H,D)
+    state0 = jnp.zeros((b, h, _RWKV_HEAD, _RWKV_HEAD), jnp.float32)
+
+    if chunked and s % WKV_CHUNK == 0 and s > WKV_CHUNK:
+        state, y = _wkv_chunked(rh, kh, vh, wh, u, state0, WKV_CHUNK)
+    else:
+        def step(carry, t):
+            st, out = _rwkv_step(carry, t, u)
+            return st, out
+
+        xs = tuple(jnp.moveaxis(t, 1, 0) for t in (rh, kh, vh, wh))
+        state, outs = jax.lax.scan(step, state0, xs)
+        y = jnp.moveaxis(outs, 0, 1)
+    y = y.reshape(b, s, d).astype(x.dtype)
+    y = y * g
+    y = linear(p["wo"], y)
+    return y, {"wkv": state, "shift": x[:, -1]}
+
+
+def _wkv_chunked(r, k, v, w, u, state0, q):
+    """Chunked WKV: within a Q-chunk the recurrence has the closed form
+
+        o_t = (r_t ⊙ W_{t-1}) S_0 + Σ_{j<t} (r_t·(k_j ⊙ W_{t-1}/W_j)) v_j
+              + (r_t·(u ⊙ k_t)) v_t
+        S'  = diag(W_{Q-1}) S_0 + Σ_j (k_j ⊙ W_{Q-1}/W_j)^T v_j
+
+    with W_t = Π_{i<=t} w_i (per channel). All decay ratios have non-positive
+    log, so the pairwise exp tensor is built in log space and never
+    overflows. One lax.scan over chunks carries S (the only sequential HBM
+    state), everything inside a chunk is einsum-parallel.
+    r,k,v,w: (B,S,H,D) f32/(0,1); state0: (B,H,D,D). Returns (S', y (B,S,H,D))."""
+    b, s, h, d = r.shape
+    nc = s // q
+    resh = lambda t: jnp.moveaxis(t.reshape(b, nc, q, h, d), 1, 0)
+    rc, kc, vc = resh(r), resh(k), resh(v)          # (N,B,Q,H,D)
+    lw = jnp.cumsum(jnp.log(jnp.maximum(resh(w), 1e-38)), axis=2)
+    lw_prev = jnp.pad(lw, ((0, 0), (0, 0), (1, 0), (0, 0), (0, 0)))[:, :, :-1]
+
+    tq = jnp.arange(q)
+    mask_lt = (tq[:, None] > tq[None, :])[None, :, :, None, None]  # j < t
+    eye = jnp.eye(q)
+
+    def chunk_step(st, xs):
+        r_n, k_n, v_n, lw_n, lwp_n = xs             # (B,Q,H,D) each
+        # pairwise intra-chunk decays exp(lw_prev[t]-lw[j]), j<t: (B,Q,Q,H,D)
+        lr = lwp_n[:, :, None] - lw_n[:, None, :]
+        dec = jnp.exp(jnp.where(mask_lt, lr, -jnp.inf))
+        att = jnp.einsum("btjhd,bthd,bjhd->bthj", dec, r_n, k_n)
+        diag = jnp.einsum("bthd,hd,bthd->bth", r_n, u, k_n)
+        att = att + diag[..., None] * eye[None, :, None, :]  # (B,t,H,j)
+        y_n = jnp.einsum("bthj,bjhd->bthd", att, v_n)
+        # cross-chunk contribution from the carried state
+        y_n = y_n + jnp.einsum("bthd,bhde->bthe", r_n * jnp.exp(lwp_n), st)
+        # state update: S' = diag(W_{Q-1}) S + Σ_j (k_j W_{Q-1}/W_j)^T v_j
+        k_dec = k_n * jnp.exp(lw_n[:, -1:] - lw_n)
+        st = (jnp.exp(lw_n[:, -1])[..., None] * st
+              + jnp.einsum("bjhd,bjhe->bhde", k_dec, v_n))
+        return st, y_n
+
+    state, y = jax.lax.scan(chunk_step, state0, (rc, kc, vc, lw, lw_prev))
+    y = jnp.moveaxis(y, 0, 1).reshape(b, nc * q, h, d)
+    return state, y.reshape(b, s, h, d)
+
+
+def rwkv_decode(p: Params, x: jax.Array, state: Params, cfg: ArchConfig
+                ) -> Tuple[jax.Array, Params]:
+    """One-token step. state = {wkv: (B,H,D,D) f32, shift: (B,d)}."""
+    b, _, d = x.shape
+    h = rwkv_heads(cfg)
+    x1 = x[:, 0]
+    r, k, v, w, g = _rwkv_proj(p, x1[:, None], state["shift"][:, None])
+    rh, kh, vh = (_heads(t[:, 0], h).astype(jnp.float32) for t in (r, k, v))
+    wh = _heads(w[:, 0], h)
+    u = _heads(p["u"].astype(jnp.float32)[None], h)[0]
+    st, out = _rwkv_step(state["wkv"], (rh, kh, vh, wh), u)
+    y = out.reshape(b, 1, d).astype(x.dtype) * g
+    return linear(p["wo"], y), {"wkv": st, "shift": x1}
+
+
+def rwkv_channel_mix_init(cfg: ArchConfig, key) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    return {
+        "mu": jax.random.uniform(ks[0], (2, cfg.d_model), dt),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.d_ff, dt),
+        "wv": dense_init(ks[2], cfg.d_ff, cfg.d_model, dt),
+    }
+
+
+def rwkv_channel_mix(p: Params, x: jax.Array, x_prev: jax.Array) -> jax.Array:
+    k = linear(p["wk"], x * p["mu"][0] + x_prev * (1 - p["mu"][0]))
+    k = jnp.square(jax.nn.relu(k))
+    return linear(p["wv"], k)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective SSM (Hymba's parallel SSM heads)
+# ---------------------------------------------------------------------------
+
+
+def mamba_init(cfg: ArchConfig, key) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    di = d * cfg.ssm_expand
+    n = cfg.ssm_state
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": dense_init(ks[0], d, 2 * di, dt),
+        "conv": jax.random.normal(ks[1], (cfg.conv_kernel, di), dt) * 0.02,
+        "w_bc": dense_init(ks[2], di, 2 * n, dt),
+        "w_dt": dense_init(ks[3], di, di, dt, scale=0.002),
+        "a_log": jnp.zeros((di, n), jnp.float32),
+        "d_skip": jnp.ones((di,), dt),
+        "w_out": dense_init(ks[4], di, d, dt),
+    }
+
+
+def _mamba_scan_inputs(p: Params, xz: jax.Array, conv_state: jax.Array):
+    """xz: (B,S,2*di) already projected. Returns gate z and per-step (x, dt,
+    B, C) plus the new conv ring state (last K-1 pre-conv activations)."""
+    di = p["conv"].shape[1]
+    kk = p["conv"].shape[0]
+    x, z = xz[..., :di], xz[..., di:]
+    hist = jnp.concatenate([conv_state, x], axis=1)           # (B,K-1+S,di)
+    conv = sum(hist[:, i:i + x.shape[1]] * p["conv"][i] for i in range(kk))
+    conv = jax.nn.silu(conv)
+    dt = jax.nn.softplus(linear(p["w_dt"], conv).astype(jnp.float32))
+    bc = linear(p["w_bc"], conv)
+    n = bc.shape[-1] // 2
+    bmat, cmat = bc[..., :n], bc[..., n:]
+    new_conv_state = hist[:, hist.shape[1] - (kk - 1):]
+    return z, conv, dt, bmat, cmat, new_conv_state
+
+
+def _mamba_step(state, inp, a):
+    """state: (B,di,N); x,dt: (B,di); b,c: (B,N)."""
+    x, dt, bmat, cmat = inp
+    da = jnp.exp(dt[..., None] * a[None])                     # (B,di,N)
+    state = state * da + (dt * x)[..., None] * bmat[:, None, :].astype(jnp.float32)
+    y = jnp.einsum("bdn,bn->bd", state, cmat.astype(jnp.float32))
+    return state, y
+
+
+def mamba_forward(p: Params, x: jax.Array, cfg: ArchConfig
+                  ) -> Tuple[jax.Array, Params]:
+    b, s, d = x.shape
+    di = d * cfg.ssm_expand
+    kk = cfg.conv_kernel
+    xz = linear(p["w_in"], x)
+    conv0 = jnp.zeros((b, kk - 1, di), x.dtype)
+    z, conv, dt, bmat, cmat, conv_state = _mamba_scan_inputs(p, xz, conv0)
+    a = -jnp.exp(p["a_log"])                                  # (di,N)
+    state0 = jnp.zeros((b, di, cfg.ssm_state), jnp.float32)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in
+               (conv.astype(jnp.float32), dt, bmat, cmat))
+    state, ys = jax.lax.scan(lambda c, t: _mamba_step(c, t, a), state0, xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+    y = (y + conv * p["d_skip"]) * jax.nn.silu(z)
+    return linear(p["w_out"], y), {"ssm": state, "conv": conv_state}
+
+
+def mamba_decode(p: Params, x: jax.Array, state: Params, cfg: ArchConfig
+                 ) -> Tuple[jax.Array, Params]:
+    b, _, d = x.shape
+    xz = linear(p["w_in"], x)                                  # (B,1,2di)
+    z, conv, dt, bmat, cmat, conv_state = _mamba_scan_inputs(
+        p, xz, state["conv"])
+    a = -jnp.exp(p["a_log"])
+    st, y = _mamba_step(state["ssm"],
+                        (conv[:, 0].astype(jnp.float32), dt[:, 0],
+                         bmat[:, 0], cmat[:, 0]), a)
+    y = y[:, None].astype(x.dtype)
+    y = (y + conv * p["d_skip"]) * jax.nn.silu(z)
+    return linear(p["w_out"], y), {"ssm": st, "conv": conv_state}

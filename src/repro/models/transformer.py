@@ -1,0 +1,323 @@
+"""Config-driven decoder stack covering all assigned families.
+
+Layers are stacked (leading ``L`` dim on every block parameter) and applied
+with ``jax.lax.scan`` so the compiled HLO stays one-block-sized regardless of
+depth — essential for the 94-layer dry-runs.
+
+Three entry points:
+  forward_train(cfg, params, inputs)            -> logits, aux
+  prefill(cfg, params, inputs, cache_len)       -> logits, cache
+  decode_step(cfg, params, cache, tokens, pos)  -> logits, cache
+
+``inputs`` is a token array (B,S) int32, or pre-computed embeddings
+(B,S,d_model) for the audio/VLM frontend-stub families.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.config import ArchConfig
+from repro.sharding import constrain
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _block_init(cfg: ArchConfig, key) -> Params:
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.dtype)
+    p: Params = {"norm1": L.rms_norm_init(cfg.d_model, dt),
+                 "norm2": L.rms_norm_init(cfg.d_model, dt)}
+    if cfg.attention == "gqa":
+        p["attn"] = L.attn_init(cfg, ks[0])
+    elif cfg.attention == "mla":
+        p["attn"] = L.mla_init(cfg, ks[0])
+    elif cfg.attention == "hybrid":
+        p["attn"] = L.attn_init(cfg, ks[0])
+        p["mamba"] = S.mamba_init(cfg, ks[1])
+    elif cfg.attention == "none":
+        p["rwkv"] = S.rwkv_init(cfg, ks[0])
+    else:
+        raise ValueError(cfg.attention)
+    if cfg.attention == "none":
+        p["cmix"] = S.rwkv_channel_mix_init(cfg, ks[2])
+    elif cfg.is_moe:
+        p["moe"] = M.moe_init(cfg, ks[2])
+    else:
+        p["mlp"] = L.mlp_init(cfg, ks[2])
+    return p
+
+
+def init_params(cfg: ArchConfig, key) -> Params:
+    ke, kb, kh = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.dtype)
+    blocks = jax.vmap(lambda k: _block_init(cfg, k))(
+        jax.random.split(kb, cfg.num_layers))
+    p = {
+        "embed": jax.random.normal(ke, (cfg.vocab_size, cfg.d_model), dt) * 0.02,
+        "blocks": blocks,
+        "final_norm": L.rms_norm_init(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = jax.random.normal(kh, (cfg.d_model, cfg.vocab_size),
+                                         dt) * 0.02
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _block_seq(cfg: ArchConfig, bp: Params, x: jax.Array, window: int
+               ) -> Tuple[jax.Array, Params, jax.Array]:
+    """Full-sequence block (train / prefill). Returns (x, cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.rms_norm(bp["norm1"], x)
+    cache: Params = {}
+    if cfg.attention == "gqa":
+        y, cache = L.attn_forward(bp["attn"], h, cfg, window)
+    elif cfg.attention == "mla":
+        y, cache = L.mla_forward(bp["attn"], h, cfg, window)
+    elif cfg.attention == "hybrid":
+        ya, ca = L.attn_forward(bp["attn"], h, cfg, window or cfg.sliding_window)
+        ym, cm = S.mamba_forward(bp["mamba"], h, cfg)
+        y = 0.5 * (ya + ym)
+        cache = {**ca, **cm}
+    else:  # rwkv
+        y, cache = S.rwkv_forward(bp["rwkv"], h, cfg)
+    x = constrain(x + y, "batch", None, None)
+    h = L.rms_norm(bp["norm2"], x)
+    if cfg.attention == "none":
+        hp = jnp.pad(h, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        y = S.rwkv_channel_mix(bp["cmix"], h, hp)
+        cache["cm_shift"] = h[:, -1]
+    elif cfg.is_moe:
+        y, aux = M.moe_ffn(bp["moe"], h, cfg)
+    else:
+        y = L.mlp(bp["mlp"], h, cfg)
+    x = constrain(x + y, "batch", None, None)
+    return x, cache, aux
+
+
+def _block_dec(cfg: ArchConfig, bp: Params, x: jax.Array, cache: Params,
+               pos: jax.Array, window: int) -> Tuple[jax.Array, Params]:
+    """Single-token decode block."""
+    h = L.rms_norm(bp["norm1"], x)
+    new: Params = {}
+    if cfg.attention == "gqa":
+        y, new = L.attn_decode(bp["attn"], h, cache, pos, cfg, window)
+    elif cfg.attention == "mla":
+        y, new = L.mla_decode(bp["attn"], h, cache, pos, cfg, window)
+    elif cfg.attention == "hybrid":
+        ya, ca = L.attn_decode(bp["attn"], h,
+                               {"k": cache["k"], "v": cache["v"]}, pos, cfg,
+                               window or cfg.sliding_window)
+        ym, cm = S.mamba_decode(bp["mamba"], h,
+                                {"ssm": cache["ssm"], "conv": cache["conv"]},
+                                cfg)
+        y = 0.5 * (ya + ym)
+        new = {**ca, **cm}
+    else:
+        y, new = S.rwkv_decode(bp["rwkv"], h, cache, cfg)
+    x = x + y
+    h = L.rms_norm(bp["norm2"], x)
+    if cfg.attention == "none":
+        y = S.rwkv_channel_mix(bp["cmix"], h, cache["cm_shift"][:, None])
+        new["cm_shift"] = h[:, 0]
+    elif cfg.is_moe:
+        y, _ = M.moe_ffn(bp["moe"], h, cfg)
+    else:
+        y = L.mlp(bp["mlp"], h, cfg)
+    return x + y, new
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+def embed(cfg: ArchConfig, params: Params, inputs: jax.Array) -> jax.Array:
+    if inputs.dtype in (jnp.int32, jnp.int64):
+        x = params["embed"][inputs]
+    else:  # frontend stub already produced embeddings
+        x = inputs.astype(jnp.dtype(cfg.dtype))
+    return constrain(x, "batch", None, None)
+
+
+def unembed(cfg: ArchConfig, params: Params, x: jax.Array) -> jax.Array:
+    x = L.rms_norm(params["final_norm"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    return constrain(logits, "batch", None, "model")
+
+
+# ---------------------------------------------------------------------------
+# Full passes (scan over stacked layers)
+# ---------------------------------------------------------------------------
+
+
+#: layers per remat group: the scan saves one residual carry per GROUP, so
+#: grouping halves (G=2) the dominant carry stacks at the cost of one extra
+#: in-group forward during backprop (§Perf hillclimb 2). Only worth it for
+#: deep stacks — shallow models pay the in-group transients for nothing.
+REMAT_GROUP = 2
+REMAT_GROUP_MIN_LAYERS = 48
+
+
+def forward_hidden(cfg: ArchConfig, params: Params, inputs: jax.Array,
+                   remat: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Returns (final hidden states (B,S,d) pre-norm/head, moe aux loss) —
+    callers that want a memory-bounded loss apply the head per seq chunk."""
+    x = embed(cfg, params, inputs)
+    g = REMAT_GROUP if (remat and cfg.num_layers % REMAT_GROUP == 0
+                        and cfg.num_layers >= REMAT_GROUP_MIN_LAYERS) else 1
+
+    def body(x, bp):
+        x = jax.lax.optimization_barrier(x)
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(g):  # unrolled group (g small)
+            bpi = jax.tree.map(lambda t: t[i], bp) if g > 1 else bp
+            x, _, a = _block_seq(cfg, bpi, x, window=0)
+            aux = aux + a
+        return x, aux / g
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    blocks = params["blocks"]
+    if g > 1:
+        blocks = jax.tree.map(
+            lambda t: t.reshape(t.shape[0] // g, g, *t.shape[1:]), blocks)
+    x, aux = jax.lax.scan(body, x, blocks)
+    return x, jnp.mean(aux)
+
+
+def forward_train(cfg: ArchConfig, params: Params, inputs: jax.Array,
+                  remat: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits (B,S,V), moe aux loss)."""
+    x = embed(cfg, params, inputs)
+
+    def body(x, bp):
+        # barrier pins the saved residual to the carry's own dtype (bf16) —
+        # without it XLA hoists the norm's f32 convert into the residual
+        # stack, doubling the remat-carry memory (see EXPERIMENTS.md §Perf)
+        x = jax.lax.optimization_barrier(x)
+        x, _, a = _block_seq(cfg, bp, x, window=0)
+        return x, a  # aux as a scan output keeps the carry bf16-only
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, aux = jax.lax.scan(body, x, params["blocks"])
+    return unembed(cfg, params, x), jnp.mean(aux)
+
+
+def prefill(cfg: ArchConfig, params: Params, inputs: jax.Array,
+            cache_len: Optional[int] = None, window: int = 0
+            ) -> Tuple[jax.Array, Params]:
+    """Full-sequence pass that also materialises the decode cache."""
+    x = embed(cfg, params, inputs)
+    s = x.shape[1]
+    cache_len = cache_len or s
+
+    def body(x, bp):
+        x, cache, _ = _block_seq(cfg, bp, x, window=window)
+        cache = _pad_cache(cfg, cache, cache_len, s)
+        return x, cache
+
+    x, cache = jax.lax.scan(body, x, params["blocks"])
+    logits = unembed(cfg, params, x[:, -1:])
+    return logits, cache
+
+
+def _pad_cache(cfg: ArchConfig, cache: Params, cache_len: int, s: int) -> Params:
+    out = {}
+    for k, v in cache.items():
+        if k in ("k", "v", "c_kv", "k_rope") and v.ndim >= 3 and v.shape[1] == s:
+            if cache_len > s:
+                pad = [(0, 0)] * v.ndim
+                pad[1] = (0, cache_len - s)
+                v = jnp.pad(v, pad)
+            elif cache_len < s:  # sliding window: keep the trailing window
+                v = v[:, s - cache_len:]
+        out[k] = v
+    if cfg.kv_quant and cfg.attention == "gqa" and "k" in out:
+        from repro.models.layers import _quantize_kv
+        for name in ("k", "v"):
+            q, sc = _quantize_kv(out[name])
+            out[name], out[name + "_scale"] = q, sc
+    return out
+
+
+def decode_step(cfg: ArchConfig, params: Params, cache: Params,
+                tokens: jax.Array, pos: jax.Array, window: int = 0
+                ) -> Tuple[jax.Array, Params]:
+    """tokens: (B,1) int32 (all families embed decoded tokens); pos scalar.
+
+    The cache rides in the scan CARRY and each layer's slice is updated with
+    dynamic_update_index — one donated buffer updated in place (the DMO
+    O_s=|out| case). Passing it as scan xs/ys instead makes XLA double-buffer
+    the full (L,...) stacks (~2.5x cache in temps — measured in §Perf)."""
+    x = embed(cfg, params, tokens)
+
+    def body(carry, scan_in):
+        x, cache = carry
+        bp, l = scan_in
+        c_l = jax.tree.map(
+            lambda t: jax.lax.dynamic_index_in_dim(t, l, 0, keepdims=False),
+            cache)
+        x, new_l = _block_dec(cfg, bp, x, c_l, pos, window)
+        cache = jax.tree.map(
+            lambda t, n: jax.lax.dynamic_update_index_in_dim(
+                t, n.astype(t.dtype), l, 0), cache, new_l)
+        return (x, cache), None
+
+    (x, new_cache), _ = jax.lax.scan(
+        body, (x, cache),
+        (params["blocks"], jnp.arange(cfg.num_layers)))
+    return unembed(cfg, params, x), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int) -> Params:
+    """Zeroed decode cache (stacked over layers)."""
+    dt = jnp.dtype(cfg.dtype)
+    lyr, b, c = cfg.num_layers, batch, cache_len
+    cache: Params = {}
+    if cfg.attention in ("gqa", "hybrid"):
+        kvshape = (lyr, b, c, cfg.num_kv_heads, cfg.head_dim)
+        if cfg.kv_quant and cfg.attention == "gqa":
+            cache["k"] = jnp.zeros(kvshape, jnp.int8)
+            cache["v"] = jnp.zeros(kvshape, jnp.int8)
+            cache["k_scale"] = jnp.zeros(kvshape[:-1], jnp.float32)
+            cache["v_scale"] = jnp.zeros(kvshape[:-1], jnp.float32)
+        else:
+            cache["k"] = jnp.zeros(kvshape, dt)
+            cache["v"] = jnp.zeros(kvshape, dt)
+    if cfg.attention == "mla":
+        cache["c_kv"] = jnp.zeros((lyr, b, c, cfg.kv_lora_rank), dt)
+        cache["k_rope"] = jnp.zeros((lyr, b, c, cfg.rope_head_dim), dt)
+    if cfg.attention == "none":
+        h = S.rwkv_heads(cfg)
+        cache["wkv"] = jnp.zeros((lyr, b, h, 64, 64), jnp.float32)
+        cache["shift"] = jnp.zeros((lyr, b, cfg.d_model), dt)
+        cache["cm_shift"] = jnp.zeros((lyr, b, cfg.d_model), dt)
+    if cfg.attention == "hybrid":
+        di = cfg.d_model * cfg.ssm_expand
+        cache["ssm"] = jnp.zeros((lyr, b, di, cfg.ssm_state), jnp.float32)
+        cache["conv"] = jnp.zeros((lyr, b, cfg.conv_kernel - 1, di), dt)
+    return cache

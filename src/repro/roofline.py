@@ -1,0 +1,143 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), all in seconds:
+
+  compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+  memory     = HLO_bytes / (chips × HBM_bw)
+  collective = collective_bytes / (chips × link_bw)
+
+``cost_analysis`` provides FLOPs and bytes; collective bytes are summed from
+the optimised HLO text (result-shape bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+# TPU v5e per chip
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # B/s
+LINK_BW = 50e9             # B/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "tuple": 0, "token": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %ar = bf16[16,4096]{1,0} all-reduce(%x), replica_groups=...
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _tuple_bytes(inner: str) -> int:
+    total = 0
+    for part in inner.split(","):
+        part = part.strip()
+        m = re.match(r"(\w+)\[([\d,]*)\]", part)
+        if m:
+            total += _shape_bytes(m.group(1), m.group(2))
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective result bytes summed over the module ('-start' variants
+    counted once, '-done' skipped)."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        tup, dtype, dims, kind = m.groups()
+        if m.group(0).rstrip("(").endswith("-done("):
+            continue
+        size = _tuple_bytes(tup) if tup else _shape_bytes(dtype, dims)
+        out[kind] += size
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    name: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_breakdown: Dict[str, int]
+    model_flops: float
+    per_device_hbm: Optional[float] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (self.chips * LINK_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    def row(self) -> str:
+        return (f"{self.name:40s} comp={self.t_compute * 1e3:9.2f}ms "
+                f"mem={self.t_memory * 1e3:9.2f}ms "
+                f"coll={self.t_collective * 1e3:9.2f}ms "
+                f"[{self.bottleneck:10s}] useful={self.useful_flops_ratio:5.2f}"
+                + (f" hbm/dev={self.per_device_hbm / 2**30:6.2f}GiB"
+                   if self.per_device_hbm else ""))
+
+
+def analyse(name: str, compiled, lowered_text: Optional[str],
+            model_flops: float, chips: int) -> Roofline:
+    """NOTE: raw ``cost_analysis()`` counts while-loop bodies once; all three
+    terms here come from the trip-count-aware HLO parser (repro.hlocost),
+    scaled from per-device to global by × chips."""
+    from repro import hlocost
+    text = lowered_text if lowered_text is not None else compiled.as_text()
+    mc = hlocost.module_cost(text)
+    flops = mc.flops * chips          # per-device -> global
+    nbytes = mc.bytes * chips
+    cb = {k: v * chips for k, v in mc.coll.items()}
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        mem = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+               + ma.temp_size_in_bytes + ma.generated_code_size_in_bytes)
+        # memory_analysis is already per device under SPMD
+    except Exception:
+        pass
+    return Roofline(name, chips, flops, nbytes, float(sum(cb.values())), cb,
+                    model_flops, mem)
+
+
+def model_flops_for(cfg, shape) -> float:
+    """6·N_active·D for training, 2·N_active·D for inference steps."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # one token per sequence

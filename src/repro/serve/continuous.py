@@ -1,0 +1,118 @@
+"""Continuous-batching serving engine (vLLM-style slot scheduling).
+
+A fixed pool of ``slots`` shares one donated KV ring cache; requests with
+different prompt lengths run in the same decode step via per-slot position
+vectors (ragged decode). When a request finishes (EOS / max tokens) its slot
+is immediately recycled for the next queued request — no batch barrier.
+
+Slot recycling reuses cache storage in place — the serving-scheduler face of
+the paper's reuse discipline: storage whose value is dead (a finished
+request's cache) is overwritten by the next value without reallocation.
+
+Prefill runs per-request (simple); decode is one jitted, donated step for
+the whole pool. Works for every decoder family (the cache pytree is
+family-agnostic); prompts must be token ids.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.config import ArchConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray                  # prompt (prompt_len,)
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class ContinuousConfig:
+    slots: int = 4
+    cache_len: int = 256
+    window: int = 0
+
+
+class ContinuousEngine:
+    def __init__(self, cfg: ArchConfig, params, ccfg: ContinuousConfig):
+        self.cfg, self.params, self.ccfg = cfg, params, ccfg
+        self.cache = T.init_cache(cfg, ccfg.slots, ccfg.cache_len)
+        self.pos = np.zeros(ccfg.slots, np.int32)
+        self.slot_req: List[Optional[Request]] = [None] * ccfg.slots
+        self.queue: List[Request] = []
+        self.last_tok = np.zeros(ccfg.slots, np.int32)
+        self._decode = jax.jit(
+            lambda p, c, t, pos: T.decode_step(cfg, p, c, t, pos,
+                                               window=ccfg.window),
+            donate_argnums=(1,))
+        self._prefill = jax.jit(
+            lambda p, toks: T.prefill(cfg, p, toks, ccfg.cache_len,
+                                      window=ccfg.window),
+            static_argnums=())
+
+    # -- scheduling ----------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for s in range(self.ccfg.slots):
+            if self.slot_req[s] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            logits, cache1 = self._prefill(self.params,
+                                           jnp.asarray(req.tokens[None]))
+            # copy the request's prefilled cache into slot s
+            self.cache = jax.tree.map(
+                lambda pool, one: pool.at[:, s].set(one[:, 0]),
+                self.cache, cache1)
+            self.slot_req[s] = req
+            self.pos[s] = len(req.tokens)
+            self.last_tok[s] = int(jnp.argmax(logits[0, -1]))
+            req.out.append(int(self.last_tok[s]))
+
+    def _retire(self) -> None:
+        for s, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            if (len(req.out) >= req.max_new_tokens
+                    or (req.eos_id is not None and req.out
+                        and req.out[-1] == req.eos_id)):
+                req.done = True
+                self.slot_req[s] = None     # slot storage recycled in place
+                self.pos[s] = 0
+
+    # -- one engine step ------------------------------------------------
+    def step(self) -> int:
+        """Admit, decode one token for every active slot, retire. Returns
+        the number of active requests after the step."""
+        self._retire()
+        self._admit()
+        active = [s for s, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return 0
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self.last_tok[:, None]),
+            jnp.asarray(self.pos))
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+        for s in active:
+            self.pos[s] += 1
+            self.last_tok[s] = nxt[s]
+            self.slot_req[s].out.append(int(nxt[s]))
+        self._retire()
+        return sum(r is not None for r in self.slot_req)
+
+    def run(self, max_steps: int = 1000) -> None:
+        for _ in range(max_steps):
+            active = self.step()
+            if active == 0 and not self.queue:
+                break

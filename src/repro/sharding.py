@@ -1,0 +1,78 @@
+"""Mesh-axis environment + activation sharding constraints.
+
+The model code is mesh-agnostic: it calls :func:`constrain` with *logical*
+axis names ("batch", "model", "seq", None...). The launcher installs an
+:class:`AxisEnv` mapping logical names to physical mesh axes — e.g. batch ->
+("pod", "data") on the multi-pod mesh, ("data",) on one pod. Outside any env
+(unit tests on a bare CPU) ``constrain`` is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+class AxisEnv:
+    def __init__(self, mesh: Mesh, batch: Tuple[str, ...] = ("data",),
+                 model: str = "model", fsdp: bool = False):
+        self.mesh = mesh
+        self.batch = tuple(batch)
+        self.model = model
+        #: expert/mlp weights additionally sharded over the data axis
+        self.fsdp = fsdp
+
+    def resolve(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        if logical == "batch":
+            return self.batch if len(self.batch) > 1 else self.batch[0]
+        if logical == "model":
+            return self.model
+        raise ValueError(f"unknown logical axis {logical!r}")
+
+    def spec(self, *dims: Optional[str]) -> P:
+        return P(*[self.resolve(d) for d in dims])
+
+    def sharding(self, *dims: Optional[str]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*dims))
+
+
+def current_env() -> Optional[AxisEnv]:
+    return getattr(_state, "env", None)
+
+
+@contextlib.contextmanager
+def axis_env(mesh: Mesh, batch: Tuple[str, ...] = ("data",),
+             model: str = "model", fsdp: bool = False):
+    prev = current_env()
+    _state.env = AxisEnv(mesh, batch, model, fsdp)
+    try:
+        yield _state.env
+    finally:
+        _state.env = prev
+
+
+def constrain(x: jax.Array, *dims: Optional[str]) -> jax.Array:
+    """with_sharding_constraint against the installed env (no-op without)."""
+    env = current_env()
+    if env is None:
+        return x
+    # skip axes that do not divide (XLA tolerates uneven but padding hurts)
+    spec = []
+    for size, d in zip(x.shape, dims):
+        phys = env.resolve(d)
+        if phys is None:
+            spec.append(None)
+            continue
+        n = 1
+        for a in (phys if isinstance(phys, tuple) else (phys,)):
+            n *= env.mesh.shape[a]
+        spec.append(phys if size % n == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(env.mesh, P(*spec)))

@@ -1,0 +1,153 @@
+"""Loss + train step (donated params/optimiser state = DMO's in-place case)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ArchConfig
+from repro.optim import adamw
+
+TrainState = Dict[str, Any]   # {"params", "opt", ...}
+Batch = Dict[str, jax.Array]  # {"inputs": (B,S) or (B,S,d), "targets": (B,S)}
+
+MOE_AUX_WEIGHT = 0.01
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Mean token NLL, float32 logsumexp. The gold-logit term is a masked
+    reduction (fuses; SPMD-friendly when the vocab dim is model-sharded,
+    unlike take_along_axis which would gather across shards)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    vocab = lf.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    gold = jnp.sum(jnp.where(iota == targets[..., None], lf, 0.0), axis=-1)
+    return jnp.mean(lse - gold)
+
+
+#: sequence-chunked loss kicks in above this vocab size: the (S, V) logits
+#: are never materialised — the head matmul + softmax run one seq chunk at a
+#: time inside a scan (§Perf hillclimb 3, DP policy with unshardable vocab)
+CHUNKED_CE_VOCAB = 32768
+CE_CHUNK = 512
+
+
+def chunked_cross_entropy(cfg: ArchConfig, params, x: jax.Array,
+                          targets: jax.Array, chunk: int = CE_CHUNK
+                          ) -> jax.Array:
+    """x: (B,S,d) final hidden states; head+CE applied per seq chunk."""
+    b, s, d = x.shape
+    if s % chunk or s <= chunk:
+        return cross_entropy(T.unembed(cfg, params, x), targets)
+    nc = s // chunk
+    xc = jnp.moveaxis(x.reshape(b, nc, chunk, d), 1, 0)
+    tc = jnp.moveaxis(targets.reshape(b, nc, chunk), 1, 0)
+
+    def body(tot, xs):
+        xx, tt = xs
+        logits = T.unembed(cfg, params, xx)
+        lf = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        iota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+        gold = jnp.sum(jnp.where(iota == tt[..., None], lf, 0.0), axis=-1)
+        return tot + jnp.sum(lse - gold), None
+
+    tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, tc))
+    return tot / (b * s)
+
+
+def loss_fn(cfg: ArchConfig, params, batch: Batch, remat: bool = True):
+    if cfg.vocab_size >= CHUNKED_CE_VOCAB:
+        x, aux = T.forward_hidden(cfg, params, batch["inputs"], remat=remat)
+        ce = chunked_cross_entropy(cfg, params, x, batch["targets"])
+    else:
+        logits, aux = T.forward_train(cfg, params, batch["inputs"],
+                                      remat=remat)
+        ce = cross_entropy(logits, batch["targets"])
+    loss = ce + MOE_AUX_WEIGHT * aux if cfg.is_moe else ce
+    return loss, {"ce": ce, "moe_aux": aux}
+
+
+def opt_config_for(cfg: ArchConfig) -> adamw.OptConfig:
+    """bf16 moments for >100B-param configs (state must fit 16GB/chip)."""
+    mdt = "bfloat16" if cfg.param_count() > 1e11 else "float32"
+    return adamw.OptConfig(moment_dtype=mdt)
+
+
+def accum_dtype_for(cfg: ArchConfig) -> str:
+    """bf16 gradient accumulation for >100B configs (see §Perf)."""
+    return "bfloat16" if cfg.param_count() > 1e11 else "float32"
+
+
+def init_state(cfg: ArchConfig, key,
+               opt_cfg: Optional[adamw.OptConfig] = None) -> TrainState:
+    params = T.init_params(cfg, key)
+    mdt = opt_cfg.moment_dtype if opt_cfg else "float32"
+    return {"params": params, "opt": adamw.init(params, mdt)}
+
+
+def train_step(cfg: ArchConfig, opt_cfg: adamw.OptConfig, state: TrainState,
+               batch: Batch, remat: bool = True, microbatches: int = 1,
+               accum_dtype: str = "float32",
+               ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+    """One SGD step, optionally with gradient accumulation over
+    ``microbatches`` slices of the global batch (bounds peak activation /
+    logits memory — large-vocab archs at 1M-token batches need it).
+    Intended to be jit'ed with donate_argnums on ``state``."""
+    grad_fn = jax.value_and_grad(
+        lambda p, b: loss_fn(cfg, p, b, remat), has_aux=True)
+    if microbatches <= 1:
+        (loss, parts), grads = grad_fn(state["params"], batch)
+    else:
+        mb = jax.tree.map(
+            lambda x: x.reshape(microbatches, x.shape[0] // microbatches,
+                                *x.shape[1:]), batch)
+        adt = jnp.dtype(accum_dtype)
+        zero = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, adt), state["params"])
+
+        def acc(carry, b):
+            g_acc, l_acc, a_acc = carry
+            (l, parts), g = grad_fn(state["params"], b)
+            g_acc = jax.tree.map(lambda a, x: a + x.astype(adt), g_acc, g)
+            return (g_acc, l_acc + l, a_acc + parts["moe_aux"]), None
+
+        (grads, loss, aux), _ = jax.lax.scan(
+            acc, (zero, jnp.zeros((), jnp.float32),
+                  jnp.zeros((), jnp.float32)), mb)
+        inv = 1.0 / microbatches
+        grads = jax.tree.map(lambda g: g * inv, grads)
+        loss, parts = loss * inv, {"ce": loss * inv, "moe_aux": aux * inv}
+    new_params, new_opt, om = adamw.update(opt_cfg, grads, state["opt"],
+                                           state["params"])
+    metrics = {"loss": loss, **parts, **om}
+    return {"params": new_params, "opt": new_opt}, metrics
+
+
+def default_microbatches(cfg: ArchConfig, global_batch: int, seq_len: int,
+                         data_shards: int, token_budget: int = 4096) -> int:
+    """Pick the accumulation factor so each device sees <= token_budget
+    tokens per microbatch (keeps logits/activations inside HBM)."""
+    per_device_tokens = global_batch * seq_len // max(1, data_shards)
+    m = max(1, per_device_tokens // token_budget)
+    # must divide the *global* batch
+    while global_batch % m:
+        m -= 1
+    return m
+
+
+def jit_train_step(cfg: ArchConfig, opt_cfg: adamw.OptConfig,
+                   in_shardings=None, out_shardings=None, remat: bool = True,
+                   microbatches: int = 1):
+    """jit with state donation (in-place params/opt update — DMO O_s=|out|)."""
+    fn = functools.partial(train_step, cfg, opt_cfg, remat=remat,
+                           microbatches=microbatches)
+    kw = {}
+    if in_shardings is not None:
+        kw["in_shardings"] = in_shardings
+        kw["out_shardings"] = out_shardings
+    return jax.jit(fn, donate_argnums=(0,), **kw)

@@ -1,0 +1,16 @@
+import os
+import sys
+
+# tests see the single real CPU device (the 512-device override lives ONLY
+# in repro.launch.dryrun; subprocess tests set their own XLA_FLAGS)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

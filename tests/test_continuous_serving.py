@@ -1,0 +1,86 @@
+"""Continuous batching: ragged decode correctness + slot recycling."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import transformer as T
+from repro.serve.continuous import ContinuousConfig, ContinuousEngine, Request
+
+
+def tiny_cfg():
+    r = registry()["qwen2.5-3b"].reduced()
+    return dataclasses.replace(r, vocab_size=96, d_model=64, num_heads=2,
+                               num_kv_heads=1, head_dim=32, d_ff=96)
+
+
+def greedy_reference(cfg, params, prompt, n):
+    """Argmax chain via full forwards."""
+    seq = list(prompt)
+    out = []
+    for _ in range(n):
+        logits, _ = T.forward_train(cfg, params, jnp.asarray([seq]),
+                                    remat=False)
+        nxt = int(jnp.argmax(logits[0, -1]))
+        out.append(nxt)
+        seq.append(nxt)
+    return out
+
+
+def test_ragged_batch_matches_per_request_reference():
+    """Different prompt lengths decoded in ONE batch must equal per-request
+    greedy decoding (exercises the vector-position ring caches)."""
+    cfg = tiny_cfg()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size, n).astype(np.int32)
+               for n in (5, 11, 8)]
+    eng = ContinuousEngine(cfg, params,
+                           ContinuousConfig(slots=3, cache_len=64))
+    reqs = [Request(i, p, max_new_tokens=6) for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run(max_steps=50)
+    for r, p in zip(reqs, prompts):
+        assert r.done
+        want = greedy_reference(cfg, params, p, 6)
+        assert r.out == want, (r.rid, r.out, want)
+
+
+def test_slot_recycling_serves_more_requests_than_slots():
+    cfg = tiny_cfg()
+    params = T.init_params(cfg, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
+    eng = ContinuousEngine(cfg, params,
+                           ContinuousConfig(slots=2, cache_len=48))
+    reqs = [Request(i, rng.integers(1, cfg.vocab_size, 4 + i % 3)
+                    .astype(np.int32), max_new_tokens=3 + i % 2)
+            for i in range(5)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run(max_steps=80)
+    assert all(r.done for r in reqs)
+    for r in reqs:
+        assert len(r.out) == r.max_new_tokens
+
+
+def test_recycled_slot_is_isolated_from_previous_request():
+    """A request admitted into a recycled slot must produce exactly the
+    per-request reference output (no leakage from the dead cache)."""
+    cfg = tiny_cfg()
+    params = T.init_params(cfg, jax.random.PRNGKey(2))
+    rng = np.random.default_rng(2)
+    first = rng.integers(1, cfg.vocab_size, 9).astype(np.int32)
+    second = rng.integers(1, cfg.vocab_size, 6).astype(np.int32)
+    eng = ContinuousEngine(cfg, params,
+                           ContinuousConfig(slots=1, cache_len=48))
+    r1, r2 = (Request(0, first, max_new_tokens=4),
+              Request(1, second, max_new_tokens=4))
+    eng.submit(r1)
+    eng.submit(r2)
+    eng.run(max_steps=40)
+    assert r1.done and r2.done
+    assert r2.out == greedy_reference(cfg, params, second, 4)

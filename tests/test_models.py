@@ -1,0 +1,134 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch, a
+reduced variant of the same family, one forward/train step on CPU, output
+shapes + finiteness asserted. Plus decode-vs-forward consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import transformer as T
+from repro.optim.adamw import OptConfig
+from repro.train import steps as TS
+
+ARCHS = list(registry().items())
+
+
+def _inputs(cfg, b, s, key):
+    if cfg.frontend != "none":
+        return jax.random.normal(key, (b, s, cfg.d_model), jnp.float32)
+    return jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+
+
+@pytest.mark.parametrize("name,cfg", ARCHS, ids=[n for n, _ in ARCHS])
+def test_smoke_forward_and_train_step(name, cfg):
+    r = cfg.reduced()
+    assert r.num_layers == 2 and r.d_model <= 512
+    if r.is_moe:
+        assert r.num_experts <= 4
+    key = jax.random.PRNGKey(0)
+    b, s = 2, 16
+    state = TS.init_state(r, key)
+    batch = {
+        "inputs": _inputs(r, b, s, key),
+        "targets": jax.random.randint(key, (b, s), 0, r.vocab_size),
+    }
+    new_state, metrics = jax.jit(
+        lambda st, ba: TS.train_step(r, OptConfig(), st, ba, remat=False)
+    )(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    logits, aux = T.forward_train(r, new_state["params"], batch["inputs"],
+                                  remat=False)
+    assert logits.shape == (b, s, r.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("name,cfg", ARCHS, ids=[n for n, _ in ARCHS])
+def test_decode_matches_forward(name, cfg):
+    """Prefill s tokens then decode one-by-one: each decode step's logits
+    must match the full-sequence forward at that position (validates KV ring
+    buffers, RoPE offsets, SSM/token-shift states across all families)."""
+    r = cfg.reduced()
+    if r.is_moe:
+        # capacity-dropping differs between a 16-token prefill and a 1-token
+        # decode step by design; ample capacity makes both paths exact
+        r = dataclasses.replace(r, capacity_factor=16.0)
+    key = jax.random.PRNGKey(1)
+    params = T.init_params(r, key)
+    b, s, extra = 2, 8, 4
+    if r.frontend != "none":
+        # frontend archs decode token ids after an embedded prompt; check
+        # the pure-token path via embeddings of tokens for comparability
+        toks = jax.random.randint(key, (b, s + extra), 0, r.vocab_size)
+        full_inputs = params["embed"][toks]
+    else:
+        toks = jax.random.randint(key, (b, s + extra), 0, r.vocab_size)
+        full_inputs = toks
+    full_logits, _ = T.forward_train(r, params, full_inputs, remat=False)
+
+    cache_len = s + extra
+    logits, cache = T.prefill(r, params, full_inputs[:, :s], cache_len)
+    np.testing.assert_allclose(np.asarray(logits[:, 0]),
+                               np.asarray(full_logits[:, s - 1]),
+                               rtol=2e-3, atol=2e-3)
+    for i in range(extra):
+        tok = toks[:, s + i][:, None]
+        logits, cache = T.decode_step(r, params, cache, tok,
+                                      jnp.int32(s + i))
+        np.testing.assert_allclose(np.asarray(logits[:, 0]),
+                                   np.asarray(full_logits[:, s + i]),
+                                   rtol=2e-3, atol=2e-3,
+                                   err_msg=f"{name} decode step {i}")
+
+
+def test_sliding_window_decode_bounded_cache():
+    """Dense arch through the sub-quadratic path: ring cache of window size
+    must equal full-cache attention restricted to the window."""
+    cfg = registry()["yi-6b"].reduced()
+    cfg = dataclasses.replace(cfg, sliding_window=8)
+    key = jax.random.PRNGKey(2)
+    params = T.init_params(cfg, key)
+    b, total = 1, 20
+    toks = jax.random.randint(key, (b, total), 0, cfg.vocab_size)
+    # reference: full forward with window masking
+    from repro.models import layers as L
+    ref_logits, _ = T.prefill(cfg, params, toks, total, window=8)
+    # ring-buffer decode with cache_len = window
+    w = 8
+    logits, cache = T.prefill(cfg, params, toks[:, :w], w, window=w)
+    for i in range(w, total):
+        logits, cache = T.decode_step(cfg, params, cache, toks[:, i][:, None],
+                                      jnp.int32(i), window=w)
+    full_ref, _ = T.forward_train(cfg, params, toks, remat=False)
+    del full_ref, ref_logits, L
+    # decode after the loop corresponds to position total-1 logits;
+    # compare with a windowed full pass
+    ref2, _ = T.prefill(cfg, params, toks, total, window=w)
+    np.testing.assert_allclose(np.asarray(logits[:, 0]), np.asarray(ref2[:, 0]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_int8_kv_cache_decode():
+    """int8 KV cache (per-slot, per-kv-head scales): decode matches the fp
+    forward within quantisation tolerance; cache tensors really are int8."""
+    cfg = dataclasses.replace(registry()["yi-6b"].reduced(), kv_quant=True)
+    key = jax.random.PRNGKey(5)
+    params = T.init_params(cfg, key)
+    b, s, extra = 2, 8, 4
+    toks = jax.random.randint(key, (b, s + extra), 0, cfg.vocab_size)
+    full, _ = T.forward_train(cfg, params, toks, remat=False)
+    logits, cache = T.prefill(cfg, params, toks[:, :s], s + extra)
+    assert cache["k"].dtype == jnp.int8 and "k_scale" in cache
+    np.testing.assert_allclose(np.asarray(logits[:, 0]),
+                               np.asarray(full[:, s - 1]),
+                               rtol=0.1, atol=0.1)
+    for i in range(extra):
+        logits, cache = T.decode_step(cfg, params, cache,
+                                      toks[:, s + i][:, None],
+                                      jnp.int32(s + i))
+        np.testing.assert_allclose(np.asarray(logits[:, 0]),
+                                   np.asarray(full[:, s + i]),
+                                   rtol=0.12, atol=0.12, err_msg=f"step {i}")

@@ -1,0 +1,65 @@
+"""Property-based invariants of the O_s calculators (hypothesis)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import Graph, conv_out_dim
+from repro.core.overlap import (safe_overlap_algorithmic,
+                                safe_overlap_analytic, safe_overlap_trace)
+
+geom = st.fixed_dictionaries({
+    "ih": st.integers(4, 14),
+    "iw": st.integers(4, 14),
+    "ic": st.integers(1, 5),
+    "oc": st.integers(1, 6),
+    "k": st.sampled_from([1, 2, 3, 5]),
+    "s": st.integers(1, 3),
+    "padding": st.sampled_from(["same", "valid"]),
+    "kind": st.sampled_from(["conv2d", "depthwise_conv2d", "pool"]),
+    "mult": st.integers(1, 2),
+})
+
+
+def build(p):
+    ih, iw = p["ih"], p["iw"]
+    k, s, padding = p["k"], p["s"], p["padding"]
+    if padding == "valid" and (ih < k or iw < k):
+        padding = "same"
+    g = Graph("t")
+    x = g.tensor("x", (ih, iw, p["ic"]), 4, "input")
+    oh, ow = conv_out_dim(ih, k, s, padding), conv_out_dim(iw, k, s, padding)
+    if oh <= 0 or ow <= 0:
+        return None
+    kind = p["kind"]
+    od = p["oc"] if kind == "conv2d" else p["ic"] * (
+        p["mult"] if kind == "depthwise_conv2d" else 1)
+    params = dict(kernel=(k, k), stride=(s, s), padding=padding)
+    if kind == "depthwise_conv2d":
+        params["multiplier"] = p["mult"]
+    g.op(kind, [x], (oh, ow, od), params, out_kind="output")
+    return g.ops[0]
+
+
+@settings(max_examples=60, deadline=None)
+@given(geom)
+def test_trace_algorithmic_agree_and_analytic_bounds(p):
+    op = build(p)
+    if op is None:
+        return
+    exact = safe_overlap_algorithmic(op)
+    assert safe_overlap_trace(op) == exact
+    est = safe_overlap_analytic(op)
+    assert est is not None
+    assert 0 <= est <= exact <= op.output.nbytes
+
+
+@settings(max_examples=30, deadline=None)
+@given(geom, st.integers(1, 4))
+def test_overlap_scales_with_dtype(p, ts):
+    """O_s in bytes scales linearly with the element width."""
+    op = build(p)
+    if op is None:
+        return
+    base = safe_overlap_algorithmic(op)
+    op.inputs[0].dtype_bytes = ts
+    op.output.dtype_bytes = ts
+    assert safe_overlap_algorithmic(op) * 4 == base * ts or base == 0

@@ -1,0 +1,128 @@
+"""Planners: constraint validation, numeric arena verification, and the
+paper's MobileNet numbers."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import zoo
+from repro.core.arena import verify_plan
+from repro.core.graph import Graph
+from repro.core.planner import (plan_dmo, plan_greedy_size,
+                                plan_modified_heap, plan_naive,
+                                plan_original, plan_search)
+
+
+def mini_net(seed=0, depth=4):
+    rng = np.random.default_rng(seed)
+    g = Graph("mini")
+    h = g.tensor("x", (10, 10, 3), 4, "input")
+    c = 3
+    for i in range(depth):
+        kind = rng.choice(["conv2d", "depthwise_conv2d", "elementwise", "pool"])
+        ih, iw, _ = h.shape
+        if kind == "conv2d":
+            c2 = int(rng.integers(2, 8))
+            s = int(rng.integers(1, 3))
+            h = g.op("conv2d", [h],
+                     (-(-ih // s), -(-iw // s), c2),
+                     dict(kernel=(3, 3), stride=(s, s), padding="same"),
+                     name=f"op{i}")
+            c = c2
+        elif kind == "depthwise_conv2d":
+            h = g.op("depthwise_conv2d", [h], (ih, iw, c),
+                     dict(kernel=(3, 3), stride=(1, 1), padding="same"),
+                     name=f"op{i}")
+        elif kind == "pool" and ih >= 2 and iw >= 2:
+            h = g.op("pool", [h], (ih // 2, iw // 2, c),
+                     dict(kernel=(2, 2), stride=(2, 2), padding="valid",
+                          mode="avg"), name=f"op{i}")
+        else:
+            h = g.op("elementwise", [h], h.shape, dict(fn="relu"),
+                     name=f"op{i}")
+    g.op("softmax", [g.op("fully_connected",
+                          [g.op("reshape", [h], (h.elems,), name="flat")],
+                          (7,), name="fc")], (7,), name="sm",
+         out_kind="output")
+    g.validate()
+    return g
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_plans_validate_and_execute_bit_exact(seed):
+    g = mini_net(seed)
+    for plan in (plan_naive(g), plan_greedy_size(g),
+                 plan_dmo(g, method="algorithmic")):
+        plan.validate()
+        verify_plan(g, plan)   # numeric: arena exec == private buffers
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_dmo_never_worse(seed):
+    g = mini_net(seed)
+    assert plan_dmo(g).peak_bytes <= plan_original(g).peak_bytes
+
+
+def test_modified_heap_directions():
+    g = mini_net(1)
+    for d in ("forward", "backward"):
+        p = plan_modified_heap(g, direction=d)
+        p.validate()
+
+
+def test_mobilenet_v1_edge_paper_numbers():
+    """The paper's flagship: MobileNet v1 0.25 128 8-bit, 96 KB -> 64 KB."""
+    g = zoo.mobilenet_v1(0.25, 128, 1)
+    orig = plan_original(g)
+    assert orig.peak_bytes == 96 * 1024
+    opt = plan_search(g, method="algorithmic", budget_s=8.0)
+    opt.validate()
+    # ILS is stochastic under a small time budget: allow <=1.6 % slack over
+    # the paper's 64 KB (benchmarks/table3 reproduces 64.0 exactly at 12 s)
+    assert opt.peak_bytes <= 65 * 1024
+
+
+def test_mobilenet_v2_paper_numbers():
+    g = zoo.mobilenet_v2(0.35, 224, 4)
+    orig = plan_original(g)
+    assert orig.peak_bytes == 2940 * 1024
+    opt = plan_dmo(g, method="algorithmic")
+    opt.validate()
+    assert opt.peak_bytes <= 2353 * 1024  # paper: 2352 KB (+1 KB tolerance)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000))
+def test_search_plans_always_safe(seed):
+    g = mini_net(seed % 7, depth=3)
+    p = plan_search(g, budget_s=0.3, seed=seed)
+    p.validate()
+    verify_plan(g, p)
+
+
+def test_serialisation_orders_are_valid_and_help():
+    """Eager/lazy/memory-greedy orders are topologically valid; planning over
+    candidate orders never hurts (paper §II.B)."""
+    from repro.core.serialise import candidate_orders
+    from repro.core.planner import best_plan
+    from repro.core import zoo
+    g = zoo.inception_resnet_v2(299, 4)
+    orders = candidate_orders(g)
+    assert len(orders) >= 2
+    for order in orders:
+        seen = set()
+        avail = {t.storage() for t in g.tensors if t.kind in ("input", "weight")}
+        for op in order:
+            for t in op.inputs:
+                assert t.storage() in avail, f"{op.name} before producer"
+            for t in op.outputs:
+                avail.add(t.storage())
+            seen.add(op)
+        assert len(seen) == len(g.ops)
+
+
+def test_extended_profile_never_worse_than_paper_profile():
+    from repro.core import zoo
+    g = zoo.mobilenet_v2(0.35, 224, 4)
+    a = plan_dmo(g, method="algorithmic", profile="paper").peak_bytes
+    b = plan_dmo(g, method="algorithmic", profile="extended").peak_bytes
+    assert b <= a * 1.01  # extended adds overlap options (heuristics may tie)
