@@ -1,24 +1,25 @@
 """Benchmark: DMO on the assigned architectures' block activation arenas
 (one decoder block, batch 1 x seq 128, bf16) — the paper's technique carried
-to the transformer substrate."""
+to the transformer substrate, driven through the unified compile pipeline
+(the second run of any arch is a plan-cache hit)."""
 from __future__ import annotations
 
 import time
 
 from repro.configs import registry
-from repro.core.activation_planner import plan_block
+from repro.core.activation_planner import compile_block
 
 
 def run(csv_rows):
     for name, cfg in registry().items():
         t0 = time.perf_counter()
-        orig, dmo = plan_block(cfg, batch=1, seq=128)
+        cp = compile_block(cfg, batch=1, seq=128)
         us = (time.perf_counter() - t0) * 1e6
-        sav = 100 * (1 - dmo.peak_bytes / orig.peak_bytes)
         csv_rows.append((
             f"activation/{name}", us,
-            f"orig={orig.peak_bytes / 1024:.0f}KB dmo={dmo.peak_bytes / 1024:.0f}KB "
-            f"saving={sav:.1f}%"))
+            f"orig={cp.baseline_bytes / 1024:.0f}KB "
+            f"dmo={cp.peak_bytes / 1024:.0f}KB "
+            f"saving={cp.saving_pct:.1f}% verified={cp.verified}"))
     return csv_rows
 
 

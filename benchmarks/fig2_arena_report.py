@@ -1,12 +1,13 @@
 """Benchmark: Fig. 1/2 analogue — arena layout report for the example model
 (MobileNet v1 0.25 128 8-bit): buffer offsets/scopes before and after DMO,
-plus an ASCII rendering of the diagonal packing."""
+plus an ASCII rendering of the diagonal packing. Both plans come from one
+:func:`repro.core.pipeline.compile` call."""
 from __future__ import annotations
 
 import time
 
 from repro.core import zoo
-from repro.core.planner import plan_original, plan_search
+from repro.core.pipeline import compile as compile_graph
 
 
 def ascii_arena(plan, width: int = 72) -> str:
@@ -23,22 +24,28 @@ def ascii_arena(plan, width: int = 72) -> str:
     return "\n".join(lines)
 
 
+def _compile():
+    return compile_graph(zoo.mobilenet_v1(0.25, 128, 1),
+                         method="algorithmic", budget_s=10.0)
+
+
 def run(csv_rows):
     t0 = time.perf_counter()
-    g = zoo.mobilenet_v1(0.25, 128, 1)
-    p0 = plan_original(g)
-    p1 = plan_search(g, method="algorithmic", budget_s=10.0)
+    cp = _compile()
     us = (time.perf_counter() - t0) * 1e6
-    csv_rows.append(("fig2/arena_original_kb", us, f"{p0.peak_bytes / 1024:.0f}"))
-    csv_rows.append(("fig2/arena_dmo_kb", us, f"{p1.peak_bytes / 1024:.0f}"))
+    csv_rows.append(("fig2/arena_original_kb", us,
+                     f"{cp.baseline_bytes / 1024:.0f}"))
+    csv_rows.append(("fig2/arena_dmo_kb", us, f"{cp.peak_bytes / 1024:.0f}"))
     return csv_rows
 
 
 if __name__ == "__main__":
-    g = zoo.mobilenet_v1(0.25, 128, 1)
-    p0 = plan_original(g)
-    p1 = plan_search(g, method="algorithmic", budget_s=10.0)
-    print(f"== original ({p0.peak_bytes / 1024:.0f} KB, strategy {p0.strategy})")
-    print(ascii_arena(p0))
-    print(f"\n== DMO ({p1.peak_bytes / 1024:.0f} KB, strategy {p1.strategy})")
-    print(ascii_arena(p1))
+    cp = _compile()
+    print(f"== original ({cp.baseline_bytes / 1024:.0f} KB, "
+          f"strategy {cp.baseline.strategy})")
+    print(ascii_arena(cp.baseline))
+    print(f"\n== DMO ({cp.peak_bytes / 1024:.0f} KB, "
+          f"strategy {cp.plan.strategy})")
+    print(ascii_arena(cp.plan))
+    print()
+    print(cp.report().split("\n# plan")[0])

@@ -1,10 +1,12 @@
 """Benchmark: paper Table III — peak arena memory, original vs DMO.
 
-For each of the eleven models: the best non-overlapping baseline
-("Original"), the paper-faithful DMO plan (overlap only for the op kinds the
-paper derives O_s for, exact algorithmic O_s), and the beyond-paper plan
-(ILS search + extended overlap profile incl. concat/pad). Every plan is
-validated against the no-clobber constraint checker.
+For each of the eleven models, one :func:`repro.core.pipeline.compile` call
+produces the best non-overlapping baseline ("Original"), the paper-faithful
+DMO plan (exact algorithmic O_s, paper op-kind profile, removal/splitting/
+serialisation passes) refined by the ILS search, and the verification pass —
+the old per-model plan/compare boilerplate lives in the pipeline now. A
+second compile with the extended overlap profile gives the beyond-paper
+column.
 
 Paper numbers are cited inline; structural deltas for the complex connected
 models (whose exact TFLite graph serialisations the paper does not specify)
@@ -15,7 +17,7 @@ from __future__ import annotations
 import time
 
 from repro.core import zoo
-from repro.core.planner import plan_original, plan_dmo, plan_search
+from repro.core.pipeline import compile as compile_graph
 
 #: ILS budget (seconds) per model, scaled down for the big connected graphs.
 _SEARCH_BUDGET = {"default": 12.0, "nasnet_mobile": 6.0, "densenet_121": 8.0,
@@ -25,33 +27,26 @@ _SEARCH_BUDGET = {"default": 12.0, "nasnet_mobile": 6.0, "densenet_121": 8.0,
 def run(csv_rows, search: bool = True):
     for name, (build, paper_orig, paper_opt) in zoo.TABLE3_MODELS.items():
         t0 = time.perf_counter()
-        g = build()
-        p0 = plan_original(g)
-        p1 = plan_dmo(g, method="algorithmic", profile="paper")
-        best = p1
+        budget = (_SEARCH_BUDGET.get(name, _SEARCH_BUDGET["default"])
+                  if search else 0.0)
+        cp = compile_graph(build(), profile="paper", method="algorithmic",
+                           budget_s=budget)
         if search:
-            budget = _SEARCH_BUDGET.get(name, _SEARCH_BUDGET["default"])
-            p2 = plan_search(g, method="algorithmic", profile="paper",
-                             budget_s=budget)
-            if p2.peak_bytes < best.peak_bytes:
-                best = p2
-            p3 = plan_search(g, method="algorithmic", profile="extended",
-                             budget_s=budget / 2)
-            ext = min(p3.peak_bytes, best.peak_bytes)
+            ext_cp = compile_graph(build(), profile="extended",
+                                   method="algorithmic", budget_s=budget / 2)
+            ext = min(ext_cp.peak_bytes, cp.peak_bytes)
         else:
-            ext = best.peak_bytes
-        for p in (p0, best):
-            p.validate()
+            ext = cp.peak_bytes
         us = (time.perf_counter() - t0) * 1e6
-        orig_kb = p0.peak_bytes / 1024
-        opt_kb = best.peak_bytes / 1024
-        sav = 100.0 * (1 - opt_kb / orig_kb)
+        orig_kb = cp.baseline_bytes / 1024
+        opt_kb = cp.peak_bytes / 1024
         psav = (100.0 * (1 - paper_opt / paper_orig)) if paper_orig else 0.0
         csv_rows.append((
             f"table3/{name}", us,
             f"orig={orig_kb:.0f}KB(paper {paper_orig}) "
             f"dmo={opt_kb:.0f}KB(paper {paper_opt}) "
-            f"saving={sav:.1f}%(paper {psav:.1f}%) beyond={ext / 1024:.0f}KB"))
+            f"saving={cp.saving_pct:.1f}%(paper {psav:.1f}%) "
+            f"beyond={ext / 1024:.0f}KB"))
     return csv_rows
 
 

@@ -1,11 +1,12 @@
 """The paper's deployability argument, §IV: on an STM32F103 (96 KB SRAM,
 768 KB flash) the smallest MobileNet only fits WITH diagonal memory
-optimisation.
+optimisation. One pipeline compile per model gives both the baseline and the
+DMO plan.
 
     PYTHONPATH=src python examples/edge_planning.py
 """
 from repro.core import zoo
-from repro.core.planner import plan_dmo, plan_original, plan_search
+from repro.core.pipeline import compile as compile_graph
 
 SRAM_KB = 96          # STM32F103xF
 FLASH_KB = 768
@@ -26,8 +27,8 @@ for name in ("mobilenet_v1_0.25_128_8bit", "mobilenet_v1_1.0_224_8bit"):
             weights += kh * kw * op.output.shape[-1]
         elif op.kind == "fully_connected":
             weights += op.inputs[0].elems * op.output.elems
-    orig = plan_original(g).peak_bytes
-    opt = plan_search(g, method="algorithmic", budget_s=10.0).peak_bytes
+    cp = compile_graph(g, method="algorithmic", budget_s=10.0)
+    orig, opt = cp.baseline_bytes, cp.peak_bytes
     # leave 4 KB of SRAM for stack + runtime (a 96 KB arena on a 96 KB part
     # leaves nothing — the paper's point)
     budget = (SRAM_KB - 4) * 1024

@@ -2,13 +2,10 @@
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
-
 from repro.core.graph import Graph
 from repro.core.overlap import (safe_overlap_algorithmic,
                                 safe_overlap_analytic, safe_overlap_trace)
-from repro.core.planner import plan_dmo, plan_original, plan_search
-from repro.core.arena import verify_plan
+from repro.core.pipeline import compile as compile_graph
 from repro.core import zoo
 
 # ---------------------------------------------------------------------------
@@ -30,18 +27,26 @@ small.op("depthwise_conv2d", [xs], (7, 7, 8),
 print("  bottom-up trace (small op):", safe_overlap_trace(small.ops[0]))
 
 # ---------------------------------------------------------------------------
-# 2. Arena planning on a real model (paper §IV, Table III)
+# 2. The whole paper in five lines: compile() chains op removal, op
+#    splitting, serialisation orders, DMO planning and verification, caches
+#    the result by graph signature, and reports against the non-overlapping
+#    baseline (paper §II + §IV, Table III).
 # ---------------------------------------------------------------------------
 print("\nMobileNet v1 0.25 128 (8-bit) — the paper's flagship edge model:")
-mg = zoo.mobilenet_v1(0.25, 128, 1)
-orig = plan_original(mg)
-opt = plan_search(mg, method="algorithmic", budget_s=8.0)  # ILS (NP-hard)
-print(f"  original arena: {orig.peak_bytes / 1024:.0f} KB (paper: 96)")
-print(f"  DMO arena:      {opt.peak_bytes / 1024:.0f} KB (paper: 64)")
-opt.validate()  # no-clobber constraint check
+model = zoo.mobilenet_v1(0.25, 128, 1)
+plan = compile_graph(model, budget_s=8.0)        # ILS search (NP-hard)
+print(f"  original arena: {plan.baseline_bytes / 1024:.0f} KB (paper: 96)")
+print(f"  DMO arena:      {plan.peak_bytes / 1024:.0f} KB (paper: 64)")
+print(f"  saving:         {plan.saving_pct:.1f}%  verified={plan.verified}")
+
+again = compile_graph(zoo.mobilenet_v1(0.25, 128, 1), budget_s=8.0)
+print(f"  re-compile of the same graph: cache_hit={again.cache_hit} "
+      f"({again.compile_s * 1e3:.2f} ms)")
 
 # ---------------------------------------------------------------------------
-# 3. Bit-exact verification: run the model INSIDE the planned arena
+# 3. Bit-exact verification: run the model INSIDE the planned arena. The
+#    pipeline's verify pass does this automatically for f32 graphs the
+#    NumPy arena interpreter can execute.
 # ---------------------------------------------------------------------------
 mini = Graph("mini")
 h = mini.tensor("x", (12, 12, 3), 4, "input")
@@ -54,7 +59,7 @@ h = mini.op("conv2d", [h], (6, 6, 16),
 mini.op("softmax", [mini.op("fully_connected",
                             [mini.op("reshape", [h], (h.elems,))], (10,))],
         (10,), out_kind="output")
-plan = plan_dmo(mini)
-verify_plan(mini, plan)   # raises if any overlapped byte was clobbered
+compiled = compile_graph(mini, verify="numeric")  # raises on any clobber
+assert compiled.verified == "numeric"
 print("\nmini-net: arena execution is bit-exact vs private buffers ✓")
-print(plan.report())
+print(compiled.report())

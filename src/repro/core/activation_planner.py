@@ -15,8 +15,9 @@ from __future__ import annotations
 
 from typing import Tuple
 
+from repro.core import pipeline
 from repro.core.graph import Graph, Tensor
-from repro.core.planner import Plan, plan_dmo, plan_original
+from repro.core.planner import Plan
 from repro.models.config import ArchConfig
 
 
@@ -91,7 +92,17 @@ def block_graph(cfg: ArchConfig, batch: int = 1, seq: int = 128,
 
 def plan_block(cfg: ArchConfig, batch: int = 1, seq: int = 128,
                dtype_bytes: int = 2) -> Tuple[Plan, Plan]:
-    """(original, dmo) plans of one block's activation arena."""
+    """(original, dmo) plans of one block's activation arena, via the
+    unified compile pipeline (cached per graph signature)."""
     g = block_graph(cfg, batch, seq, dtype_bytes)
-    return plan_original(g), plan_dmo(g, method="algorithmic",
-                                      profile="paper")
+    compiled = pipeline.compile(g, profile="paper", method="algorithmic")
+    return compiled.baseline, compiled.plan
+
+
+def compile_block(cfg: ArchConfig, batch: int = 1, seq: int = 128,
+                  dtype_bytes: int = 2, profile: str = "paper",
+                  method: str = "algorithmic",
+                  **kwargs) -> "pipeline.CompiledPlan":
+    """Full pipeline result (pass log, provenance, report) for one block."""
+    g = block_graph(cfg, batch, seq, dtype_bytes)
+    return pipeline.compile(g, profile=profile, method=method, **kwargs)

@@ -1,0 +1,526 @@
+"""End-to-end DMO compile pipeline (pass manager + content-addressed cache).
+
+The paper's §II techniques — operation removal (§II.C), operation splitting
+(§II.A), graph serialisation (§II.B), diagonal arena planning (§II.D/§IV) and
+bit-exact verification (§I) — compose: removal exposes new diagonal cascades,
+splitting changes the peak-defining pair, and the serialisation order decides
+which tensors the planner can overlap. Each caller re-implementing that
+plumbing (build → transform → order → plan → compare → validate) is exactly
+the boilerplate this module deletes.
+
+:func:`compile` is the single planning entrypoint::
+
+    from repro.core.pipeline import compile
+    plan = compile(graph)                  # default pass chain
+    print(plan.report())                   # peak, savings, pass log, layout
+
+Passes are registered with the :func:`register_pass` decorator and are
+individually toggleable via ``compile(..., passes=(...))``. Compiled plans
+are memoised in a content-addressed cache keyed by a deterministic graph
+signature (op kinds, params, tensor shapes/dtypes/kinds/aliasing) plus the
+compile options, so re-planning the same model is O(signature) instead of
+O(NP-hard search).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.core import planner as P
+from repro.core.arena import verify_plan
+from repro.core.graph import Graph, Op, Tensor
+from repro.core.removal import removable, remove_concats
+from repro.core.serialise import candidate_orders
+from repro.core.splitting import auto_split
+
+__all__ = [
+    "CompileOptions", "CompiledPlan", "Pass", "available_passes",
+    "cache_clear", "cache_info", "compile", "default_passes",
+    "graph_signature", "register_pass",
+]
+
+
+# ---------------------------------------------------------------------------
+# Graph signatures (content addressing)
+# ---------------------------------------------------------------------------
+
+
+def _canon(v: Any) -> Any:
+    if isinstance(v, (list, tuple)):
+        return tuple(_canon(x) for x in v)
+    if isinstance(v, dict):
+        return tuple(sorted((k, _canon(x)) for k, x in v.items()))
+    return v
+
+
+def graph_signature(graph: Graph) -> str:
+    """Deterministic content hash of a graph: op kinds + params and tensor
+    shapes/dtypes/kinds/alias structure, with tensors numbered in first-use
+    order (names are ignored, so a rebuilt identical model hits the cache)."""
+    h = hashlib.sha256()
+    ids: Dict[int, int] = {}
+
+    def ref(t: Tensor) -> str:
+        k = id(t)
+        if k not in ids:
+            alias = ref(t.alias_of) if t.alias_of is not None else ""
+            ids[k] = len(ids)
+            h.update(f"T{ids[k]}:{t.shape}:{t.dtype_bytes}:{t.kind}"
+                     f":a({alias});".encode())
+        return str(ids[k])
+
+    for op in graph.ops:
+        ins = ",".join(ref(t) for t in op.inputs)
+        outs = ",".join(ref(t) for t in op.outputs)
+        h.update(f"O:{op.kind}|{ins}|{outs}|{_canon(op.params)!r};".encode())
+    for t in graph.tensors:  # dangling model inputs still occupy the arena
+        ref(t)
+    return h.hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# Options / state / result
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CompileOptions:
+    profile: str = "paper"        # overlap profile: "paper" | "extended"
+    method: str = "algorithmic"   # O_s method: analytic/algorithmic/trace/auto
+    budget_s: float = 0.0         # >0 enables ILS plan_search refinement
+    seed: int = 0
+    split: str = "auto"           # "auto" (size-gated) | "on" | "off"
+    split_max_parts: int = 8
+    split_ops_limit: int = 150    # "auto": skip auto_split on larger graphs
+    verify: str = "auto"          # "auto" | "constraints" | "numeric" | "off"
+
+    def key(self) -> str:
+        return repr(dataclasses.astuple(self))
+
+
+@dataclasses.dataclass
+class PipelineState:
+    """Mutable state threaded through the pass chain."""
+    original: Graph
+    options: CompileOptions
+    #: (provenance label, graph) — variants[0] is always the input graph;
+    #: transform passes append rewritten graphs.
+    variants: List[Tuple[str, Graph]]
+    #: candidate execution orders per variant index (serialise pass).
+    orders: Dict[int, List[List[Op]]] = dataclasses.field(default_factory=dict)
+    baseline: Optional[P.Plan] = None
+    plan: Optional[P.Plan] = None
+    winner: str = "input"
+    verified: str = "none"
+    recompute_elems: int = 0
+    log: List[str] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class CompiledPlan:
+    """Result of :func:`compile`: the winning plan, the non-overlapping
+    baseline it is measured against, and the full pass provenance.
+
+    Cache-hit note: a hit returns the memoised result, whose ``original`` /
+    ``graph`` / ``plan`` reference the *first* structurally identical graph
+    compiled — not necessarily the object you just passed in. Correlate
+    through ``compiled.graph`` and ``compiled.plan`` (or
+    :meth:`offsets_by_name`), never through your local build's Tensor/Op
+    objects."""
+    original: Graph
+    graph: Graph            # graph the plan executes (possibly transformed)
+    plan: P.Plan
+    baseline: P.Plan
+    passes: Tuple[str, ...]
+    log: List[str]
+    key: str
+    winner: str             # provenance label of the winning variant
+    verified: str           # "numeric" | "constraints" | "none"
+    recompute_elems: int = 0
+    cache_hit: bool = False
+    compile_s: float = 0.0
+
+    @property
+    def peak_bytes(self) -> int:
+        return self.plan.peak_bytes
+
+    @property
+    def baseline_bytes(self) -> int:
+        return self.baseline.peak_bytes
+
+    @property
+    def saving_pct(self) -> float:
+        if self.baseline_bytes == 0:
+            return 0.0
+        return 100.0 * (1.0 - self.peak_bytes / self.baseline_bytes)
+
+    def offsets_by_name(self) -> Dict[str, int]:
+        """Arena offsets keyed by tensor *name*. On a cache hit the plan's
+        Tensor objects belong to the memoised graph, not necessarily the one
+        passed to :func:`compile` — names survive that, object identity
+        does not."""
+        return {t.name: off for t, off in self.plan.offsets.items()}
+
+    def report(self) -> str:
+        lines = [
+            f"# compile({self.original.name}): {self.peak_bytes} bytes "
+            f"({self.peak_bytes / 1024:.1f} KB), "
+            f"{self.saving_pct:.1f}% below baseline "
+            f"{self.baseline_bytes / 1024:.1f} KB [{self.baseline.strategy}]",
+            f"  strategy={self.plan.strategy} variant={self.winner} "
+            f"verified={self.verified} "
+            f"cache={'hit' if self.cache_hit else 'miss'} "
+            f"compile={self.compile_s * 1e3:.1f} ms",
+            f"  passes: {' -> '.join(self.passes)}",
+        ]
+        if self.recompute_elems:
+            lines.append(f"  recompute: {self.recompute_elems} elements")
+        lines += [f"  | {entry}" for entry in self.log]
+        lines.append(self.plan.report())
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Pass registry (register_pass idiom)
+# ---------------------------------------------------------------------------
+
+_PASSES: Dict[str, "Pass"] = {}
+_PASS_ORDER: List[str] = []
+
+
+class Pass:
+    """A named, individually toggleable pipeline stage."""
+    name: str = ""
+    default: bool = True
+
+    def run(self, state: PipelineState) -> None:
+        raise NotImplementedError
+
+
+def register_pass(cls):
+    """Class decorator: instantiate and add to the pipeline registry in
+    declaration order (which is the default execution order)."""
+    inst = cls()
+    if not inst.name:
+        raise ValueError(f"{cls.__name__} must set a pass name")
+    if inst.name in _PASSES:
+        raise ValueError(f"duplicate pass {inst.name!r}")
+    _PASSES[inst.name] = inst
+    _PASS_ORDER.append(inst.name)
+    return cls
+
+
+def available_passes() -> Tuple[str, ...]:
+    return tuple(_PASS_ORDER)
+
+
+def default_passes() -> Tuple[str, ...]:
+    return tuple(n for n in _PASS_ORDER if _PASSES[n].default)
+
+
+# ---------------------------------------------------------------------------
+# Passes
+# ---------------------------------------------------------------------------
+
+
+@register_pass
+class BaselinePass(Pass):
+    """Best non-overlapping plan of the *input* graph — the paper's
+    "Original" column, and the floor every compiled plan must beat."""
+    name = "baseline"
+
+    def run(self, state: PipelineState) -> None:
+        state.baseline = P.plan_original(state.original)
+        state.log.append(
+            f"baseline: {state.baseline.strategy} "
+            f"peak={state.baseline.peak_bytes}")
+
+
+@register_pass
+class RemoveConcatsPass(Pass):
+    """§II.C operation removal: elide concats whose inputs can write directly
+    into the aggregated tensor (branch outputs become views)."""
+    name = "remove_concats"
+
+    def run(self, state: PipelineState) -> None:
+        g = state.variants[-1][1]
+        n = sum(1 for op in g.ops if removable(g, op))
+        if not n:
+            state.log.append("remove_concats: nothing removable")
+            return
+        state.variants.append(("remove_concats", remove_concats(g)))
+        state.log.append(f"remove_concats: elided {n} concat(s)")
+
+
+@register_pass
+class SplitPass(Pass):
+    """§II.A operation splitting, automated: greedily split the
+    peak-defining conv pair into row bands while the planned peak improves.
+    Applied to the input graph (splitting through aggregated views is not
+    defined). ``split="auto"`` skips graphs above ``split_ops_limit`` —
+    auto_split re-plans every candidate, which is expensive on the big
+    connected graphs where it never fires anyway."""
+    name = "split"
+
+    def run(self, state: PipelineState) -> None:
+        opt = state.options
+        g = state.variants[0][1]
+        if opt.split == "off":
+            state.log.append("split: disabled")
+            return
+        if _has_aliases(g):
+            # split_pair's tensor remapping resolves aliases to their
+            # storage owner, which collapses a reshape's input and output
+            # into one self-producing tensor — not a valid rewrite
+            state.log.append("split: skipped (aliased tensors)")
+            return
+        if opt.split == "auto" and len(g.ops) > opt.split_ops_limit:
+            state.log.append(
+                f"split: skipped ({len(g.ops)} ops > {opt.split_ops_limit})")
+            return
+        sg, rc, slog = auto_split(g, max_parts=opt.split_max_parts)
+        if not slog:
+            state.log.append("split: no profitable split")
+            return
+        state.variants.append(("split", sg))
+        state.recompute_elems += rc
+        state.log += [f"split: {entry}" for entry in slog]
+
+
+def _has_strided_views(g: Graph) -> bool:
+    """True when the graph contains non-trivial aliases (concat-removal
+    views) whose offsets the numeric arena executor cannot represent."""
+    return any(t.alias_of is not None and t.elems != t.storage().elems
+               for t in g.tensors)
+
+
+def _has_aliases(g: Graph) -> bool:
+    """Any alias (reshape or view): storage-level dependencies then
+    under-constrain reordering (an alias's producer and its storage owner
+    collide in the producer map), so such graphs keep construction order."""
+    return any(t.alias_of is not None for t in g.tensors)
+
+
+@register_pass
+class SerialisePass(Pass):
+    """§II.B: candidate execution orders (eager / lazy / memory-greedy) per
+    variant; the plan pass keeps the best plan over all of them."""
+    name = "serialise"
+
+    def run(self, state: PipelineState) -> None:
+        for i, (label, g) in enumerate(state.variants):
+            if _has_aliases(g):
+                state.log.append(f"serialise[{label}]: kept construction "
+                                 "order (aliased tensors)")
+                continue
+            orders = candidate_orders(g)
+            if len(orders) > 1:
+                state.orders[i] = orders
+                state.log.append(f"serialise[{label}]: {len(orders)} "
+                                 "candidate orders")
+
+
+@register_pass
+class PlanPass(Pass):
+    """DMO planning over every (variant, order) pair; keeps the lowest-peak
+    plan. The baseline is itself a candidate, so the result is never worse
+    than the non-overlapping plan of the input graph. ``budget_s > 0`` adds
+    an ILS ``plan_search`` refinement on the winning variant."""
+    name = "plan"
+
+    def run(self, state: PipelineState) -> None:
+        opt = state.options
+        cands: List[Tuple[str, P.Plan]] = []
+        if state.baseline is not None:
+            cands.append(("input", state.baseline))
+        for i, (label, g) in enumerate(state.variants):
+            # construction order is always a candidate (None); serialise
+            # orders augment it, minus exact duplicates
+            orders = [None] + [o for o in state.orders.get(i, [])
+                               if list(o) != list(g.ops)]
+            for order in orders:
+                if label == "split":
+                    # split bands extend producer/consumer scopes; the paper
+                    # notes the O_s relaxation is off across split ops
+                    cands.append((label, P.plan_original(g, order)))
+                else:
+                    cands.append((label, P.plan_dmo(
+                        g, order, method=opt.method, profile=opt.profile)))
+        label, best = min(cands, key=lambda c: c[1].peak_bytes)
+        if opt.budget_s > 0:
+            # refine the best *searchable* candidate (split variants plan
+            # without the O_s relaxation, so ILS does not apply to them) and
+            # keep the overall winner
+            searchable = [c for c in cands if c[0] != "split"]
+            if searchable:
+                slabel, sbase = min(searchable, key=lambda c: c[1].peak_bytes)
+                sp = P.plan_search(sbase.graph, sbase.order,
+                                   method=opt.method, budget_s=opt.budget_s,
+                                   seed=opt.seed, profile=opt.profile)
+                state.log.append(
+                    f"plan: ILS search ({opt.budget_s:.1f}s) "
+                    f"-> {sp.peak_bytes}")
+                if sp.peak_bytes < best.peak_bytes:
+                    best, label = sp, slabel
+        state.plan, state.winner = best, label
+        state.log.append(
+            f"plan: {len(cands)} candidate(s), best={best.strategy} "
+            f"on {label}, peak={best.peak_bytes}")
+
+
+#: Op kinds the numeric arena executor implements (see repro.core.arena).
+_ARENA_KINDS = frozenset({
+    "conv2d", "depthwise_conv2d", "pool", "elementwise", "softmax",
+    "fully_connected", "matmul", "concat", "pad", "mean", "reshape",
+})
+#: Numeric verification replays every op row-by-row in NumPy — cap the work.
+_NUMERIC_ELEM_LIMIT = 300_000
+
+
+def _numeric_verifiable(g: Graph) -> bool:
+    if any(op.kind not in _ARENA_KINDS or "row_range" in op.params
+           for op in g.ops):
+        return False
+    if _has_strided_views(g):  # view offsets not representable in ArenaExec
+        return False
+    if any(t.dtype_bytes != 4 for t in g.arena_tensors()):
+        return False
+    return sum(t.elems for t in g.arena_tensors()) <= _NUMERIC_ELEM_LIMIT
+
+
+@register_pass
+class VerifyPass(Pass):
+    """Plan safety: always the formal no-clobber constraint check; plus the
+    bit-exact arena-vs-private-buffers execution (:func:`verify_plan`) when
+    the winning graph is executable by the NumPy arena interpreter
+    (``verify="numeric"`` forces it and raises when it is not)."""
+    name = "verify"
+
+    def run(self, state: PipelineState) -> None:
+        if state.plan is None or state.options.verify == "off":
+            return
+        state.plan.validate()
+        state.verified = "constraints"
+        mode = state.options.verify
+        if mode == "constraints":
+            return
+        if not _numeric_verifiable(state.plan.graph):
+            if mode == "numeric":
+                raise ValueError(
+                    "verify='numeric' requested but the winning graph is not "
+                    "executable by the arena interpreter (unsupported op "
+                    "kind, split bands, aggregated views, non-f32 dtype, or "
+                    "too large)")
+            state.log.append("verify: constraints only (graph not "
+                             "numerically executable)")
+            return
+        verify_plan(state.plan.graph, state.plan)
+        state.verified = "numeric"
+        state.log.append("verify: arena execution bit-exact")
+
+
+# ---------------------------------------------------------------------------
+# The entrypoint + plan cache
+# ---------------------------------------------------------------------------
+
+_PLAN_CACHE: Dict[Tuple[str, str], CompiledPlan] = {}
+_CACHE_STATS = {"hits": 0, "misses": 0}
+#: Incremented once per actual pipeline execution (never on a cache hit).
+PIPELINE_RUNS = 0
+
+
+def cache_info() -> Dict[str, int]:
+    return {"size": len(_PLAN_CACHE), **_CACHE_STATS}
+
+
+def cache_clear() -> None:
+    _PLAN_CACHE.clear()
+    _CACHE_STATS["hits"] = _CACHE_STATS["misses"] = 0
+
+
+def compile(graph: Graph, *, profile: str = "paper",
+            method: str = "algorithmic", budget_s: float = 0.0,
+            seed: int = 0, passes: Optional[Sequence[str]] = None,
+            split: str = "auto", split_max_parts: int = 8,
+            split_ops_limit: int = 150,
+            verify: str = "auto", cache: bool = True) -> CompiledPlan:
+    """Compile ``graph`` to an arena plan through the registered pass chain.
+
+    Args:
+        graph: tensor-op graph (see :mod:`repro.core.graph`).
+        profile: overlap profile — ``"paper"`` (only the op kinds the paper
+            derives O_s for) or ``"extended"``.
+        method: O_s calculator (``analytic``/``algorithmic``/``trace``/``auto``).
+        budget_s: wall-clock budget for the ILS search refinement (0 = off,
+            fully deterministic pipeline).
+        passes: pass names to run, in order (default:
+            :func:`default_passes`). Unknown names raise.
+        split: operation-splitting mode (``auto``/``on``/``off``);
+            ``split_ops_limit`` is the op-count gate for ``auto``.
+        verify: verification mode (``auto``/``constraints``/``numeric``/``off``).
+        cache: look up / populate the content-addressed plan cache.
+
+    Returns:
+        A :class:`CompiledPlan`. Cache hits return the memoised result
+        (``cache_hit=True``) without re-running any pass — its graph/plan
+        objects belong to the first structurally identical compile (see the
+        :class:`CompiledPlan` cache-hit note).
+    """
+    if profile not in ("paper", "extended"):
+        raise ValueError(f"unknown overlap profile {profile!r} "
+                         "(expected 'paper' or 'extended')")
+    if method not in ("auto", "analytic", "algorithmic", "trace"):
+        raise ValueError(f"unknown O_s method {method!r}")
+    if split not in ("auto", "on", "off"):
+        raise ValueError(f"unknown split mode {split!r}")
+    if verify not in ("auto", "constraints", "numeric", "off"):
+        raise ValueError(f"unknown verify mode {verify!r}")
+    opts = CompileOptions(profile=profile, method=method, budget_s=budget_s,
+                          seed=seed, split=split,
+                          split_max_parts=split_max_parts,
+                          split_ops_limit=split_ops_limit, verify=verify)
+    names = tuple(passes) if passes is not None else default_passes()
+    unknown = [n for n in names if n not in _PASSES]
+    if unknown:
+        raise ValueError(f"unknown pass(es) {unknown}; "
+                         f"available: {available_passes()}")
+    t0 = time.perf_counter()
+    key = (graph_signature(graph), opts.key() + repr(names))
+    if cache and key in _PLAN_CACHE:
+        _CACHE_STATS["hits"] += 1
+        entry = _PLAN_CACHE[key]
+        return dataclasses.replace(entry, cache_hit=True,
+                                   log=list(entry.log),
+                                   compile_s=time.perf_counter() - t0)
+    _CACHE_STATS["misses"] += 1
+
+    global PIPELINE_RUNS
+    PIPELINE_RUNS += 1
+    state = PipelineState(original=graph, options=opts,
+                          variants=[("input", graph)])
+    for n in names:
+        _PASSES[n].run(state)
+    if state.plan is None:  # "plan" not in the chain: fall back to baseline
+        if state.baseline is None:
+            state.baseline = P.plan_original(graph)
+        state.plan = state.baseline
+        state.winner = "input"
+        if "verify" in names:  # honour the verify contract for the fallback
+            _PASSES["verify"].run(state)
+    if state.baseline is None:
+        state.baseline = state.plan
+    result = CompiledPlan(
+        original=graph, graph=state.plan.graph, plan=state.plan,
+        baseline=state.baseline, passes=names, log=state.log, key=key[0],
+        winner=state.winner, verified=state.verified,
+        recompute_elems=(state.recompute_elems
+                         if state.winner == "split" else 0),
+        compile_s=time.perf_counter() - t0)
+    if cache:
+        _PLAN_CACHE[key] = result
+        # hand out a copy of the mutable log so caller edits can't poison
+        # the cached entry (the hit path copies symmetrically)
+        return dataclasses.replace(result, log=list(result.log))
+    return result

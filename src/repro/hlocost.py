@@ -191,9 +191,11 @@ def _dot_flops(op: Op, symtab: Dict[str, str]) -> float:
     del rbytes
     m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
     cdims = [int(x) for x in m.group(1).split(",") if x] if m else []
-    lhs_ref = op.operands[0].lstrip("%") if op.operands else ""
-    lhs_type = symtab.get(lhs_ref, "")
-    _, ldims = _shape_info(lhs_type)
+    lhs = op.operands[0] if op.operands else ""
+    if "[" in lhs:        # inline-typed operand: "f32[128,128]{1,0} %name"
+        _, ldims = _shape_info(lhs)
+    else:
+        _, ldims = _shape_info(symtab.get(lhs.lstrip("%"), ""))
     k = 1
     for c in cdims:
         if c < len(ldims):

@@ -168,6 +168,28 @@ def unembed(cfg: ArchConfig, params: Params, x: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
+@jax.custom_vjp
+def identity_barrier(x: jax.Array) -> jax.Array:
+    """``optimization_barrier`` with a straight-through gradient.
+
+    jax 0.4.x defines no differentiation rule for the barrier primitive, so
+    using it bare inside a scan body breaks every train step. The barrier is
+    semantically the identity — the backward pass forwards cotangents
+    unchanged while the forward keeps the XLA scheduling fence."""
+    return jax.lax.optimization_barrier(x)
+
+
+def _identity_barrier_fwd(x):
+    return jax.lax.optimization_barrier(x), None
+
+
+def _identity_barrier_bwd(_, ct):
+    return (ct,)
+
+
+identity_barrier.defvjp(_identity_barrier_fwd, _identity_barrier_bwd)
+
+
 #: layers per remat group: the scan saves one residual carry per GROUP, so
 #: grouping halves (G=2) the dominant carry stacks at the cost of one extra
 #: in-group forward during backprop (§Perf hillclimb 2). Only worth it for
@@ -185,7 +207,7 @@ def forward_hidden(cfg: ArchConfig, params: Params, inputs: jax.Array,
                         and cfg.num_layers >= REMAT_GROUP_MIN_LAYERS) else 1
 
     def body(x, bp):
-        x = jax.lax.optimization_barrier(x)
+        x = identity_barrier(x)
         aux = jnp.zeros((), jnp.float32)
         for i in range(g):  # unrolled group (g small)
             bpi = jax.tree.map(lambda t: t[i], bp) if g > 1 else bp
@@ -212,7 +234,7 @@ def forward_train(cfg: ArchConfig, params: Params, inputs: jax.Array,
         # barrier pins the saved residual to the carry's own dtype (bf16) —
         # without it XLA hoists the norm's f32 convert into the residual
         # stack, doubling the remat-carry memory (see EXPERIMENTS.md §Perf)
-        x = jax.lax.optimization_barrier(x)
+        x = identity_barrier(x)
         x, _, a = _block_seq(cfg, bp, x, window=0)
         return x, a  # aux as a scan output keeps the carry bf16-only
 

@@ -1,0 +1,42 @@
+"""Import-or-shim for ``hypothesis`` so tier-1 collection works offline.
+
+When hypothesis is installed, this re-exports the real ``given`` /
+``settings`` / ``strategies``. When it is not (air-gapped CI image), the
+shims keep module import working — strategy constructors become no-ops and
+``@given`` replaces the test with a clean skip — so the *non-property* tests
+in the same module still collect and run.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _NullStrategies:
+        """Stand-in for ``hypothesis.strategies``: every strategy
+        constructor accepts anything and returns None (the values are never
+        drawn — the test body is replaced by a skip)."""
+
+        def __getattr__(self, name):
+            def strategy(*args, **kwargs):
+                return None
+            strategy.__name__ = name
+            return strategy
+
+    st = _NullStrategies()
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            def skipped():
+                pytest.skip("hypothesis not installed (offline environment)")
+            skipped.__name__ = fn.__name__
+            skipped.__doc__ = fn.__doc__
+            return skipped
+        return deco

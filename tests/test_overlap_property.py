@@ -1,6 +1,6 @@
 """Property-based invariants of the O_s calculators (hypothesis)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.graph import Graph, conv_out_dim
 from repro.core.overlap import (safe_overlap_algorithmic,

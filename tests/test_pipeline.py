@@ -1,0 +1,228 @@
+"""The unified compile pipeline: pass chain, plan cache, zoo-wide safety,
+and the training/differentiation regression (custom_vjp identity barrier)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core import pipeline, zoo
+from repro.core.graph import Graph
+from repro.core.planner import plan_original
+from repro.models import transformer as T
+
+
+# ---------------------------------------------------------------------------
+# Training / differentiation regression (the seed-red bug): the bare
+# optimization_barrier primitive has no VJP in jax 0.4.x — the identity
+# barrier must pass gradients straight through under both remat settings.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("remat", [False, True], ids=["noremat", "remat"])
+def test_forward_train_differentiable(remat):
+    cfg = registry()["yi-6b"].reduced()
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key)
+    toks = jax.random.randint(key, (2, 8), 0, cfg.vocab_size)
+
+    def loss(p):
+        logits, aux = T.forward_train(cfg, p, toks, remat=remat)
+        return logits.astype(jnp.float32).mean() + aux
+
+    grads = jax.grad(loss)(params)
+    flat = jax.tree_util.tree_leaves(grads)
+    assert flat and all(np.isfinite(np.asarray(g)).all() for g in flat)
+    # the embedding gradient flows through every scan layer's barrier
+    assert float(jnp.abs(grads["embed"]).max()) > 0.0
+
+
+@pytest.mark.parametrize("remat", [False, True], ids=["noremat", "remat"])
+def test_forward_hidden_differentiable(remat):
+    cfg = registry()["yi-6b"].reduced()
+    key = jax.random.PRNGKey(1)
+    params = T.init_params(cfg, key)
+    toks = jax.random.randint(key, (1, 8), 0, cfg.vocab_size)
+
+    def loss(p):
+        hidden, aux = T.forward_hidden(cfg, p, toks, remat=remat)
+        return hidden.astype(jnp.float32).mean() + aux
+
+    grads = jax.grad(loss)(params)
+    assert all(np.isfinite(np.asarray(g)).all()
+               for g in jax.tree_util.tree_leaves(grads))
+
+
+def test_identity_barrier_is_identity_with_straight_through_grad():
+    x = jnp.arange(6.0).reshape(2, 3)
+    np.testing.assert_array_equal(np.asarray(T.identity_barrier(x)),
+                                  np.asarray(x))
+    g = jax.grad(lambda v: (T.identity_barrier(v) ** 2).sum())(x)
+    np.testing.assert_allclose(np.asarray(g), 2 * np.asarray(x))
+
+
+# ---------------------------------------------------------------------------
+# Pipeline: cache behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_cache_hit_returns_identical_plan_without_rerunning_passes():
+    pipeline.cache_clear()
+    g1 = zoo.mobilenet_v1(1.0, 224, 4)
+    t0 = time.perf_counter()
+    first = pipeline.compile(g1)
+    t_first = time.perf_counter() - t0
+    runs = pipeline.PIPELINE_RUNS
+
+    g2 = zoo.mobilenet_v1(1.0, 224, 4)  # fresh build, same content
+    t0 = time.perf_counter()
+    second = pipeline.compile(g2)
+    t_second = time.perf_counter() - t0
+
+    assert not first.cache_hit and second.cache_hit
+    assert pipeline.PIPELINE_RUNS == runs, "cache hit re-ran the pipeline"
+    assert second.plan is first.plan, "hit must return the memoised plan"
+    assert second.peak_bytes == first.peak_bytes
+    assert pipeline.cache_info()["hits"] >= 1
+    assert t_second * 10 <= t_first, (
+        f"repeat compile not >=10x faster: {t_first:.4f}s vs {t_second:.4f}s")
+
+
+def test_cache_distinguishes_options_and_content():
+    pipeline.cache_clear()
+    g = zoo.mobilenet_v1(0.25, 128, 1)
+    a = pipeline.compile(g)
+    b = pipeline.compile(g, profile="extended")
+    assert not b.cache_hit, "different options must not collide"
+    c = pipeline.compile(zoo.mobilenet_v1(0.25, 224, 1))
+    assert not c.cache_hit, "different graph content must not collide"
+    d = pipeline.compile(zoo.mobilenet_v1(0.25, 128, 1))
+    assert d.cache_hit and d.plan is a.plan
+
+
+def test_graph_signature_ignores_names_but_not_structure():
+    def build(name, ch):
+        g = Graph(name)
+        x = g.tensor(f"{name}_x", (8, 8, 3), 4, "input")
+        g.op("conv2d", [x], (8, 8, ch),
+             dict(kernel=(3, 3), stride=(1, 1), padding="same"),
+             name=f"{name}_c", out_kind="output")
+        return g
+
+    assert (pipeline.graph_signature(build("a", 4))
+            == pipeline.graph_signature(build("b", 4)))
+    assert (pipeline.graph_signature(build("a", 4))
+            != pipeline.graph_signature(build("a", 5)))
+
+
+# ---------------------------------------------------------------------------
+# Pipeline: pass chain
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_pass_rejected():
+    with pytest.raises(ValueError, match="unknown pass"):
+        pipeline.compile(zoo.mobilenet_v1(0.25, 128, 1), passes=("nope",))
+
+
+def test_passes_individually_toggleable():
+    g = zoo.mobilenet_v1(0.25, 128, 1, external_input=True)
+    plain = pipeline.compile(g, passes=("baseline", "plan", "verify"))
+    split = pipeline.compile(g, split="on",
+                             passes=("baseline", "split", "serialise",
+                                     "plan", "verify"))
+    assert plain.passes == ("baseline", "plan", "verify")
+    assert split.winner == "split" and split.recompute_elems > 0
+    # §II.A paper numbers: 96 KB -> <=66 KB via splitting alone
+    assert plain.baseline_bytes == 96 * 1024
+    assert split.peak_bytes <= 66 * 1024
+
+
+def test_numeric_verification_runs_on_small_f32_graphs():
+    g = Graph("mini")
+    h = g.tensor("x", (12, 12, 3), 4, "input")
+    h = g.op("conv2d", [h], (6, 6, 8),
+             dict(kernel=(3, 3), stride=(2, 2), padding="same"))
+    h = g.op("depthwise_conv2d", [h], (6, 6, 8),
+             dict(kernel=(3, 3), stride=(1, 1), padding="same"))
+    g.op("softmax", [g.op("fully_connected",
+                          [g.op("reshape", [h], (h.elems,))], (10,))],
+         (10,), out_kind="output")
+    cp = pipeline.compile(g, verify="numeric")
+    assert cp.verified == "numeric"
+    assert cp.peak_bytes <= cp.baseline_bytes
+    assert "verify: arena execution bit-exact" in "\n".join(cp.log)
+
+
+def test_alias_plus_splittable_pair_compiles():
+    """Regression: a graph mixing a reshape alias with a profitable conv
+    split used to crash — split's tensor remapping collapses the alias into
+    a self-producing op and serialisation saw a cycle."""
+    g = Graph("alias_split")
+    h = g.tensor("x", (12, 12, 3), 4, "input")
+    h = g.op("conv2d", [h], (12, 12, 8),
+             dict(kernel=(3, 3), stride=(1, 1), padding="same"))
+    h = g.op("conv2d", [h], (6, 6, 8),
+             dict(kernel=(3, 3), stride=(2, 2), padding="same"))
+    g.op("softmax", [g.op("fully_connected",
+                          [g.op("reshape", [h], (h.elems,))], (10,))],
+         (10,), out_kind="output")
+    cp = pipeline.compile(g, cache=False)
+    assert cp.peak_bytes <= cp.baseline_bytes
+    assert "split: skipped (aliased tensors)" in cp.log
+
+
+def test_compile_log_mutations_do_not_poison_cache():
+    pipeline.cache_clear()
+    g = zoo.mobilenet_v1(0.25, 128, 1)
+    first = pipeline.compile(g)
+    first.log.append("poison-miss")
+    hit = pipeline.compile(g)
+    assert "poison-miss" not in hit.log
+    hit.log.append("poison-hit")
+    again = pipeline.compile(g)
+    assert "poison-hit" not in again.log
+
+
+def test_cache_hit_offsets_reachable_by_name():
+    """A hit's plan references the memoised graph's tensors; names are the
+    stable correlation key for callers holding their own build."""
+    pipeline.cache_clear()
+    pipeline.compile(zoo.mobilenet_v1(0.25, 128, 1))
+    hit = pipeline.compile(zoo.mobilenet_v1(0.25, 128, 1))
+    assert hit.cache_hit
+    offs = hit.offsets_by_name()
+    assert offs and all(isinstance(k, str) for k in offs)
+    assert max(offs.values()) < hit.peak_bytes
+
+
+def test_split_ops_limit_is_configurable():
+    g = zoo.mobilenet_v1(0.25, 128, 1, external_input=True)
+    cp = pipeline.compile(g, split_ops_limit=1, cache=False)
+    assert any("split: skipped (30 ops > 1)" in line for line in cp.log)
+
+
+def test_report_is_unified():
+    cp = pipeline.compile(zoo.mobilenet_v1(0.25, 128, 1))
+    r = cp.report()
+    assert "passes:" in r and "baseline" in r and "# plan" in r
+    assert f"{cp.peak_bytes}" in r
+
+
+# ---------------------------------------------------------------------------
+# Pipeline: zoo-wide safety — every model compiles to a verification-clean
+# plan no worse than the non-overlapping plan_original baseline.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", list(zoo.TABLE3_MODELS))
+def test_compile_zoo_clean_and_no_worse_than_original(name):
+    g = zoo.TABLE3_MODELS[name][0]()
+    cp = pipeline.compile(g)
+    assert cp.verified in ("numeric", "constraints")
+    cp.plan.validate()  # independent re-check of the no-clobber constraints
+    assert cp.peak_bytes <= cp.baseline_bytes
+    # the pipeline baseline IS plan_original of the input graph
+    assert cp.baseline_bytes == plan_original(g).peak_bytes

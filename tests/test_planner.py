@@ -2,7 +2,7 @@
 paper's MobileNet numbers."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import zoo
 from repro.core.arena import verify_plan

@@ -73,8 +73,10 @@ _SUBPROC = textwrap.dedent("""
         jitted = jax.jit(fn, donate_argnums=(0,),
                          in_shardings=(st_sh, b_sh), out_shardings=(st_sh, None))
         compiled = jitted.lower(state, batch).compile()
-        print(json.dumps({{"ok": True,
-                          "flops": compiled.cost_analysis().get("flops", 0)}}))
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):  # older jax: one dict per device
+            ca = ca[0] if ca else {{}}
+        print(json.dumps({{"ok": True, "flops": ca.get("flops", 0)}}))
 """)
 
 
@@ -84,7 +86,9 @@ def test_subprocess_tiny_mesh_train_lowers(arch):
     """Real SPMD compile of a reduced config on an 8-device virtual mesh."""
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    env.pop("JAX_PLATFORMS", None)
+    # the forced 8-device host platform only exists on the CPU backend; an
+    # accelerator plugin on the machine would otherwise win auto-selection
+    env["JAX_PLATFORMS"] = "cpu"
     r = subprocess.run([sys.executable, "-c", _SUBPROC.format(arch=arch)],
                        capture_output=True, text=True, env=env, timeout=600)
     assert r.returncode == 0, r.stderr[-2000:]
