@@ -1,5 +1,7 @@
 """Benchmark: Pallas kernel wall-time (interpret mode on CPU — correctness
-costs, not TPU perf) + arena footprint savings of the DMO dwconv kernel."""
+costs, not TPU perf) + arena footprint savings of the DMO dwconv kernel,
+plus the generalised executor backends: the same planned arena run through
+the numpy row-interpreter and the pallas arena-ops kernel sequence."""
 from __future__ import annotations
 
 import time
@@ -8,6 +10,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import exec as X
+from repro.core.graph import Graph
+from repro.core.planner import plan_dmo
 from repro.kernels import ops, ref
 
 
@@ -17,6 +22,23 @@ def _time(fn, *args, n=3):
     for _ in range(n):
         jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / n * 1e6
+
+
+def _exec_graph() -> Graph:
+    """conv2d -> depthwise -> pool -> fully_connected: the four acceptance
+    op kinds through one shared arena."""
+    g = Graph("kb_exec")
+    h = g.tensor("x", (32, 32, 8), 4, "input")
+    h = g.op("conv2d", [h], (16, 16, 16),
+             dict(kernel=(3, 3), stride=(2, 2), padding="same"))
+    h = g.op("depthwise_conv2d", [h], (16, 16, 16),
+             dict(kernel=(3, 3), stride=(1, 1), padding="same"))
+    h = g.op("pool", [h], (8, 8, 16),
+             dict(kernel=(2, 2), stride=(2, 2), padding="valid", mode="avg"))
+    g.op("fully_connected", [g.op("reshape", [h], (h.elems,))], (10,),
+         out_kind="output")
+    g.validate()
+    return g
 
 
 def run(csv_rows):
@@ -29,6 +51,17 @@ def run(csv_rows):
                      f"arena={arena}B two-buffer={two}B "
                      f"saving={100 * (1 - arena / two):.0f}%"))
 
+    # executor backends over the same DMO plan (one flat arena, 4 op kinds)
+    g = _exec_graph()
+    plan = plan_dmo(g)
+    inputs = X.random_inputs(g)
+    weights = X.synth_weights(g)
+    for backend in ("numpy", "pallas"):
+        be = X.get_backend(backend)
+        us = _time(lambda: be.execute(plan, inputs, weights))
+        csv_rows.append((f"kernels/arena_exec_{backend}_32x32x8", us,
+                         f"arena={plan.peak_bytes}B ops={len(plan.order)}"))
+
     q = jnp.asarray(r.standard_normal((256, 4, 64)), jnp.float32)
     k = jnp.asarray(r.standard_normal((256, 4, 64)), jnp.float32)
     us = _time(lambda a, b: ops.flash_attention(a, b, b), q, k)
@@ -38,8 +71,8 @@ def run(csv_rows):
                      f"max_err_vs_oracle={err:.2e}"))
 
     xx = jnp.asarray(r.standard_normal((512, 128)), jnp.float32)
-    g = jnp.asarray(r.standard_normal((128,)), jnp.float32)
-    us = _time(lambda a, b: ops.rmsnorm_residual(a, b, a), xx, g)
+    g2 = jnp.asarray(r.standard_normal((128,)), jnp.float32)
+    us = _time(lambda a, b: ops.rmsnorm_residual(a, b, a), xx, g2)
     csv_rows.append(("kernels/inplace_rmsnorm_512x128", us, "aliased in/out"))
     return csv_rows
 

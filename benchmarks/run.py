@@ -1,11 +1,18 @@
 """Benchmark harness: one module per paper table/figure + framework extras.
-Prints ``name,us_per_call,derived`` CSV rows."""
+Prints ``name,us_per_call,derived`` CSV rows.
+
+Benchmark reruns start warm: the compile plan cache persists to disk
+(content-addressed by graph signature under ``$REPRO_DMO_CACHE_DIR``,
+default ``~/.cache/repro-dmo``) — set ``REPRO_DMO_DISK_CACHE=0`` to force
+cold planning."""
 from __future__ import annotations
 
+import os
 import sys
 
 
 def main() -> None:
+    os.environ.setdefault("REPRO_DMO_DISK_CACHE", "1")
     from benchmarks import (arch_activation_plans, fig2_arena_report,
                             kernel_bench, op_removal, op_splitting,
                             roofline_report, table2_os_precision,
@@ -27,6 +34,8 @@ def main() -> None:
     print("name,us_per_call,derived")
     for n, us, d in rows:
         print(f"{n},{us:.1f},{d}")
+    from repro.core.pipeline import cache_info
+    print(f"# plan cache: {cache_info()}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -34,19 +34,20 @@ print("  bottom-up trace (small op):", safe_overlap_trace(small.ops[0]))
 # ---------------------------------------------------------------------------
 print("\nMobileNet v1 0.25 128 (8-bit) — the paper's flagship edge model:")
 model = zoo.mobilenet_v1(0.25, 128, 1)
-plan = compile_graph(model, budget_s=8.0)        # ILS search (NP-hard)
+plan = compile_graph(model, budget_s="auto")     # autoscaled ILS (NP-hard)
 print(f"  original arena: {plan.baseline_bytes / 1024:.0f} KB (paper: 96)")
 print(f"  DMO arena:      {plan.peak_bytes / 1024:.0f} KB (paper: 64)")
 print(f"  saving:         {plan.saving_pct:.1f}%  verified={plan.verified}")
 
-again = compile_graph(zoo.mobilenet_v1(0.25, 128, 1), budget_s=8.0)
+again = compile_graph(zoo.mobilenet_v1(0.25, 128, 1), budget_s="auto")
 print(f"  re-compile of the same graph: cache_hit={again.cache_hit} "
       f"({again.compile_s * 1e3:.2f} ms)")
 
 # ---------------------------------------------------------------------------
-# 3. Bit-exact verification: run the model INSIDE the planned arena. The
-#    pipeline's verify pass does this automatically for f32 graphs the
-#    NumPy arena interpreter can execute.
+# 3. Execute INSIDE the planned arena. compile(backend="pallas") verifies
+#    three tiers — constraints, bit-exact numpy arena execution, and the
+#    pallas kernel sequence (one flat donated buffer) cross-checked against
+#    the numpy backend — and .execute() then runs on the chosen backend.
 # ---------------------------------------------------------------------------
 mini = Graph("mini")
 h = mini.tensor("x", (12, 12, 3), 4, "input")
@@ -59,7 +60,14 @@ h = mini.op("conv2d", [h], (6, 6, 16),
 mini.op("softmax", [mini.op("fully_connected",
                             [mini.op("reshape", [h], (h.elems,))], (10,))],
         (10,), out_kind="output")
-compiled = compile_graph(mini, verify="numeric")  # raises on any clobber
-assert compiled.verified == "numeric"
-print("\nmini-net: arena execution is bit-exact vs private buffers ✓")
+compiled = compile_graph(mini, verify="numeric", backend="pallas")
+assert compiled.verified == "numeric+pallas"     # raises on any clobber
+print("\nmini-net: arena execution bit-exact vs private buffers, and the "
+      "pallas lowering matches the numpy backend ✓")
+for be in ("numpy", "pallas"):
+    outs = compiled.execute(backend=be)
+    print(f"  executed on backend={be:6s} inside one "
+          f"{compiled.peak_bytes}-byte arena "
+          f"(peak {compiled.peak_bytes / 1024:.1f} KB, "
+          f"outputs: {', '.join(sorted(outs))})")
 print(compiled.report())

@@ -1,303 +1,24 @@
-"""Arena execution + plan safety verification (the TFMin analogue).
+"""Legacy arena-execution API — thin wrapper over the ``numpy`` executor
+backend.
 
-Two executors over the same NumPy reference ops:
+The executors themselves moved into the pluggable backend layer:
 
-- :func:`run_reference` — private buffer per tensor (ground truth);
-- :func:`run_in_arena`  — all intermediates live inside ONE flat byte arena
-  at the offsets chosen by a :class:`~repro.core.planner.Plan`, each op
-  processing its output *row by row in ascending index order* (reads of a row
-  happen no later, and writes no earlier, than the reference element order —
-  so a plan safe for the element order is safe here).
+- op semantics (row loops, weight synthesis): :mod:`repro.core.exec.ops`
+- numpy backend (this module's old contents): :mod:`repro.core.exec.numpy_backend`
+- pallas backend (flat donated arena, Pallas kernels):
+  :mod:`repro.core.exec.pallas_backend`
 
-:func:`verify_plan` runs both and asserts bit-exact equality: if the plan
-overlapped any buffer unsafely, the arena execution clobbers a live value and
-the comparison fails. This is the open-source-tool verification described in
-the paper's §I.
+:func:`run_reference` / :func:`run_in_arena` / :func:`verify_plan` keep their
+historical signatures and bit-exact semantics; new code should go through
+:func:`repro.core.exec.get_backend` (or ``CompiledPlan.execute``) instead.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from repro.core.exec.numpy_backend import (ArenaExec, ReferenceExec,
+                                           run_in_arena, run_reference,
+                                           verify_plan)
 
-import numpy as np
-
-from repro.core.graph import Graph, Op, Tensor, pad_amount
-from repro.core.planner import Plan
-
-
-def _weights_for(op: Op, rng: np.random.Generator) -> Dict[str, np.ndarray]:
-    """Deterministic random weights per op (same for both executors)."""
-    w: Dict[str, np.ndarray] = {}
-    if op.kind == "conv2d":
-        kh, kw = op.params["kernel"]
-        ic = op.inputs[0].shape[-1]
-        oc = op.output.shape[-1]
-        w["filter"] = rng.standard_normal((kh, kw, ic, oc)).astype(np.float32)
-    elif op.kind == "depthwise_conv2d":
-        kh, kw = op.params["kernel"]
-        ic = op.inputs[0].shape[-1]
-        kc = op.params.get("multiplier", 1)
-        w["filter"] = rng.standard_normal((kh, kw, ic, kc)).astype(np.float32)
-    elif op.kind == "fully_connected":
-        idim = op.inputs[0].shape[-1]
-        od = op.output.shape[-1]
-        w["filter"] = rng.standard_normal((idim, od)).astype(np.float32)
-    return w
-
-
-def _pads(op: Op):
-    ih, iw = op.inputs[0].shape[-3], op.inputs[0].shape[-2]
-    oh, ow = op.output.shape[-3], op.output.shape[-2]
-    kh, kw = op.params["kernel"]
-    sh, sw = op.params.get("stride", (1, 1))
-    dh, dw = op.params.get("dilation", (1, 1))
-    if op.params.get("padding", "same") == "same":
-        return pad_amount(ih, oh, kh, sh, dh), pad_amount(iw, ow, kw, sw, dw)
-    return 0, 0
-
-
-def _conv_row(op: Op, x: np.ndarray, filt: np.ndarray, oy: int) -> np.ndarray:
-    """One output row of conv2d/depthwise (x is HWC)."""
-    ih, iw, ic = x.shape
-    oh, ow = op.output.shape[-3], op.output.shape[-2]
-    kh, kw = op.params["kernel"]
-    sh, sw = op.params.get("stride", (1, 1))
-    dh, dw = op.params.get("dilation", (1, 1))
-    ph, pw = _pads(op)
-    if op.kind == "conv2d":
-        oc = op.output.shape[-1]
-        row = np.zeros((ow, oc), np.float32)
-    else:
-        kc = op.params.get("multiplier", 1)
-        row = np.zeros((ow, ic * kc), np.float32)
-    for fy in range(kh):
-        iy = oy * sh - ph + fy * dh
-        if not 0 <= iy < ih:
-            continue
-        for fx in range(kw):
-            ixs = np.arange(ow) * sw - pw + fx * dw
-            valid = (ixs >= 0) & (ixs < iw)
-            src = x[iy, np.clip(ixs, 0, iw - 1), :]          # (Ow, ic)
-            src = np.where(valid[:, None], src, 0.0)
-            if op.kind == "conv2d":
-                row += src @ filt[fy, fx]                     # (Ow, oc)
-            else:
-                kc = op.params.get("multiplier", 1)
-                contrib = src[:, :, None] * filt[fy, fx][None, :, :]
-                row += contrib.reshape(ow, ic * kc)
-    return row
-
-
-def _pool_row(op: Op, x: np.ndarray, oy: int) -> np.ndarray:
-    ih, iw, c = x.shape
-    ow = op.output.shape[-2]
-    kh, kw = op.params["kernel"]
-    sh, sw = op.params.get("stride", (1, 1))
-    ph, pw = _pads(op)
-    mode = op.params.get("mode", "avg")
-    acc = np.full((ow, c), -np.inf if mode == "max" else 0.0, np.float32)
-    cnt = np.zeros((ow, 1), np.float32)
-    for fy in range(kh):
-        iy = oy * sh - ph + fy
-        if not 0 <= iy < ih:
-            continue
-        for fx in range(kw):
-            ixs = np.arange(ow) * sw - pw + fx
-            valid = (ixs >= 0) & (ixs < iw)
-            src = x[iy, np.clip(ixs, 0, iw - 1), :]
-            if mode == "max":
-                acc = np.where(valid[:, None], np.maximum(acc, src), acc)
-            else:
-                acc += np.where(valid[:, None], src, 0.0)
-                cnt += valid[:, None].astype(np.float32)
-    if mode == "avg":
-        acc = acc / np.maximum(cnt, 1.0)
-    return acc
-
-
-_ELEMENTWISE = {
-    "relu": lambda a: np.maximum(a, 0.0),
-    "relu6": lambda a: np.clip(a, 0.0, 6.0),
-    "sigmoid": lambda a: 1.0 / (1.0 + np.exp(-a)),
-    "identity": lambda a: a,
-    "add": lambda a, b: a + b,
-    "mul": lambda a, b: a * b,
-    "sub": lambda a, b: a - b,
-}
-
-
-class _Exec:
-    """Shared op evaluation; subclasses define tensor load/store."""
-
-    def __init__(self, graph: Graph, seed: int = 0):
-        self.graph = graph
-        self.rng = np.random.default_rng(seed)
-        self.weights = {id(op): _weights_for(op, self.rng) for op in graph.ops}
-
-    def load(self, t: Tensor) -> np.ndarray:
-        raise NotImplementedError
-
-    def store(self, t: Tensor, v: np.ndarray) -> None:
-        raise NotImplementedError
-
-    def store_rows(self, op: Op, rows) -> None:
-        """Default: materialise and store whole tensor (reference executor)."""
-        out = np.stack([r for r in rows], axis=0)
-        self.store(op.output, out.reshape(op.output.shape))
-
-    def run(self, order: Optional[List[Op]] = None) -> None:
-        for op in (order or self.graph.ops):
-            self.execute(op)
-
-    def execute(self, op: Op) -> None:
-        k = op.kind
-        if k in ("conv2d", "depthwise_conv2d"):
-            x = self.load(op.inputs[0]).reshape(op.inputs[0].shape)
-            x3 = x.reshape(x.shape[-3:])
-            filt = self.weights[id(op)]["filter"]
-            oh = op.output.shape[-3]
-            self.store_rows(op, (_conv_row(op, x3, filt, oy) for oy in range(oh)))
-        elif k == "pool":
-            x3 = self.load(op.inputs[0]).reshape(op.inputs[0].shape[-3:])
-            oh = op.output.shape[-3]
-            self.store_rows(op, (_pool_row(op, x3, oy) for oy in range(oh)))
-        elif k == "elementwise":
-            fn = _ELEMENTWISE[op.params.get("fn", "relu")]
-            xs = [self.load(t).reshape(t.shape) for t in op.inputs
-                  if t.kind != "weight"]
-            if len(xs) == 2 and xs[1].size != xs[0].size:
-                xs[1] = np.broadcast_to(xs[1], xs[0].shape)
-            self.store(op.output, fn(*xs).astype(np.float32))
-        elif k == "softmax":
-            x = self.load(op.inputs[0]).reshape(op.inputs[0].shape)
-            e = np.exp(x - x.max(axis=-1, keepdims=True))
-            self.store(op.output, (e / e.sum(axis=-1, keepdims=True)).astype(np.float32))
-        elif k == "fully_connected":
-            x = self.load(op.inputs[0]).reshape(-1, op.inputs[0].shape[-1])
-            filt = self.weights[id(op)]["filter"]
-            self.store(op.output, (x @ filt).reshape(op.output.shape).astype(np.float32))
-        elif k == "matmul":
-            a = self.load(op.inputs[0]).reshape(-1, op.inputs[0].shape[-1])
-            b = self.load(op.inputs[1]).reshape(op.inputs[1].shape)
-            self.store(op.output, (a @ b).reshape(op.output.shape).astype(np.float32))
-        elif k == "concat":
-            axis = op.params.get("axis", -1)
-            xs = [self.load(t).reshape(t.shape) for t in op.inputs]
-            self.store(op.output, np.concatenate(xs, axis=axis))
-        elif k == "pad":
-            x = self.load(op.inputs[0]).reshape(op.inputs[0].shape)
-            self.store(op.output, np.pad(x, op.params["paddings"]))
-        elif k == "mean":
-            x = self.load(op.inputs[0]).reshape(op.inputs[0].shape)
-            axes = tuple(op.params.get("axes", range(x.ndim - 1)))
-            self.store(op.output, x.mean(axis=axes).reshape(op.output.shape)
-                       .astype(np.float32))
-        elif k == "reshape":
-            pass  # aliasing no-op
-        else:
-            raise NotImplementedError(f"arena executor: {k}")
-
-
-class ReferenceExec(_Exec):
-    def __init__(self, graph: Graph, inputs: Dict[str, np.ndarray], seed: int = 0):
-        super().__init__(graph, seed)
-        self.vals: Dict[Tensor, np.ndarray] = {}
-        for t in graph.tensors:
-            if t.kind == "input":
-                self.vals[t.storage()] = inputs[t.name].astype(np.float32)
-
-    def load(self, t: Tensor) -> np.ndarray:
-        return self.vals[t.storage()]
-
-    def store(self, t: Tensor, v: np.ndarray) -> None:
-        self.vals[t.storage()] = v.reshape(t.shape)
-
-
-class ArenaExec(_Exec):
-    """Executes inside a single flat float32 arena at planned offsets.
-
-    Conv/pool outputs are written row-by-row (ascending), loads re-read the
-    arena for every row — faithfully modelling the MCU execution order that
-    DMO's O_s guarantees safe.
-    """
-
-    def __init__(self, graph: Graph, plan: Plan,
-                 inputs: Dict[str, np.ndarray], seed: int = 0):
-        super().__init__(graph, seed)
-        self.plan = plan
-        assert plan.peak_bytes % 4 == 0
-        self.arena = np.zeros(plan.peak_bytes // 4, np.float32)
-        for t in graph.tensors:
-            if t.kind == "input":
-                self.store(t, inputs[t.name].astype(np.float32))
-
-    def _slice(self, t: Tensor) -> slice:
-        s = t.storage()
-        off = self.plan.offsets[s]
-        assert off % 4 == 0 and s.dtype_bytes == 4, "arena exec is float32-only"
-        return slice(off // 4, off // 4 + s.elems)
-
-    def load(self, t: Tensor) -> np.ndarray:
-        return self.arena[self._slice(t)].copy().reshape(t.shape)
-
-    def store(self, t: Tensor, v: np.ndarray) -> None:
-        self.arena[self._slice(t)] = v.reshape(-1)
-
-    def store_rows(self, op: Op, rows) -> None:
-        out = op.output
-        sl = self._slice(out)
-        row_elems = out.elems // out.shape[-3]
-        base = sl.start
-        for i, r in enumerate(rows):
-            # NOTE: each row's inputs were loaded lazily by _conv_row via the
-            # generator *before* this store — but rows are produced one at a
-            # time, so reads for row i+1 happen after the row-i store, exactly
-            # the diagonal order.
-            self.arena[base + i * row_elems: base + (i + 1) * row_elems] = r.reshape(-1)
-
-    def execute(self, op: Op) -> None:
-        # conv/pool must re-load input per row to see the live arena
-        if op.kind in ("conv2d", "depthwise_conv2d", "pool"):
-            x_t = op.inputs[0]
-            filt = self.weights[id(op)].get("filter")
-            oh = op.output.shape[-3]
-
-            def rows():
-                for oy in range(oh):
-                    x3 = self.load(x_t).reshape(x_t.shape[-3:])
-                    if op.kind == "pool":
-                        yield _pool_row(op, x3, oy)
-                    else:
-                        yield _conv_row(op, x3, filt, oy)
-
-            self.store_rows(op, rows())
-        else:
-            super().execute(op)
-
-
-def run_reference(graph: Graph, inputs: Dict[str, np.ndarray],
-                  order: Optional[List[Op]] = None, seed: int = 0
-                  ) -> Dict[str, np.ndarray]:
-    ex = ReferenceExec(graph, inputs, seed)
-    ex.run(order)
-    return {t.name: ex.vals[t.storage()]
-            for t in graph.tensors if t.kind == "output"}
-
-
-def run_in_arena(graph: Graph, plan: Plan, inputs: Dict[str, np.ndarray],
-                 seed: int = 0) -> Dict[str, np.ndarray]:
-    ex = ArenaExec(graph, plan, inputs, seed)
-    ex.run(plan.order)
-    return {t.name: ex.load(t) for t in graph.tensors if t.kind == "output"}
-
-
-def verify_plan(graph: Graph, plan: Plan, seed: int = 0) -> None:
-    """Assert the planned arena execution is bit-exact vs private buffers."""
-    rng = np.random.default_rng(seed + 1)
-    inputs = {
-        t.name: rng.standard_normal(t.shape).astype(np.float32)
-        for t in graph.tensors if t.kind == "input"
-    }
-    ref = run_reference(graph, inputs, plan.order, seed)
-    got = run_in_arena(graph, plan, inputs, seed)
-    for k in ref:
-        np.testing.assert_array_equal(ref[k], got[k], err_msg=f"output {k}")
+__all__ = [
+    "ArenaExec", "ReferenceExec", "run_in_arena", "run_reference",
+    "verify_plan",
+]

@@ -1,0 +1,161 @@
+"""Executor backends: run a planned arena on a real runtime.
+
+A :class:`~repro.core.planner.Plan` (or a
+:class:`~repro.core.pipeline.CompiledPlan`) describes ONE flat arena —
+offsets plus the safe diagonal overlaps ``O_s`` — and the paper's claim is
+that it is *executable*: ops walk output rows in ascending order inside the
+shared buffer and never clobber a live value. This package turns that claim
+into a pluggable runtime layer:
+
+- ``numpy``  — :mod:`.numpy_backend`: the row-by-row NumPy interpreter
+  (bit-exact ground truth, used by ``verify_plan``);
+- ``pallas`` — :mod:`.pallas_backend`: lowers the plan to a sequence of
+  Pallas kernels indexing into one flat donated arena buffer
+  (``input_output_aliases`` threads the arena through the op sequence;
+  ``interpret=True`` runs on CPU CI, the TPU analogue of the paper's SRAM
+  arena being VMEM).
+
+Every backend implements the :class:`ArenaExecutor` protocol::
+
+    outputs = get_backend("pallas").execute(plan_or_compiled, inputs, weights)
+
+``inputs``/``weights`` default to the deterministic synthesis of
+:mod:`repro.core.exec.ops`, so two backends handed the same (plan, seed)
+execute the identical network and can be diffed output-for-output
+(:func:`cross_check`).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Protocol, Tuple
+
+import numpy as np
+
+from repro.core.exec import ops
+from repro.core.exec.ops import (ELEMENTWISE, SUPPORTED_KINDS, executability,
+                                 executable, random_inputs, synth_weights)
+from repro.core.graph import Graph
+from repro.core.planner import Plan
+
+
+class ArenaExecutor(Protocol):
+    """An executor backend: runs a planned graph inside its flat arena."""
+
+    #: registry name ("numpy", "pallas", ...)
+    name: str
+
+    def execute(self, plan_or_compiled, inputs=None, weights=None, *,
+                seed: int = 0) -> Dict[str, np.ndarray]:
+        """Execute ``plan_or_compiled`` (a Plan or CompiledPlan) and return
+        the model outputs keyed by tensor name. ``inputs`` / ``weights``
+        default to the deterministic per-seed synthesis shared by all
+        backends."""
+        ...
+
+
+def unwrap_plan(plan_or_compiled) -> Tuple[Plan, Graph]:
+    """Accept a Plan or a CompiledPlan; return (plan, executed graph)."""
+    if isinstance(plan_or_compiled, Plan):
+        return plan_or_compiled, plan_or_compiled.graph
+    plan = getattr(plan_or_compiled, "plan", None)
+    if isinstance(plan, Plan):
+        return plan, plan.graph
+    raise TypeError(f"expected Plan or CompiledPlan, got "
+                    f"{type(plan_or_compiled).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# Backend registry
+# ---------------------------------------------------------------------------
+
+_FACTORIES: Dict[str, Callable[..., ArenaExecutor]] = {}
+_INSTANCES: Dict[str, ArenaExecutor] = {}
+
+
+def register_backend(name: str, factory: Callable[..., ArenaExecutor]) -> None:
+    _FACTORIES[name] = factory
+    _INSTANCES.pop(name, None)  # re-registration must not serve a stale one
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(_FACTORIES)
+
+
+def get_backend(name: str, **kwargs: Any) -> ArenaExecutor:
+    """Backend instance by name. Default-configured instances are cached;
+    passing kwargs constructs a fresh one."""
+    if name not in _FACTORIES:
+        raise ValueError(
+            f"unknown executor backend {name!r}; available: "
+            f"{available_backends()}")
+    if kwargs:
+        return _FACTORIES[name](**kwargs)
+    if name not in _INSTANCES:
+        _INSTANCES[name] = _FACTORIES[name]()
+    return _INSTANCES[name]
+
+
+def _numpy_factory(**kw) -> ArenaExecutor:
+    from repro.core.exec.numpy_backend import NumpyExecutor
+    return NumpyExecutor(**kw)
+
+
+def _pallas_factory(**kw) -> ArenaExecutor:
+    # imported lazily: the core planning path must not pay the jax import
+    from repro.core.exec.pallas_backend import PallasExecutor
+    return PallasExecutor(**kw)
+
+
+register_backend("numpy", _numpy_factory)
+register_backend("pallas", _pallas_factory)
+
+
+# ---------------------------------------------------------------------------
+# Cross-backend verification
+# ---------------------------------------------------------------------------
+
+#: fp32 tolerance for backends whose accumulations XLA may reassociate
+#: relative to the numpy loop order. The single source of truth — the verify
+#: pass, verify_plan and cross_check all compare through it.
+FP32_RTOL = 1e-4
+FP32_ATOL = 1e-4
+
+
+def compare_outputs(ref: Dict[str, np.ndarray], got: Dict[str, np.ndarray],
+                    exact: bool, label: str) -> None:
+    """Assert two output dicts match: bit-exact, or at the shared fp32
+    tolerance. Raises ``AssertionError`` on any mismatch."""
+    assert ref.keys() == got.keys(), f"{label}: output sets differ"
+    for k in ref:
+        if exact:
+            np.testing.assert_array_equal(got[k], ref[k],
+                                          err_msg=f"output {k} ({label})")
+        else:
+            np.testing.assert_allclose(got[k], ref[k], rtol=FP32_RTOL,
+                                       atol=FP32_ATOL,
+                                       err_msg=f"output {k} ({label})")
+
+
+def cross_check(plan_or_compiled, seed: int = 0,
+                backends: Tuple[str, str] = ("numpy", "pallas")) -> None:
+    """Execute the plan on both backends with identical inputs/weights and
+    assert the arena outputs agree (fp32 tolerance: XLA may reassociate the
+    dot-product accumulations the numpy semantics run in loop order).
+    Raises ``AssertionError`` on any mismatch."""
+    plan, graph = unwrap_plan(plan_or_compiled)
+    reason = executability(graph)
+    if reason is not None:
+        raise ValueError(f"graph is not executable by arena backends: {reason}")
+    inputs = random_inputs(graph, seed)
+    weights = synth_weights(graph, seed)
+    a = get_backend(backends[0]).execute(plan, inputs, weights, seed=seed)
+    b = get_backend(backends[1]).execute(plan, inputs, weights, seed=seed)
+    compare_outputs(a, b, exact=False,
+                    label=f"{backends[1]} vs {backends[0]}")
+
+
+__all__ = [
+    "ArenaExecutor", "ELEMENTWISE", "FP32_ATOL", "FP32_RTOL",
+    "SUPPORTED_KINDS", "available_backends", "compare_outputs", "cross_check",
+    "executability", "executable", "get_backend", "ops", "random_inputs",
+    "register_backend", "synth_weights", "unwrap_plan",
+]

@@ -1,0 +1,243 @@
+"""NumPy arena executor backend (the TFMin analogue, reference semantics).
+
+Two executors over the shared op semantics of :mod:`repro.core.exec.ops`:
+
+- :class:`ReferenceExec` — private buffer per tensor (ground truth);
+- :class:`ArenaExec`     — all intermediates live inside ONE flat byte arena
+  at the offsets chosen by a :class:`~repro.core.planner.Plan`, each op
+  processing its output *row by row in ascending index order* (reads of a row
+  happen no later, and writes no earlier, than the reference element order —
+  so a plan safe for the element order is safe here).
+
+:class:`NumpyExecutor` wraps the pair behind the
+:class:`~repro.core.exec.ArenaExecutor` protocol; :func:`verify_plan` runs
+an arena backend against the private-buffer reference and asserts equality
+(bit-exact for numpy, fp32 tolerance for backends whose accumulation order
+XLA may reassociate). If the plan overlapped any buffer unsafely, the arena
+execution clobbers a live value and the comparison fails — the
+open-source-tool verification described in the paper's §I.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.exec import ops as X
+from repro.core.graph import Graph, Op, Tensor
+from repro.core.planner import Plan
+
+
+class _Exec:
+    """Shared op evaluation; subclasses define tensor load/store."""
+
+    def __init__(self, graph: Graph, seed: int = 0,
+                 weights: Optional[Dict[int, Dict[str, np.ndarray]]] = None):
+        self.graph = graph
+        self.weights = weights if weights is not None else X.synth_weights(
+            graph, seed)
+
+    def load(self, t: Tensor) -> np.ndarray:
+        raise NotImplementedError
+
+    def store(self, t: Tensor, v: np.ndarray) -> None:
+        raise NotImplementedError
+
+    def store_rows(self, op: Op, rows) -> None:
+        """Default: materialise and store whole tensor (reference executor)."""
+        out = np.stack([r for r in rows], axis=0)
+        self.store(op.output, out.reshape(op.output.shape))
+
+    def run(self, order: Optional[List[Op]] = None) -> None:
+        for op in (order or self.graph.ops):
+            self.execute(op)
+
+    def execute(self, op: Op) -> None:
+        k = op.kind
+        if k in ("conv2d", "depthwise_conv2d"):
+            x = self.load(op.inputs[0]).reshape(op.inputs[0].shape)
+            x3 = x.reshape(x.shape[-3:])
+            filt = self.weights[id(op)]["filter"]
+            oh = op.output.shape[-3]
+            self.store_rows(op, (X.conv_row(op, x3, filt, oy)
+                                 for oy in range(oh)))
+        elif k == "pool":
+            x3 = self.load(op.inputs[0]).reshape(op.inputs[0].shape[-3:])
+            oh = op.output.shape[-3]
+            self.store_rows(op, (X.pool_row(op, x3, oy) for oy in range(oh)))
+        elif k == "elementwise":
+            fn = X.ELEMENTWISE[op.params.get("fn", "relu")]
+            xs = [self.load(t).reshape(t.shape) for t in op.inputs
+                  if t.kind != "weight"]
+            if len(xs) == 2 and xs[1].size != xs[0].size:
+                xs[1] = np.broadcast_to(xs[1], xs[0].shape)
+            self.store(op.output, fn(*xs).astype(np.float32))
+        elif k == "softmax":
+            x = self.load(op.inputs[0]).reshape(op.inputs[0].shape)
+            e = np.exp(x - x.max(axis=-1, keepdims=True))
+            self.store(op.output,
+                       (e / e.sum(axis=-1, keepdims=True)).astype(np.float32))
+        elif k == "fully_connected":
+            x = self.load(op.inputs[0]).reshape(-1, op.inputs[0].shape[-1])
+            filt = self.weights[id(op)]["filter"]
+            self.store(op.output,
+                       (x @ filt).reshape(op.output.shape).astype(np.float32))
+        elif k == "matmul":
+            a = self.load(op.inputs[0]).reshape(-1, op.inputs[0].shape[-1])
+            b = self.load(op.inputs[1]).reshape(op.inputs[1].shape)
+            self.store(op.output,
+                       (a @ b).reshape(op.output.shape).astype(np.float32))
+        elif k == "concat":
+            axis = op.params.get("axis", -1)
+            xs = [self.load(t).reshape(t.shape) for t in op.inputs]
+            self.store(op.output, np.concatenate(xs, axis=axis))
+        elif k == "pad":
+            x = self.load(op.inputs[0]).reshape(op.inputs[0].shape)
+            self.store(op.output, np.pad(x, op.params["paddings"]))
+        elif k == "mean":
+            x = self.load(op.inputs[0]).reshape(op.inputs[0].shape)
+            axes = tuple(op.params.get("axes", range(x.ndim - 1)))
+            self.store(op.output, x.mean(axis=axes).reshape(op.output.shape)
+                       .astype(np.float32))
+        elif k == "reshape":
+            pass  # aliasing no-op
+        else:
+            raise NotImplementedError(f"arena executor: {k}")
+
+
+class ReferenceExec(_Exec):
+    def __init__(self, graph: Graph, inputs: Dict[str, np.ndarray],
+                 seed: int = 0, weights=None):
+        super().__init__(graph, seed, weights)
+        self.vals: Dict[Tensor, np.ndarray] = {}
+        for t in graph.tensors:
+            if t.kind == "input":
+                self.vals[t.storage()] = inputs[t.name].astype(np.float32)
+
+    def load(self, t: Tensor) -> np.ndarray:
+        return self.vals[t.storage()]
+
+    def store(self, t: Tensor, v: np.ndarray) -> None:
+        self.vals[t.storage()] = v.reshape(t.shape)
+
+
+class ArenaExec(_Exec):
+    """Executes inside a single flat float32 arena at planned offsets.
+
+    Conv/pool outputs are written row-by-row (ascending), loads re-read the
+    arena for every row — faithfully modelling the MCU execution order that
+    DMO's O_s guarantees safe.
+    """
+
+    def __init__(self, graph: Graph, plan: Plan,
+                 inputs: Dict[str, np.ndarray], seed: int = 0, weights=None):
+        super().__init__(graph, seed, weights)
+        self.plan = plan
+        assert plan.peak_bytes % 4 == 0
+        self.arena = np.zeros(plan.peak_bytes // 4, np.float32)
+        for t in graph.tensors:
+            if t.kind == "input":
+                self.store(t, inputs[t.name].astype(np.float32))
+
+    def _slice(self, t: Tensor) -> slice:
+        s = t.storage()
+        off = self.plan.offsets[s]
+        assert off % 4 == 0 and s.dtype_bytes == 4, "arena exec is float32-only"
+        return slice(off // 4, off // 4 + s.elems)
+
+    def load(self, t: Tensor) -> np.ndarray:
+        return self.arena[self._slice(t)].copy().reshape(t.shape)
+
+    def store(self, t: Tensor, v: np.ndarray) -> None:
+        self.arena[self._slice(t)] = v.reshape(-1)
+
+    def store_rows(self, op: Op, rows) -> None:
+        out = op.output
+        sl = self._slice(out)
+        row_elems = out.elems // out.shape[-3]
+        base = sl.start
+        for i, r in enumerate(rows):
+            # NOTE: each row's inputs were loaded lazily by conv_row via the
+            # generator *before* this store — but rows are produced one at a
+            # time, so reads for row i+1 happen after the row-i store, exactly
+            # the diagonal order.
+            self.arena[base + i * row_elems: base + (i + 1) * row_elems] = \
+                r.reshape(-1)
+
+    def execute(self, op: Op) -> None:
+        # conv/pool must re-load input per row to see the live arena
+        if op.kind in ("conv2d", "depthwise_conv2d", "pool"):
+            x_t = op.inputs[0]
+            filt = self.weights[id(op)].get("filter")
+            oh = op.output.shape[-3]
+
+            def rows():
+                for oy in range(oh):
+                    x3 = self.load(x_t).reshape(x_t.shape[-3:])
+                    if op.kind == "pool":
+                        yield X.pool_row(op, x3, oy)
+                    else:
+                        yield X.conv_row(op, x3, filt, oy)
+
+            self.store_rows(op, rows())
+        else:
+            super().execute(op)
+
+
+# ---------------------------------------------------------------------------
+# Module-level API (legacy names; repro.core.arena re-exports these)
+# ---------------------------------------------------------------------------
+
+
+def run_reference(graph: Graph, inputs: Dict[str, np.ndarray],
+                  order: Optional[List[Op]] = None, seed: int = 0,
+                  weights=None) -> Dict[str, np.ndarray]:
+    ex = ReferenceExec(graph, inputs, seed, weights)
+    ex.run(order)
+    return {t.name: ex.vals[t.storage()]
+            for t in graph.tensors if t.kind == "output"}
+
+
+def run_in_arena(graph: Graph, plan: Plan, inputs: Dict[str, np.ndarray],
+                 seed: int = 0, weights=None) -> Dict[str, np.ndarray]:
+    ex = ArenaExec(graph, plan, inputs, seed, weights)
+    ex.run(plan.order)
+    return {t.name: ex.load(t) for t in graph.tensors if t.kind == "output"}
+
+
+class NumpyExecutor:
+    """The ``numpy`` :class:`~repro.core.exec.ArenaExecutor` backend."""
+
+    name = "numpy"
+
+    def execute(self, plan_or_compiled, inputs=None, weights=None, *,
+                seed: int = 0) -> Dict[str, np.ndarray]:
+        from repro.core.exec import unwrap_plan
+        plan, graph = unwrap_plan(plan_or_compiled)
+        reason = X.executability(graph)
+        if reason is not None:
+            # same gate as the pallas backend: split row bands / strided
+            # views / non-f32 graphs would execute with silently wrong
+            # semantics rather than fail — refuse loudly instead
+            raise ValueError(
+                f"numpy backend cannot execute {graph.name!r}: {reason}")
+        if inputs is None:
+            inputs = X.random_inputs(graph, seed)
+        if weights is None:
+            weights = X.synth_weights(graph, seed)
+        return run_in_arena(graph, plan, inputs, seed, weights)
+
+
+def verify_plan(graph: Graph, plan: Plan, seed: int = 0,
+                backend: str = "numpy") -> None:
+    """Assert the planned arena execution matches private buffers: bit-exact
+    for the numpy backend; fp32 tolerance for backends (pallas) whose dot
+    accumulations XLA may reassociate. Any unsafe overlap in the plan
+    clobbers a live value and raises ``AssertionError``."""
+    from repro.core.exec import compare_outputs, get_backend
+    inputs = X.random_inputs(graph, seed)
+    weights = X.synth_weights(graph, seed)
+    ref = run_reference(graph, inputs, plan.order, seed, weights)
+    got = get_backend(backend).execute(plan, inputs, weights, seed=seed)
+    compare_outputs(ref, got, exact=(backend == "numpy"),
+                    label=f"{backend} arena vs reference")

@@ -1,0 +1,187 @@
+"""Shared per-op row/tensor semantics for every arena executor backend.
+
+This is the single place the repo defines *what an op computes* and *in which
+element order* — the row-ascending reference semantics the paper's safe
+overlap ``O_s`` is derived against (§III.A: reads of an output row's inputs
+happen no later, and its write no earlier, than the reference element order).
+Backends reuse these definitions rather than re-deriving them:
+
+- the ``numpy`` backend (:mod:`repro.core.exec.numpy_backend`) calls
+  :func:`conv_row` / :func:`pool_row` / :func:`eval_op` directly;
+- the ``pallas`` backend (:mod:`repro.core.exec.pallas_backend`) mirrors the
+  same loop nests in its kernels (:mod:`repro.kernels.arena_ops`) and is
+  cross-checked against the numpy backend by the pipeline's verify pass.
+
+Weight synthesis lives here too, so all backends execute the same network:
+weights are deterministic per (graph, seed) and keyed by op identity.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.graph import Graph, Op, Tensor, pad_amount
+
+#: Op kinds every arena executor implements. An op kind outside this set
+#: cannot be executed (and therefore not numerically verified or lowered).
+SUPPORTED_KINDS = frozenset({
+    "conv2d", "depthwise_conv2d", "pool", "elementwise", "softmax",
+    "fully_connected", "matmul", "concat", "pad", "mean", "reshape",
+})
+
+#: Elementwise function table shared by all backends (numpy ufunc semantics;
+#: the pallas backend maps these 1:1 onto jnp equivalents).
+ELEMENTWISE = {
+    "relu": lambda a: np.maximum(a, 0.0),
+    "relu6": lambda a: np.clip(a, 0.0, 6.0),
+    "sigmoid": lambda a: 1.0 / (1.0 + np.exp(-a)),
+    "identity": lambda a: a,
+    "add": lambda a, b: a + b,
+    "mul": lambda a, b: a * b,
+    "sub": lambda a, b: a - b,
+}
+
+
+def weights_for(op: Op, rng: np.random.Generator) -> Dict[str, np.ndarray]:
+    """Deterministic random weights per op (same for every backend)."""
+    w: Dict[str, np.ndarray] = {}
+    if op.kind == "conv2d":
+        kh, kw = op.params["kernel"]
+        ic = op.inputs[0].shape[-1]
+        oc = op.output.shape[-1]
+        w["filter"] = rng.standard_normal((kh, kw, ic, oc)).astype(np.float32)
+    elif op.kind == "depthwise_conv2d":
+        kh, kw = op.params["kernel"]
+        ic = op.inputs[0].shape[-1]
+        kc = op.params.get("multiplier", 1)
+        w["filter"] = rng.standard_normal((kh, kw, ic, kc)).astype(np.float32)
+    elif op.kind == "fully_connected":
+        idim = op.inputs[0].shape[-1]
+        od = op.output.shape[-1]
+        w["filter"] = rng.standard_normal((idim, od)).astype(np.float32)
+    return w
+
+
+def synth_weights(graph: Graph, seed: int = 0) -> Dict[int, Dict[str, np.ndarray]]:
+    """All weights of a graph, keyed by ``id(op)``. The rng is consumed in
+    op order, so every backend handed the same (graph, seed) pair executes
+    the identical network."""
+    rng = np.random.default_rng(seed)
+    return {id(op): weights_for(op, rng) for op in graph.ops}
+
+
+def random_inputs(graph: Graph, seed: int = 0) -> Dict[str, np.ndarray]:
+    """Deterministic random model inputs (float32), keyed by tensor name."""
+    rng = np.random.default_rng(seed + 1)
+    return {
+        t.name: rng.standard_normal(t.shape).astype(np.float32)
+        for t in graph.tensors if t.kind == "input"
+    }
+
+
+def pads(op: Op) -> Tuple[int, int]:
+    """Leading (ph, pw) pad of a conv/pool op (TF SAME convention)."""
+    ih, iw = op.inputs[0].shape[-3], op.inputs[0].shape[-2]
+    oh, ow = op.output.shape[-3], op.output.shape[-2]
+    kh, kw = op.params["kernel"]
+    sh, sw = op.params.get("stride", (1, 1))
+    dh, dw = op.params.get("dilation", (1, 1))
+    if op.params.get("padding", "same") == "same":
+        return pad_amount(ih, oh, kh, sh, dh), pad_amount(iw, ow, kw, sw, dw)
+    return 0, 0
+
+
+def conv_row(op: Op, x: np.ndarray, filt: np.ndarray, oy: int) -> np.ndarray:
+    """One output row of conv2d/depthwise (x is HWC)."""
+    ih, iw, ic = x.shape
+    oh, ow = op.output.shape[-3], op.output.shape[-2]
+    kh, kw = op.params["kernel"]
+    sh, sw = op.params.get("stride", (1, 1))
+    dh, dw = op.params.get("dilation", (1, 1))
+    ph, pw = pads(op)
+    if op.kind == "conv2d":
+        oc = op.output.shape[-1]
+        row = np.zeros((ow, oc), np.float32)
+    else:
+        kc = op.params.get("multiplier", 1)
+        row = np.zeros((ow, ic * kc), np.float32)
+    for fy in range(kh):
+        iy = oy * sh - ph + fy * dh
+        if not 0 <= iy < ih:
+            continue
+        for fx in range(kw):
+            ixs = np.arange(ow) * sw - pw + fx * dw
+            valid = (ixs >= 0) & (ixs < iw)
+            src = x[iy, np.clip(ixs, 0, iw - 1), :]          # (Ow, ic)
+            src = np.where(valid[:, None], src, 0.0)
+            if op.kind == "conv2d":
+                row += src @ filt[fy, fx]                     # (Ow, oc)
+            else:
+                kc = op.params.get("multiplier", 1)
+                contrib = src[:, :, None] * filt[fy, fx][None, :, :]
+                row += contrib.reshape(ow, ic * kc)
+    return row
+
+
+def pool_row(op: Op, x: np.ndarray, oy: int) -> np.ndarray:
+    ih, iw, c = x.shape
+    ow = op.output.shape[-2]
+    kh, kw = op.params["kernel"]
+    sh, sw = op.params.get("stride", (1, 1))
+    ph, pw = pads(op)
+    mode = op.params.get("mode", "avg")
+    acc = np.full((ow, c), -np.inf if mode == "max" else 0.0, np.float32)
+    cnt = np.zeros((ow, 1), np.float32)
+    for fy in range(kh):
+        iy = oy * sh - ph + fy
+        if not 0 <= iy < ih:
+            continue
+        for fx in range(kw):
+            ixs = np.arange(ow) * sw - pw + fx
+            valid = (ixs >= 0) & (ixs < iw)
+            src = x[iy, np.clip(ixs, 0, iw - 1), :]
+            if mode == "max":
+                acc = np.where(valid[:, None], np.maximum(acc, src), acc)
+            else:
+                acc += np.where(valid[:, None], src, 0.0)
+                cnt += valid[:, None].astype(np.float32)
+    if mode == "avg":
+        acc = acc / np.maximum(cnt, 1.0)
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Lowering gates
+# ---------------------------------------------------------------------------
+
+
+def has_strided_views(graph: Graph) -> bool:
+    """Non-trivial aliases (concat-removal views) whose element offsets a
+    flat-arena executor cannot represent."""
+    return any(t.alias_of is not None and t.elems != t.storage().elems
+               for t in graph.tensors)
+
+
+def executability(graph: Graph) -> Optional[str]:
+    """None when every arena backend can execute ``graph``; else a short
+    human-readable reason why not (used by lowering gates and error text)."""
+    for op in graph.ops:
+        if op.kind not in SUPPORTED_KINDS:
+            return f"unsupported op kind {op.kind!r}"
+        if "row_range" in op.params:
+            return "split row bands"
+        if op.kind == "elementwise" and op.params.get("fn", "relu") not in ELEMENTWISE:
+            return f"unknown elementwise fn {op.params.get('fn')!r}"
+        for t in op.inputs:
+            if t.storage().kind == "weight":
+                return f"op {op.name} reads a non-arena (weight) tensor"
+    if has_strided_views(graph):
+        return "aggregated views (strided offsets)"
+    if any(t.dtype_bytes != 4 for t in graph.arena_tensors()):
+        return "non-f32 arena tensors"
+    return None
+
+
+def executable(graph: Graph) -> bool:
+    return executability(graph) is None

@@ -1,0 +1,124 @@
+"""Pallas arena executor: lower a plan to kernels over ONE donated buffer.
+
+The lowering walks :meth:`Plan.op_layouts` and emits one
+:class:`~repro.kernels.arena_ops.OpSpec` per op — the op kind plus the
+*element offsets* the planner chose, which is all a kernel needs to index the
+flat arena. The spec sequence jit-compiles to ``fn(arena, *weights)`` with
+the arena argument donated and every kernel aliasing its arena operand
+(``input_output_aliases={0: 0}``), so the entire network executes inside one
+flat f32 buffer of exactly ``plan.peak_bytes`` — the planner's peak *is* the
+runtime footprint, overlaps included.
+
+``interpret=True`` (default) runs on CPU CI; on an actual TPU the arena
+would live in VMEM (the paper's SRAM analogue). Row loops are sequential
+``fori_loop``s — see the §III.F multi-threading caveat in
+:mod:`repro.kernels.arena_ops`.
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.exec import ops as X
+from repro.core.exec import unwrap_plan
+from repro.core.graph import Op
+from repro.core.planner import Plan
+
+
+def _canon_meta(op: Op) -> Tuple:
+    """Kind-specific static parameters for the kernel (see arena_ops)."""
+    k = op.kind
+    if k in ("conv2d", "depthwise_conv2d"):
+        kh, kw = op.params["kernel"]
+        sh, sw = op.params.get("stride", (1, 1))
+        dh, dw = op.params.get("dilation", (1, 1))
+        ph, pw = X.pads(op)
+        return (kh, kw, sh, sw, dh, dw, ph, pw,
+                op.params.get("multiplier", 1))
+    if k == "pool":
+        kh, kw = op.params["kernel"]
+        sh, sw = op.params.get("stride", (1, 1))
+        ph, pw = X.pads(op)
+        return (kh, kw, sh, sw, ph, pw, op.params.get("mode", "avg"))
+    if k == "elementwise":
+        return (op.params.get("fn", "relu"),)
+    if k == "concat":
+        return (op.params.get("axis", -1),)
+    if k == "pad":
+        return (tuple(tuple(p) for p in op.params["paddings"]),)
+    if k == "mean":
+        x = op.inputs[0]
+        return (tuple(op.params.get("axes", range(len(x.shape) - 1))),)
+    return ()
+
+
+class PallasExecutor:
+    """The ``pallas`` :class:`~repro.core.exec.ArenaExecutor` backend."""
+
+    name = "pallas"
+
+    def __init__(self, interpret: bool = True):
+        self.interpret = interpret
+
+    def lower(self, plan: Plan) -> Tuple:
+        """Plan -> OpSpec sequence (static lowering, no weights bound)."""
+        from repro.kernels.arena_ops import OpSpec
+        specs: List[OpSpec] = []
+        for op, in_offs, out_off in plan.op_layouts():
+            assert all(o is not None for o in in_offs), \
+                f"{op.name}: non-arena input cannot be lowered"
+            specs.append(OpSpec(
+                kind=op.kind,
+                in_off=tuple(in_offs),
+                in_shape=tuple(t.shape for t in op.inputs
+                               if t.storage().kind != "weight"),
+                out_off=out_off,
+                out_shape=op.output.shape,
+                meta=_canon_meta(op)))
+        return tuple(specs)
+
+    def execute(self, plan_or_compiled, inputs=None, weights=None, *,
+                seed: int = 0) -> Dict[str, np.ndarray]:
+        import jax.numpy as jnp
+        from repro.kernels import arena_ops
+
+        plan, graph = unwrap_plan(plan_or_compiled)
+        reason = X.executability(graph)
+        if reason is not None:
+            raise ValueError(
+                f"pallas backend cannot lower {graph.name!r}: {reason}")
+        if inputs is None:
+            inputs = X.random_inputs(graph, seed)
+        if weights is None:
+            weights = X.synth_weights(graph, seed)
+
+        specs = self.lower(plan)
+        wflat = []
+        for op in plan.order:
+            if op.kind in arena_ops.WEIGHTED_KINDS:
+                wflat.append(jnp.asarray(weights[id(op)]["filter"],
+                                         jnp.float32))
+
+        assert plan.peak_bytes % 4 == 0
+        arena = np.zeros(plan.peak_bytes // 4, np.float32)
+        for t in graph.tensors:
+            if t.kind == "input":
+                s, off = t.storage(), plan.offsets[t.storage()] // 4
+                arena[off:off + s.elems] = \
+                    inputs[t.name].astype(np.float32).reshape(-1)
+
+        fn = arena_ops.lower_program(specs, self.interpret)
+        with warnings.catch_warnings():
+            # CPU jit can't honour the donation and warns; the in-kernel
+            # aliasing is what carries the single-buffer semantics there
+            warnings.filterwarnings("ignore", message=".*donated.*")
+            out_arena = np.asarray(fn(jnp.asarray(arena), *wflat))
+
+        outs: Dict[str, np.ndarray] = {}
+        for t in graph.tensors:
+            if t.kind == "output":
+                s, off = t.storage(), plan.offsets[t.storage()] // 4
+                outs[t.name] = out_arena[off:off + s.elems].reshape(t.shape)
+        return outs

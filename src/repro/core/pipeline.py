@@ -25,20 +25,25 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import math
+import os
+import pathlib
+import pickle
 import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
+from repro.core import exec as X
 from repro.core import planner as P
-from repro.core.arena import verify_plan
+from repro.core.arena import run_reference
 from repro.core.graph import Graph, Op, Tensor
 from repro.core.removal import removable, remove_concats
 from repro.core.serialise import candidate_orders
 from repro.core.splitting import auto_split
 
 __all__ = [
-    "CompileOptions", "CompiledPlan", "Pass", "available_passes",
-    "cache_clear", "cache_info", "compile", "default_passes",
-    "graph_signature", "register_pass",
+    "CompileOptions", "CompiledPlan", "Pass", "auto_budget_s",
+    "available_passes", "cache_clear", "cache_info", "compile",
+    "default_passes", "graph_signature", "register_pass",
 ]
 
 
@@ -89,15 +94,34 @@ def graph_signature(graph: Graph) -> str:
 class CompileOptions:
     profile: str = "paper"        # overlap profile: "paper" | "extended"
     method: str = "algorithmic"   # O_s method: analytic/algorithmic/trace/auto
-    budget_s: float = 0.0         # >0 enables ILS plan_search refinement
+    #: ILS plan_search budget: seconds (>0 enables), or "auto" to derive the
+    #: budget from the graph's op/tensor count (see :func:`auto_budget_s`).
+    budget_s: Union[float, str] = 0.0
     seed: int = 0
     split: str = "auto"           # "auto" (size-gated) | "on" | "off"
     split_max_parts: int = 8
     split_ops_limit: int = 150    # "auto": skip auto_split on larger graphs
     verify: str = "auto"          # "auto" | "constraints" | "numeric" | "off"
+    backend: str = "numpy"        # executor backend a plan is compiled for
 
     def key(self) -> str:
         return repr(dataclasses.astuple(self))
+
+
+def auto_budget_s(graph: Graph) -> float:
+    """ILS wall budget derived from graph size (replaces the hand-set
+    per-benchmark budgets). One ILS step re-places every tensor against every
+    placed tensor, so its cost grows ~T^1.5..2 with the tensor count and a
+    fixed wall budget yields ever fewer iterations on the big connected
+    graphs — where the search rarely beats the greedy seeds anyway. Target a
+    roughly constant iteration count instead: generous on the ~30-tensor
+    MobileNets (where the paper's optimal cascades hide), tapering to the
+    floor at NasNet scale. Tiny graphs also need less wall time (the
+    insertion-order space itself is small), so the budget additionally grows
+    ~0.4 s per op from below. Clamped to [0.5, 12] seconds."""
+    t = max(1, len(graph.arena_tensors()))
+    b = min(0.4 * len(graph.ops), 1e4 / (t * math.sqrt(t)))
+    return float(min(12.0, max(0.5, b)))
 
 
 @dataclasses.dataclass
@@ -141,10 +165,20 @@ class CompiledPlan:
     recompute_elems: int = 0
     cache_hit: bool = False
     compile_s: float = 0.0
+    backend: str = "numpy"      # executor backend this plan was compiled for
 
     @property
     def peak_bytes(self) -> int:
         return self.plan.peak_bytes
+
+    def execute(self, inputs=None, weights=None, *, seed: int = 0,
+                backend: Optional[str] = None) -> Dict[str, Any]:
+        """Run the plan inside its arena on the compiled-for executor backend
+        (override with ``backend=``). Inputs/weights default to the
+        deterministic synthesis shared by all backends; returns the model
+        outputs keyed by tensor name."""
+        be = X.get_backend(backend or self.backend)
+        return be.execute(self, inputs, weights, seed=seed)
 
     @property
     def baseline_bytes(self) -> int:
@@ -170,7 +204,7 @@ class CompiledPlan:
             f"{self.saving_pct:.1f}% below baseline "
             f"{self.baseline_bytes / 1024:.1f} KB [{self.baseline.strategy}]",
             f"  strategy={self.plan.strategy} variant={self.winner} "
-            f"verified={self.verified} "
+            f"backend={self.backend} verified={self.verified} "
             f"cache={'hit' if self.cache_hit else 'miss'} "
             f"compile={self.compile_s * 1e3:.1f} ms",
             f"  passes: {' -> '.join(self.passes)}",
@@ -289,13 +323,6 @@ class SplitPass(Pass):
         state.log += [f"split: {entry}" for entry in slog]
 
 
-def _has_strided_views(g: Graph) -> bool:
-    """True when the graph contains non-trivial aliases (concat-removal
-    views) whose offsets the numeric arena executor cannot represent."""
-    return any(t.alias_of is not None and t.elems != t.storage().elems
-               for t in g.tensors)
-
-
 def _has_aliases(g: Graph) -> bool:
     """Any alias (reshape or view): storage-level dependencies then
     under-constrain reordering (an alias's producer and its storage owner
@@ -349,7 +376,9 @@ class PlanPass(Pass):
                     cands.append((label, P.plan_dmo(
                         g, order, method=opt.method, profile=opt.profile)))
         label, best = min(cands, key=lambda c: c[1].peak_bytes)
-        if opt.budget_s > 0:
+        budget = (auto_budget_s(state.original)
+                  if opt.budget_s == "auto" else opt.budget_s)
+        if budget > 0:
             # refine the best *searchable* candidate (split variants plan
             # without the O_s relaxation, so ILS does not apply to them) and
             # keep the overall winner
@@ -357,10 +386,11 @@ class PlanPass(Pass):
             if searchable:
                 slabel, sbase = min(searchable, key=lambda c: c[1].peak_bytes)
                 sp = P.plan_search(sbase.graph, sbase.order,
-                                   method=opt.method, budget_s=opt.budget_s,
+                                   method=opt.method, budget_s=budget,
                                    seed=opt.seed, profile=opt.profile)
                 state.log.append(
-                    f"plan: ILS search ({opt.budget_s:.1f}s) "
+                    f"plan: ILS search ({budget:.1f}s"
+                    f"{', autoscaled' if opt.budget_s == 'auto' else ''}) "
                     f"-> {sp.peak_bytes}")
                 if sp.peak_bytes < best.peak_bytes:
                     best, label = sp, slabel
@@ -370,22 +400,12 @@ class PlanPass(Pass):
             f"on {label}, peak={best.peak_bytes}")
 
 
-#: Op kinds the numeric arena executor implements (see repro.core.arena).
-_ARENA_KINDS = frozenset({
-    "conv2d", "depthwise_conv2d", "pool", "elementwise", "softmax",
-    "fully_connected", "matmul", "concat", "pad", "mean", "reshape",
-})
 #: Numeric verification replays every op row-by-row in NumPy — cap the work.
 _NUMERIC_ELEM_LIMIT = 300_000
 
 
 def _numeric_verifiable(g: Graph) -> bool:
-    if any(op.kind not in _ARENA_KINDS or "row_range" in op.params
-           for op in g.ops):
-        return False
-    if _has_strided_views(g):  # view offsets not representable in ArenaExec
-        return False
-    if any(t.dtype_bytes != 4 for t in g.arena_tensors()):
+    if X.executability(g) is not None:
         return False
     return sum(t.elems for t in g.arena_tensors()) <= _NUMERIC_ELEM_LIMIT
 
@@ -395,7 +415,11 @@ class VerifyPass(Pass):
     """Plan safety: always the formal no-clobber constraint check; plus the
     bit-exact arena-vs-private-buffers execution (:func:`verify_plan`) when
     the winning graph is executable by the NumPy arena interpreter
-    (``verify="numeric"`` forces it and raises when it is not)."""
+    (``verify="numeric"`` forces it and raises when it is not). Compiling for
+    the ``pallas`` backend adds a third tier: the plan is executed by the
+    pallas backend (interpret mode) and cross-checked output-for-output
+    against the numpy arena execution (fp32 tolerance where XLA reassociates
+    the accumulation order)."""
     name = "verify"
 
     def run(self, state: PipelineState) -> None:
@@ -416,36 +440,143 @@ class VerifyPass(Pass):
             state.log.append("verify: constraints only (graph not "
                              "numerically executable)")
             return
-        verify_plan(state.plan.graph, state.plan)
+        # one reference + one numpy arena execution serve both tiers: the
+        # bit-exact numeric check here, and (for backend="pallas") the
+        # cross-check below against the same data — no redundant runs
+        opt = state.options
+        g = state.plan.graph
+        inputs = X.random_inputs(g, opt.seed)
+        weights = X.synth_weights(g, opt.seed)
+        ref = run_reference(g, inputs, state.plan.order, weights=weights)
+        got_np = X.get_backend("numpy").execute(state.plan, inputs, weights)
+        X.compare_outputs(ref, got_np, exact=True, label="numpy arena")
         state.verified = "numeric"
         state.log.append("verify: arena execution bit-exact")
+        if opt.backend == "pallas":
+            got_pl = X.get_backend("pallas").execute(state.plan, inputs,
+                                                     weights)
+            X.compare_outputs(got_np, got_pl, exact=False,
+                              label="pallas vs numpy")
+            state.verified = "numeric+pallas"
+            state.log.append(
+                "verify: pallas arena execution matches numpy backend")
 
 
 # ---------------------------------------------------------------------------
-# The entrypoint + plan cache
+# The entrypoint + plan cache (memory tier + optional content-addressed disk
+# tier, so benchmark reruns start warm across processes)
 # ---------------------------------------------------------------------------
 
 _PLAN_CACHE: Dict[Tuple[str, str], CompiledPlan] = {}
-_CACHE_STATS = {"hits": 0, "misses": 0}
+_CACHE_STATS = {"hits": 0, "misses": 0, "disk_hits": 0, "disk_misses": 0}
 #: Incremented once per actual pipeline execution (never on a cache hit).
 PIPELINE_RUNS = 0
+#: Part of the disk key (with the source fingerprint below): a key collision
+#: with an older build would silently serve stale plans to benchmark reruns.
+_DISK_SCHEMA = "v1"
+_CODE_FINGERPRINT: Optional[str] = None
 
 
-def cache_info() -> Dict[str, int]:
-    return {"size": len(_PLAN_CACHE), **_CACHE_STATS}
+def _code_version() -> str:
+    """Content hash of the planning code (repro/core + overlap sources),
+    folded into the disk-cache key so ANY planner/pass-chain edit — released
+    or just saved in a dev checkout — invalidates persisted plans instead of
+    serving results computed by old code."""
+    global _CODE_FINGERPRINT
+    if _CODE_FINGERPRINT is None:
+        h = hashlib.sha256()
+        root = pathlib.Path(__file__).resolve().parent
+        try:
+            for p in sorted(root.rglob("*.py")):
+                h.update(p.name.encode())
+                h.update(p.read_bytes())
+        except OSError:
+            pass  # zip/frozen installs: schema tag still guards
+        _CODE_FINGERPRINT = h.hexdigest()[:16]
+    return _CODE_FINGERPRINT
 
 
-def cache_clear() -> None:
+def _disk_cache_dir() -> pathlib.Path:
+    return pathlib.Path(os.environ.get(
+        "REPRO_DMO_CACHE_DIR",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro-dmo")))
+
+
+def _disk_enabled(explicit: Optional[bool]) -> bool:
+    if explicit is not None:
+        return explicit
+    return os.environ.get("REPRO_DMO_DISK_CACHE", "").lower() in (
+        "1", "true", "yes", "on")
+
+
+def _disk_path(key: Tuple[str, str]) -> pathlib.Path:
+    h = hashlib.sha256(
+        f"{_DISK_SCHEMA}:{_code_version()}:{key[0]}:{key[1]}".encode())
+    return _disk_cache_dir() / f"{h.hexdigest()}.pkl"
+
+
+def _disk_load(key: Tuple[str, str]) -> Optional[CompiledPlan]:
+    path = _disk_path(key)
+    try:
+        with open(path, "rb") as f:
+            entry = pickle.load(f)
+    except Exception:
+        # any unreadable/stale entry (corrupt file, renamed classes from an
+        # un-bumped schema, ...) must degrade to a cold miss, never crash
+        _CACHE_STATS["disk_misses"] += 1
+        return None
+    if not isinstance(entry, CompiledPlan):
+        _CACHE_STATS["disk_misses"] += 1
+        return None
+    _CACHE_STATS["disk_hits"] += 1
+    return entry
+
+
+def _disk_store(key: Tuple[str, str], entry: CompiledPlan) -> None:
+    path = _disk_path(key)
+    tmp = path.with_suffix(f".tmp.{os.getpid()}")
+    try:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        with open(tmp, "wb") as f:
+            pickle.dump(entry, f, protocol=pickle.HIGHEST_PROTOCOL)
+        os.replace(tmp, path)  # atomic: concurrent benchmark shards race here
+    except Exception:
+        # a cold cache is never an error — unpicklable op params (free-form
+        # dicts), full disks, permissions: all degrade to not-persisted
+        try:
+            tmp.unlink(missing_ok=True)
+        except OSError:
+            pass
+
+
+def cache_info() -> Dict[str, Any]:
+    return {"size": len(_PLAN_CACHE), "disk_dir": str(_disk_cache_dir()),
+            **_CACHE_STATS}
+
+
+def cache_clear(disk: bool = False) -> None:
+    """Clear the in-memory tier and reset counters; ``disk=True`` also
+    deletes the persisted entries under the disk cache dir."""
     _PLAN_CACHE.clear()
-    _CACHE_STATS["hits"] = _CACHE_STATS["misses"] = 0
+    for k in _CACHE_STATS:
+        _CACHE_STATS[k] = 0
+    if disk:
+        try:
+            # *.tmp.<pid> are orphans of interrupted _disk_store writes
+            for pattern in ("*.pkl", "*.tmp.*"):
+                for p in _disk_cache_dir().glob(pattern):
+                    p.unlink(missing_ok=True)
+        except OSError:
+            pass
 
 
 def compile(graph: Graph, *, profile: str = "paper",
-            method: str = "algorithmic", budget_s: float = 0.0,
+            method: str = "algorithmic", budget_s: Union[float, str] = 0.0,
             seed: int = 0, passes: Optional[Sequence[str]] = None,
             split: str = "auto", split_max_parts: int = 8,
-            split_ops_limit: int = 150,
-            verify: str = "auto", cache: bool = True) -> CompiledPlan:
+            split_ops_limit: int = 150, verify: str = "auto",
+            backend: str = "numpy", cache: bool = True,
+            disk_cache: Optional[bool] = None) -> CompiledPlan:
     """Compile ``graph`` to an arena plan through the registered pass chain.
 
     Args:
@@ -454,13 +585,24 @@ def compile(graph: Graph, *, profile: str = "paper",
             derives O_s for) or ``"extended"``.
         method: O_s calculator (``analytic``/``algorithmic``/``trace``/``auto``).
         budget_s: wall-clock budget for the ILS search refinement (0 = off,
-            fully deterministic pipeline).
+            fully deterministic pipeline), or ``"auto"`` to derive the budget
+            from the graph's op/tensor count (:func:`auto_budget_s`).
         passes: pass names to run, in order (default:
             :func:`default_passes`). Unknown names raise.
         split: operation-splitting mode (``auto``/``on``/``off``);
             ``split_ops_limit`` is the op-count gate for ``auto``.
         verify: verification mode (``auto``/``constraints``/``numeric``/``off``).
+        backend: executor backend the plan is compiled for (``"numpy"`` or
+            ``"pallas"``); ``"pallas"`` adds a verify tier cross-checking the
+            pallas arena execution against the numpy backend, and
+            ``CompiledPlan.execute()`` runs on this backend by default.
         cache: look up / populate the content-addressed plan cache.
+        disk_cache: persist/look up plans on disk under
+            ``$REPRO_DMO_CACHE_DIR`` (default ``~/.cache/repro-dmo``) so
+            reruns in fresh processes start warm. ``None`` defers to the
+            ``REPRO_DMO_DISK_CACHE`` env toggle (default off).
+            ``cache=False`` disables both tiers; combining it with an
+            explicit ``disk_cache=True`` raises.
 
     Returns:
         A :class:`CompiledPlan`. Cache hits return the memoised result
@@ -477,10 +619,21 @@ def compile(graph: Graph, *, profile: str = "paper",
         raise ValueError(f"unknown split mode {split!r}")
     if verify not in ("auto", "constraints", "numeric", "off"):
         raise ValueError(f"unknown verify mode {verify!r}")
+    if backend not in X.available_backends():
+        raise ValueError(f"unknown executor backend {backend!r}; "
+                         f"available: {X.available_backends()}")
+    if budget_s != "auto" and not (isinstance(budget_s, (int, float))
+                                   and not isinstance(budget_s, bool)
+                                   and budget_s >= 0):
+        raise ValueError(f"budget_s must be >= 0 or 'auto', got {budget_s!r}")
+    if disk_cache and not cache:
+        raise ValueError("disk_cache=True requires cache=True "
+                         "(cache=False disables all caching)")
     opts = CompileOptions(profile=profile, method=method, budget_s=budget_s,
                           seed=seed, split=split,
                           split_max_parts=split_max_parts,
-                          split_ops_limit=split_ops_limit, verify=verify)
+                          split_ops_limit=split_ops_limit, verify=verify,
+                          backend=backend)
     names = tuple(passes) if passes is not None else default_passes()
     unknown = [n for n in names if n not in _PASSES]
     if unknown:
@@ -488,13 +641,23 @@ def compile(graph: Graph, *, profile: str = "paper",
                          f"available: {available_passes()}")
     t0 = time.perf_counter()
     key = (graph_signature(graph), opts.key() + repr(names))
+    use_disk = cache and _disk_enabled(disk_cache)
     if cache and key in _PLAN_CACHE:
         _CACHE_STATS["hits"] += 1
         entry = _PLAN_CACHE[key]
+        if use_disk and not _disk_path(key).exists():
+            _disk_store(key, entry)  # explicit persist of a warm entry
         return dataclasses.replace(entry, cache_hit=True,
                                    log=list(entry.log),
                                    compile_s=time.perf_counter() - t0)
     _CACHE_STATS["misses"] += 1
+    if use_disk:
+        entry = _disk_load(key)
+        if entry is not None:
+            _PLAN_CACHE[key] = entry
+            return dataclasses.replace(entry, cache_hit=True,
+                                       log=list(entry.log),
+                                       compile_s=time.perf_counter() - t0)
 
     global PIPELINE_RUNS
     PIPELINE_RUNS += 1
@@ -517,9 +680,11 @@ def compile(graph: Graph, *, profile: str = "paper",
         winner=state.winner, verified=state.verified,
         recompute_elems=(state.recompute_elems
                          if state.winner == "split" else 0),
-        compile_s=time.perf_counter() - t0)
+        compile_s=time.perf_counter() - t0, backend=backend)
     if cache:
         _PLAN_CACHE[key] = result
+        if use_disk:
+            _disk_store(key, result)
         # hand out a copy of the mutable log so caller edits can't poison
         # the cached entry (the hit path copies symmetrically)
         return dataclasses.replace(result, log=list(result.log))

@@ -47,6 +47,36 @@ class Plan:
     def offset_of(self, t: Tensor) -> int:
         return self.offsets[t.storage()]
 
+    def op_layouts(self) -> List[Tuple[Op, Tuple[Optional[int], ...], int]]:
+        """Flat-arena lowering metadata, one entry per executed op in order:
+        ``(op, input element offsets, output element offset)``.
+
+        Offsets are in dtype *elements* (the executor backends run f32
+        arenas), aliases resolve to their storage owner, weight inputs (which
+        live outside the arena) yield ``None``, and aliasing no-ops
+        (``reshape``) are omitted — they move no bytes. This is exactly what
+        a kernel needs to index the shared buffer at the planned layout."""
+        out: List[Tuple[Op, Tuple[Optional[int], ...], int]] = []
+        for op in self.order:
+            if op.kind == "reshape":
+                continue
+            ins: List[Optional[int]] = []
+            for t in op.inputs:
+                s = t.storage()
+                if s.kind == "weight":
+                    ins.append(None)
+                    continue
+                off = self.offsets[s]
+                assert off % s.dtype_bytes == 0, \
+                    f"{s.name}: offset {off} not element-aligned"
+                ins.append(off // s.dtype_bytes)
+            s = op.output.storage()
+            off = self.offsets[s]
+            assert off % s.dtype_bytes == 0, \
+                f"{s.name}: offset {off} not element-aligned"
+            out.append((op, tuple(ins), off // s.dtype_bytes))
+        return out
+
     def validate(self) -> None:
         """Assert no live value can be clobbered under the overlap rules."""
         scopes = self.graph.scopes(self.order)

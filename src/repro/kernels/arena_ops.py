@@ -1,0 +1,248 @@
+"""Generalised DMO arena kernels: every supported op as a Pallas call over
+ONE flat arena buffer.
+
+This generalises :mod:`repro.kernels.dmo_arena_dwconv` (a single hard-coded
+depthwise conv) to the full op set a :class:`~repro.core.planner.Plan` can
+contain: conv2d / depthwise_conv2d / pool / elementwise / softmax /
+fully_connected / matmul / concat / pad / mean. Each op becomes one
+``pl.pallas_call`` whose first operand is the flat f32 arena and whose output
+*aliases* it (``input_output_aliases={0: 0}``), so the arena is threaded
+in-place through the op sequence — the TPU-VMEM analogue of the paper's SRAM
+tensor arena.
+
+Safety contract (paper §III.A): kernels read *and* write through the aliased
+output ref, and conv/pool walk output rows in ascending index order inside a
+sequential ``fori_loop``. Reads for output row ``i`` therefore happen after
+the row ``i-1`` store — exactly the element order the safe overlap ``O_s``
+was derived against, which is why a planner-approved layout cannot clobber a
+live value. A parallel grid over rows would break that guarantee, precisely
+the paper's multi-threading caveat (§III.F) — keep the row loop sequential.
+
+``interpret=True`` (the default) runs the kernels on CPU; compiled TPU
+execution of a *flat* arena with element-granular dynamic slices would fight
+the (8, 128) tiling constraints, so on-device use should go through
+row-blocked layouts like the dwconv kernel's ``(rows, rowlen)`` arena.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: jnp mirrors of repro.core.exec.ops.ELEMENTWISE (same names, same maths).
+_ELEMENTWISE = {
+    "relu": lambda a: jnp.maximum(a, 0.0),
+    "relu6": lambda a: jnp.clip(a, 0.0, 6.0),
+    "sigmoid": lambda a: 1.0 / (1.0 + jnp.exp(-a)),
+    "identity": lambda a: a,
+    "add": lambda a, b: a + b,
+    "mul": lambda a, b: a * b,
+    "sub": lambda a, b: a - b,
+}
+
+#: Op kinds that carry one synthesized weight operand.
+WEIGHTED_KINDS = frozenset({"conv2d", "depthwise_conv2d", "fully_connected"})
+
+
+@dataclasses.dataclass(frozen=True)
+class OpSpec:
+    """Hashable, fully static description of one lowered op: element offsets
+    into the flat arena, shapes, and kind-specific parameters. Two plans with
+    identical layouts produce equal specs, so lowered programs are shared."""
+
+    kind: str
+    in_off: Tuple[int, ...]            # element offset per data input
+    in_shape: Tuple[Tuple[int, ...], ...]
+    out_off: int
+    out_shape: Tuple[int, ...]
+    meta: Tuple = ()                   # kind-specific statics (see builders)
+
+
+def _elems(shape: Tuple[int, ...]) -> int:
+    n = 1
+    for s in shape:
+        n *= int(s)
+    return n
+
+
+def _read(ref, off: int, shape: Tuple[int, ...]):
+    return ref[pl.dslice(off, _elems(shape))].reshape(shape)
+
+
+def _write(ref, off: int, value):
+    ref[pl.dslice(off, _elems(value.shape))] = value.reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# Kernel bodies — all state lives in out_ref (the aliased arena); the input
+# operand only seeds its initial contents via the alias.
+# ---------------------------------------------------------------------------
+
+
+def _conv_kernel(_a, w_ref, o_ref, *, spec: OpSpec):
+    ih, iw, ic = spec.in_shape[0][-3:]
+    oh, ow, oc = spec.out_shape[-3:]
+    kh, kw, sh, sw, dh, dw, ph, pw, mult = spec.meta
+    in_off, out_off = spec.in_off[0], spec.out_off
+    depthwise = spec.kind == "depthwise_conv2d"
+
+    def body(oy, _):
+        acc = jnp.zeros((ow, oc), jnp.float32)
+        for fy in range(kh):                    # static unroll (kh small)
+            iy = oy * sh - ph + fy * dh
+            row_ok = (iy >= 0) & (iy < ih)
+            iy_c = jnp.clip(iy, 0, ih - 1)
+            row = o_ref[pl.dslice(in_off + iy_c * iw * ic, iw * ic)]
+            row = row.reshape(iw, ic)
+            for fx in range(kw):
+                ix = jax.lax.broadcasted_iota(jnp.int32, (ow, 1), 0)
+                ix = ix * sw - pw + fx * dw
+                valid = (ix >= 0) & (ix < iw) & row_ok
+                taps = jnp.take_along_axis(row, jnp.clip(ix, 0, iw - 1),
+                                           axis=0)          # (ow, ic)
+                taps = jnp.where(valid, taps, 0.0)
+                if depthwise:
+                    acc += (taps[:, :, None]
+                            * w_ref[fy, fx][None, :, :]).reshape(ow, ic * mult)
+                else:
+                    acc += jnp.dot(taps, w_ref[fy, fx],
+                                   preferred_element_type=jnp.float32)
+        _write(o_ref, out_off + oy * ow * oc, acc)
+        return 0
+
+    jax.lax.fori_loop(0, oh, body, 0)
+
+
+def _pool_kernel(_a, o_ref, *, spec: OpSpec):
+    ih, iw, c = spec.in_shape[0][-3:]
+    oh, ow, _ = spec.out_shape[-3:]
+    kh, kw, sh, sw, ph, pw, mode = spec.meta
+    in_off, out_off = spec.in_off[0], spec.out_off
+
+    def body(oy, _):
+        acc = jnp.full((ow, c), -jnp.inf if mode == "max" else 0.0,
+                       jnp.float32)
+        cnt = jnp.zeros((ow, 1), jnp.float32)
+        for fy in range(kh):
+            iy = oy * sh - ph + fy
+            row_ok = (iy >= 0) & (iy < ih)
+            iy_c = jnp.clip(iy, 0, ih - 1)
+            row = o_ref[pl.dslice(in_off + iy_c * iw * c, iw * c)]
+            row = row.reshape(iw, c)
+            for fx in range(kw):
+                ix = jax.lax.broadcasted_iota(jnp.int32, (ow, 1), 0)
+                ix = ix * sw - pw + fx
+                valid = (ix >= 0) & (ix < iw) & row_ok
+                taps = jnp.take_along_axis(row, jnp.clip(ix, 0, iw - 1),
+                                           axis=0)
+                if mode == "max":
+                    acc = jnp.where(valid, jnp.maximum(acc, taps), acc)
+                else:
+                    acc = acc + jnp.where(valid, taps, 0.0)
+                    cnt = cnt + valid.astype(jnp.float32)
+        out = acc / jnp.maximum(cnt, 1.0) if mode == "avg" else acc
+        _write(o_ref, out_off + oy * ow * c, out)
+        return 0
+
+    jax.lax.fori_loop(0, oh, body, 0)
+
+
+def _elementwise_kernel(_a, o_ref, *, spec: OpSpec):
+    fn = _ELEMENTWISE[spec.meta[0]]
+    xs = [_read(o_ref, off, shp)
+          for off, shp in zip(spec.in_off, spec.in_shape)]
+    if len(xs) == 2 and _elems(spec.in_shape[1]) != _elems(spec.in_shape[0]):
+        xs[1] = jnp.broadcast_to(xs[1], xs[0].shape)
+    _write(o_ref, spec.out_off, fn(*xs).astype(jnp.float32))
+
+
+def _softmax_kernel(_a, o_ref, *, spec: OpSpec):
+    x = _read(o_ref, spec.in_off[0], spec.in_shape[0])
+    e = jnp.exp(x - jnp.max(x, axis=-1, keepdims=True))
+    _write(o_ref, spec.out_off, e / jnp.sum(e, axis=-1, keepdims=True))
+
+
+def _fully_connected_kernel(_a, w_ref, o_ref, *, spec: OpSpec):
+    idim = spec.in_shape[0][-1]
+    x = _read(o_ref, spec.in_off[0], spec.in_shape[0]).reshape(-1, idim)
+    y = jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32)
+    _write(o_ref, spec.out_off, y.reshape(spec.out_shape))
+
+
+def _matmul_kernel(_a, o_ref, *, spec: OpSpec):
+    a = _read(o_ref, spec.in_off[0], spec.in_shape[0])
+    a = a.reshape(-1, spec.in_shape[0][-1])
+    b = _read(o_ref, spec.in_off[1], spec.in_shape[1])
+    y = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    _write(o_ref, spec.out_off, y.reshape(spec.out_shape))
+
+
+def _concat_kernel(_a, o_ref, *, spec: OpSpec):
+    axis = spec.meta[0]
+    xs = [_read(o_ref, off, shp)
+          for off, shp in zip(spec.in_off, spec.in_shape)]
+    _write(o_ref, spec.out_off, jnp.concatenate(xs, axis=axis))
+
+
+def _pad_kernel(_a, o_ref, *, spec: OpSpec):
+    x = _read(o_ref, spec.in_off[0], spec.in_shape[0])
+    _write(o_ref, spec.out_off, jnp.pad(x, spec.meta[0]))
+
+
+def _mean_kernel(_a, o_ref, *, spec: OpSpec):
+    x = _read(o_ref, spec.in_off[0], spec.in_shape[0])
+    y = jnp.mean(x, axis=spec.meta[0]).reshape(spec.out_shape)
+    _write(o_ref, spec.out_off, y)
+
+
+_KERNELS = {
+    "conv2d": _conv_kernel,
+    "depthwise_conv2d": _conv_kernel,
+    "pool": _pool_kernel,
+    "elementwise": _elementwise_kernel,
+    "softmax": _softmax_kernel,
+    "fully_connected": _fully_connected_kernel,
+    "matmul": _matmul_kernel,
+    "concat": _concat_kernel,
+    "pad": _pad_kernel,
+    "mean": _mean_kernel,
+}
+
+
+def apply_op(arena: jax.Array, spec: OpSpec, weights: Tuple[jax.Array, ...],
+             interpret: bool = True) -> jax.Array:
+    """Run one op in-place on the flat arena; returns the (aliased) arena."""
+    kernel = functools.partial(_KERNELS[spec.kind], spec=spec)
+    fn = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(arena.shape, arena.dtype),
+        input_output_aliases={0: 0},            # the arena is donated through
+        interpret=interpret,
+    )
+    return fn(arena, *weights)
+
+
+def lower_program(specs: Tuple[OpSpec, ...], interpret: bool = True):
+    """Jit-compiled executor for a spec sequence: ``fn(arena, *weights) ->
+    arena``. The arena argument is donated, so together with the per-op
+    aliasing the whole network runs in one flat buffer. Cached on the spec
+    content — structurally identical plans share the compiled program."""
+    return _lower_program_cached(tuple(specs), bool(interpret))
+
+
+@functools.lru_cache(maxsize=128)
+def _lower_program_cached(specs: Tuple[OpSpec, ...], interpret: bool):
+    weight_counts = tuple(1 if s.kind in WEIGHTED_KINDS else 0 for s in specs)
+
+    def run(arena, *wflat):
+        i = 0
+        for spec, nw in zip(specs, weight_counts):
+            arena = apply_op(arena, spec, wflat[i:i + nw], interpret)
+            i += nw
+        return arena
+
+    return jax.jit(run, donate_argnums=0)
