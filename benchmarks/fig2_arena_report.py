@@ -5,10 +5,13 @@ plus an ASCII rendering of the diagonal packing. Both plans come from one
 
 Since the executor backend layer landed, the report also answers the paper's
 implicit runtime question — does executing inside the overlapped arena cost
-throughput? An f32 build of the same architecture is executed on both
-backends (numpy row-interpreter, pallas interpret-mode kernels), on the DMO
-plan *and* on the non-overlapping baseline plan, so the CSV carries layout
-savings and execution overhead side by side."""
+throughput? Reduced-resolution builds of the same architecture are executed
+on both backends (numpy row-interpreter, pallas interpret-mode kernels), on
+the DMO plan *and* on the non-overlapping baseline plan, so the CSV carries
+layout savings and execution overhead side by side — in **both dtype
+tiers**: the f32 build and, since the dtype-aware executor subsystem, the
+int8 build running the quantised tier (int32 accumulation + requantisation)
+inside its byte arena."""
 from __future__ import annotations
 
 import time
@@ -37,17 +40,20 @@ def _compile():
                          method="algorithmic", budget_s="auto")
 
 
-def _exec_model():
-    """f32, reduced-res build of the flagship — executable by both backends."""
-    return zoo.mobilenet_v1(0.25, 64, 4)
+#: Reduced-res builds of the flagship — executable by both backends in both
+#: dtype tiers (f32 reference tier, int8 quantised tier).
+_EXEC_MODELS = {
+    "f32": lambda: zoo.mobilenet_v1(0.25, 64, 4),
+    "i8": lambda: zoo.mobilenet_v1(0.25, 64, 1),
+}
 
 
-def _time_exec(backend, plan, inputs, weights, n=3):
+def _time_exec(backend, plan, inputs, weights, quant, n=3):
     be = X.get_backend(backend)
-    be.execute(plan, inputs, weights)       # warm (jit trace for pallas)
+    be.execute(plan, inputs, weights, quant=quant)  # warm (jit for pallas)
     t0 = time.perf_counter()
     for _ in range(n):
-        be.execute(plan, inputs, weights)
+        be.execute(plan, inputs, weights, quant=quant)
     return (time.perf_counter() - t0) / n * 1e6
 
 
@@ -60,21 +66,26 @@ def run(csv_rows):
     csv_rows.append(("fig2/arena_original_kb", us,
                      f"{cp.baseline_bytes / 1024:.0f} {tag}"))
     csv_rows.append(("fig2/arena_dmo_kb", us,
-                     f"{cp.peak_bytes / 1024:.0f} {tag}"))
+                     f"{cp.peak_bytes / 1024:.0f} "
+                     f"dtypes={cp.plan.dtype_peaks_report()} {tag}"))
 
-    # executor backends: DMO plan vs non-overlapping baseline plan
-    ecp = compile_graph(_exec_model(), split="off",
-                        passes=("baseline", "serialise", "plan", "verify"))
-    inputs = X.random_inputs(ecp.graph)
-    weights = X.synth_weights(ecp.graph)
-    for backend in ("numpy", "pallas"):
-        dmo_us = _time_exec(backend, ecp.plan, inputs, weights)
-        base_us = _time_exec(backend, ecp.baseline, inputs, weights)
-        over = 100.0 * (dmo_us / base_us - 1.0)
-        csv_rows.append((
-            f"fig2/exec_{backend}_dmo", dmo_us,
-            f"arena={ecp.peak_bytes}B baseline_us={base_us:.0f} "
-            f"dmo_overhead={over:+.1f}%"))
+    # executor backends: DMO plan vs non-overlapping baseline plan, per tier
+    for tier, build in _EXEC_MODELS.items():
+        ecp = compile_graph(build(), split="off",
+                            passes=("baseline", "serialise", "plan", "verify"))
+        weights = X.synth_weights(ecp.graph)
+        quant = (X.calibrate(ecp.graph, 0, weights)
+                 if X.needs_quant(ecp.graph) else None)
+        inputs = (X.quant_inputs(ecp.graph, quant) if quant is not None
+                  else X.random_inputs(ecp.graph))
+        for backend in ("numpy", "pallas"):
+            dmo_us = _time_exec(backend, ecp.plan, inputs, weights, quant)
+            base_us = _time_exec(backend, ecp.baseline, inputs, weights, quant)
+            over = 100.0 * (dmo_us / base_us - 1.0)
+            csv_rows.append((
+                f"fig2/exec_{tier}_{backend}_dmo", dmo_us,
+                f"arena={ecp.peak_bytes}B baseline_us={base_us:.0f} "
+                f"dmo_overhead={over:+.1f}%"))
     return csv_rows
 
 

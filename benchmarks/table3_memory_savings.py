@@ -8,16 +8,66 @@ the old per-model plan/compare boilerplate lives in the pipeline now. A
 second compile with the extended overlap profile gives the beyond-paper
 column.
 
+Since the dtype-aware executor layer, each row also reports the arena peak
+*per dtype* and an execution status: the paper's flagship 8-bit rows (where
+Table III's headline savings are measured) are compiled for both executor
+backends, run inside their overlapped byte arena, and parity-checked against
+the quantised private-buffer reference — "executed", not "planned-only".
+``REPRO_DMO_EXEC_ELEMS`` caps how large a model the row-by-row executors
+attempt (default 8M arena elements, which covers both 8-bit rows).
+
 Paper numbers are cited inline; structural deltas for the complex connected
 models (whose exact TFLite graph serialisations the paper does not specify)
 are discussed in EXPERIMENTS.md.
 """
 from __future__ import annotations
 
+import os
 import time
 
+from repro.core import exec as X
 from repro.core import zoo
+from repro.core.arena import run_reference
 from repro.core.pipeline import auto_budget_s, compile as compile_graph
+
+#: Executor size cap (total arena elements) for the execution-status column.
+_EXEC_ELEMS = int(os.environ.get("REPRO_DMO_EXEC_ELEMS", 8_000_000))
+
+
+def _execute_status(name, build) -> str:
+    """Execute the model's DMO plan on both arena backends and parity-check
+    against the quantised reference. Only the paper's 8-bit rows run here —
+    f32 execution timings live in fig2_arena_report / kernel_bench."""
+    if name not in zoo.TABLE3_8BIT_MODELS:
+        return "planned-only(f32: timed in fig2/kernel_bench)"
+    g = build()
+    reason = X.executability(g)
+    if reason is not None:
+        return f"planned-only({reason})"
+    elems = sum(t.elems for t in g.arena_tensors())
+    if elems > _EXEC_ELEMS:
+        return f"planned-only({elems} elems > REPRO_DMO_EXEC_ELEMS)"
+    # plan the input graph only (split bands / aggregated views are by
+    # design not executable). No "verify" pass: the explicit parity check
+    # below against the quantised reference covers both backends without
+    # paying for the pipeline's own reference + execution round.
+    cp = compile_graph(g, profile="paper", method="algorithmic", split="off",
+                       passes=("baseline", "serialise", "plan"),
+                       backend="pallas")
+    weights = X.synth_weights(cp.graph)
+    quant = X.calibrate(cp.graph, 0, weights)
+    inputs = X.quant_inputs(cp.graph, quant)
+    ref = run_reference(cp.graph, inputs, cp.plan.order, weights=weights,
+                        quant=quant)
+    times = []
+    for backend in ("numpy", "pallas"):
+        t0 = time.perf_counter()
+        got = cp.execute(inputs, weights, backend=backend, quant=quant)
+        times.append(f"{backend}={((time.perf_counter() - t0) * 1e3):.0f}ms")
+        X.compare_outputs(ref, got, exact=(backend == "numpy"),
+                          label=f"table3 {cp.graph.name} {backend}")
+    return (f"executed({'/'.join(times)} "
+            f"exec_saving={cp.saving_pct:.1f}% parity=ok)")
 
 
 def run(csv_rows, search: bool = True):
@@ -36,7 +86,8 @@ def run(csv_rows, search: bool = True):
             ext = min(ext_cp.peak_bytes, cp.peak_bytes)
         else:
             ext = cp.peak_bytes
-        us = (time.perf_counter() - t0) * 1e6
+        us = (time.perf_counter() - t0) * 1e6  # planning time only
+        status = _execute_status(name, build)
         orig_kb = cp.baseline_bytes / 1024
         opt_kb = cp.peak_bytes / 1024
         psav = (100.0 * (1 - paper_opt / paper_orig)) if paper_orig else 0.0
@@ -46,6 +97,8 @@ def run(csv_rows, search: bool = True):
             f"dmo={opt_kb:.0f}KB(paper {paper_opt}) "
             f"saving={cp.saving_pct:.1f}%(paper {psav:.1f}%) "
             f"beyond={ext / 1024:.0f}KB "
+            f"dtypes={cp.plan.dtype_peaks_report()} "
+            f"exec={status} "
             # a warm plan cache (disk tier) turns us_per_call into load time,
             # not planning time — disclose it per row
             f"cache={'hit' if cp.cache_hit else 'miss'}"))

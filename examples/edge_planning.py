@@ -44,16 +44,18 @@ print("\n(paper §IV: v1 0.25 128 8-bit needs 96 KB originally — exactly all "
       "deployable. Weights: 623 KB of the 768 KB flash.)")
 
 # ---------------------------------------------------------------------------
-# And the plan is not just a layout — it runs. The 8-bit edge builds stay
-# planning-only (the executor backends are f32), so demonstrate on an f32
-# reduced-res build of the same architecture: one flat arena, both backends.
+# And the plan is not just a layout — it runs. Since the dtype-aware
+# executor subsystem the 8-bit edge build itself executes: int8 activations
+# in one flat byte arena, int32 accumulation, per-tensor requantisation
+# (calibrated from a float reference run) — on both backends.
 # ---------------------------------------------------------------------------
-print("\nexecuting the planned arena (f32 build, reduced res):")
-ecp = compile_graph(zoo.mobilenet_v1(0.25, 64, 4), backend="pallas",
+print("\nexecuting the planned arena (the paper's 8-bit build itself):")
+ecp = compile_graph(zoo.mobilenet_v1(0.25, 128, 1), backend="pallas",
                     split="off")
 for backend in ("numpy", "pallas"):
     outs = ecp.execute(backend=backend)
+    dtypes = ", ".join(sorted(str(v.dtype) for v in outs.values()))
     print(f"  backend={backend:6s} ran {len(ecp.plan.order)} ops in one "
-          f"{ecp.peak_bytes / 1024:.1f} KB arena "
+          f"{ecp.peak_bytes / 1024:.1f} KB int8 byte arena "
           f"({ecp.saving_pct:.1f}% below the {ecp.baseline_bytes / 1024:.1f}"
-          f" KB baseline); outputs: {', '.join(sorted(outs))}")
+          f" KB baseline); outputs: {', '.join(sorted(outs))} ({dtypes})")

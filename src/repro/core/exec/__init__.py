@@ -31,8 +31,11 @@ from typing import Any, Callable, Dict, Protocol, Tuple
 import numpy as np
 
 from repro.core.exec import ops
-from repro.core.exec.ops import (ELEMENTWISE, SUPPORTED_KINDS, executability,
-                                 executable, random_inputs, synth_weights)
+from repro.core.exec.ops import (ELEMENTWISE, SUPPORTED_DTYPES,
+                                 SUPPORTED_KINDS, OpQuant, QParams, QuantSpec,
+                                 arena_dtype, calibrate, executability,
+                                 executable, needs_quant, op_quant,
+                                 quant_inputs, random_inputs, synth_weights)
 from repro.core.graph import Graph
 from repro.core.planner import Plan
 
@@ -44,11 +47,12 @@ class ArenaExecutor(Protocol):
     name: str
 
     def execute(self, plan_or_compiled, inputs=None, weights=None, *,
-                seed: int = 0) -> Dict[str, np.ndarray]:
+                seed: int = 0, quant=None) -> Dict[str, np.ndarray]:
         """Execute ``plan_or_compiled`` (a Plan or CompiledPlan) and return
         the model outputs keyed by tensor name. ``inputs`` / ``weights``
         default to the deterministic per-seed synthesis shared by all
-        backends."""
+        backends; ``quant`` is the :class:`~repro.core.exec.ops.QuantSpec`
+        for int8 graphs (auto-calibrated when omitted)."""
         ...
 
 
@@ -118,17 +122,26 @@ register_backend("pallas", _pallas_factory)
 #: pass, verify_plan and cross_check all compare through it.
 FP32_RTOL = 1e-4
 FP32_ATOL = 1e-4
+#: Integer (int8) outputs tolerate one least-significant quantisation step:
+#: transcendental ulp differences (exp in softmax/sigmoid) can flip a round.
+INT8_ATOL = 1
 
 
 def compare_outputs(ref: Dict[str, np.ndarray], got: Dict[str, np.ndarray],
                     exact: bool, label: str) -> None:
-    """Assert two output dicts match: bit-exact, or at the shared fp32
-    tolerance. Raises ``AssertionError`` on any mismatch."""
+    """Assert two output dicts match: bit-exact, or at the shared tolerance
+    for the output's dtype (fp32 atol/rtol for float outputs, <= 1 LSB for
+    quantised int8 outputs). Raises ``AssertionError`` on any mismatch."""
     assert ref.keys() == got.keys(), f"{label}: output sets differ"
     for k in ref:
         if exact:
             np.testing.assert_array_equal(got[k], ref[k],
                                           err_msg=f"output {k} ({label})")
+        elif np.issubdtype(np.asarray(ref[k]).dtype, np.integer):
+            np.testing.assert_allclose(
+                np.asarray(got[k]).astype(np.int32),
+                np.asarray(ref[k]).astype(np.int32),
+                rtol=0, atol=INT8_ATOL, err_msg=f"output {k} ({label})")
         else:
             np.testing.assert_allclose(got[k], ref[k], rtol=FP32_RTOL,
                                        atol=FP32_ATOL,
@@ -137,25 +150,33 @@ def compare_outputs(ref: Dict[str, np.ndarray], got: Dict[str, np.ndarray],
 
 def cross_check(plan_or_compiled, seed: int = 0,
                 backends: Tuple[str, str] = ("numpy", "pallas")) -> None:
-    """Execute the plan on both backends with identical inputs/weights and
-    assert the arena outputs agree (fp32 tolerance: XLA may reassociate the
-    dot-product accumulations the numpy semantics run in loop order).
-    Raises ``AssertionError`` on any mismatch."""
+    """Execute the plan on both backends with identical inputs/weights (and,
+    for int8 graphs, one shared calibration) and assert the arena outputs
+    agree — fp32 tolerance where XLA may reassociate the dot-product
+    accumulations the numpy semantics run in loop order, <= 1 LSB on
+    quantised outputs. Raises ``AssertionError`` on any mismatch."""
     plan, graph = unwrap_plan(plan_or_compiled)
     reason = executability(graph)
     if reason is not None:
         raise ValueError(f"graph is not executable by arena backends: {reason}")
-    inputs = random_inputs(graph, seed)
     weights = synth_weights(graph, seed)
-    a = get_backend(backends[0]).execute(plan, inputs, weights, seed=seed)
-    b = get_backend(backends[1]).execute(plan, inputs, weights, seed=seed)
+    quant = calibrate(graph, seed, weights) if needs_quant(graph) else None
+    inputs = (quant_inputs(graph, quant, seed) if quant is not None
+              else random_inputs(graph, seed))
+    a = get_backend(backends[0]).execute(plan, inputs, weights, seed=seed,
+                                         quant=quant)
+    b = get_backend(backends[1]).execute(plan, inputs, weights, seed=seed,
+                                         quant=quant)
     compare_outputs(a, b, exact=False,
                     label=f"{backends[1]} vs {backends[0]}")
 
 
 __all__ = [
-    "ArenaExecutor", "ELEMENTWISE", "FP32_ATOL", "FP32_RTOL",
-    "SUPPORTED_KINDS", "available_backends", "compare_outputs", "cross_check",
-    "executability", "executable", "get_backend", "ops", "random_inputs",
-    "register_backend", "synth_weights", "unwrap_plan",
+    "ArenaExecutor", "ELEMENTWISE", "FP32_ATOL", "FP32_RTOL", "INT8_ATOL",
+    "arena_dtype",
+    "OpQuant", "QParams", "QuantSpec", "SUPPORTED_DTYPES", "SUPPORTED_KINDS",
+    "available_backends", "calibrate", "compare_outputs", "cross_check",
+    "executability", "executable", "get_backend", "needs_quant", "op_quant",
+    "ops", "quant_inputs", "random_inputs", "register_backend",
+    "synth_weights", "unwrap_plan",
 ]

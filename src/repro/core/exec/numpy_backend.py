@@ -3,19 +3,27 @@
 Two executors over the shared op semantics of :mod:`repro.core.exec.ops`:
 
 - :class:`ReferenceExec` — private buffer per tensor (ground truth);
-- :class:`ArenaExec`     — all intermediates live inside ONE flat byte arena
-  at the offsets chosen by a :class:`~repro.core.planner.Plan`, each op
+- :class:`ArenaExec`     — all intermediates live inside ONE flat *byte*
+  arena at the offsets chosen by a :class:`~repro.core.planner.Plan`, each op
   processing its output *row by row in ascending index order* (reads of a row
   happen no later, and writes no earlier, than the reference element order —
-  so a plan safe for the element order is safe here).
+  so a plan safe for the element order is safe here). Tensors are typed
+  views into the byte arena — int8 ops read/write i8 views at byte offsets,
+  f32 ops f32 views — so mixed-dtype plans execute in the one buffer.
+
+Both executors are dtype-aware: ops whose output storage is int8 run the
+quantised tier (int32 accumulation + per-tensor scale/zero-point
+requantisation) when a :class:`~repro.core.exec.ops.QuantSpec` is supplied;
+f32 ops always run the float32 reference semantics.
 
 :class:`NumpyExecutor` wraps the pair behind the
 :class:`~repro.core.exec.ArenaExecutor` protocol; :func:`verify_plan` runs
 an arena backend against the private-buffer reference and asserts equality
-(bit-exact for numpy, fp32 tolerance for backends whose accumulation order
-XLA may reassociate). If the plan overlapped any buffer unsafely, the arena
-execution clobbers a live value and the comparison fails — the
-open-source-tool verification described in the paper's §I.
+(bit-exact for numpy, tolerance for backends whose accumulation order XLA
+may reassociate — fp32 atol for float graphs, <= 1 LSB for int8). If the
+plan overlapped any buffer unsafely, the arena execution clobbers a live
+value and the comparison fails — the open-source-tool verification described
+in the paper's §I.
 """
 from __future__ import annotations
 
@@ -32,10 +40,14 @@ class _Exec:
     """Shared op evaluation; subclasses define tensor load/store."""
 
     def __init__(self, graph: Graph, seed: int = 0,
-                 weights: Optional[Dict[int, Dict[str, np.ndarray]]] = None):
+                 weights: Optional[Dict[int, Dict[str, np.ndarray]]] = None,
+                 quant: Optional[X.QuantSpec] = None):
         self.graph = graph
         self.weights = weights if weights is not None else X.synth_weights(
             graph, seed)
+        #: Quantisation spec; None runs every op on the f32 tier (which is
+        #: exactly what calibration needs on an int8-annotated graph).
+        self.quant = quant
 
     def load(self, t: Tensor) -> np.ndarray:
         raise NotImplementedError
@@ -52,67 +64,47 @@ class _Exec:
         for op in (order or self.graph.ops):
             self.execute(op)
 
+    def _filter(self, op: Op, q) -> Optional[np.ndarray]:
+        """The op's weight tensor on the active tier (int8 when quantised)."""
+        if q is not None and id(op) in self.quant.weights_q:
+            return self.quant.weights_q[id(op)]["filter"]
+        return self.weights[id(op)].get("filter")
+
     def execute(self, op: Op) -> None:
-        k = op.kind
-        if k in ("conv2d", "depthwise_conv2d"):
+        if op.kind == "reshape":
+            return  # aliasing no-op
+        q = X.op_quant(op, self.quant)
+        if op.kind in ("conv2d", "depthwise_conv2d"):
             x = self.load(op.inputs[0]).reshape(op.inputs[0].shape)
             x3 = x.reshape(x.shape[-3:])
-            filt = self.weights[id(op)]["filter"]
+            filt = self._filter(op, q)
             oh = op.output.shape[-3]
-            self.store_rows(op, (X.conv_row(op, x3, filt, oy)
+            self.store_rows(op, (X.conv_row(op, x3, filt, oy, q)
                                  for oy in range(oh)))
-        elif k == "pool":
+        elif op.kind == "pool":
             x3 = self.load(op.inputs[0]).reshape(op.inputs[0].shape[-3:])
             oh = op.output.shape[-3]
-            self.store_rows(op, (X.pool_row(op, x3, oy) for oy in range(oh)))
-        elif k == "elementwise":
-            fn = X.ELEMENTWISE[op.params.get("fn", "relu")]
-            xs = [self.load(t).reshape(t.shape) for t in op.inputs
-                  if t.kind != "weight"]
-            if len(xs) == 2 and xs[1].size != xs[0].size:
-                xs[1] = np.broadcast_to(xs[1], xs[0].shape)
-            self.store(op.output, fn(*xs).astype(np.float32))
-        elif k == "softmax":
-            x = self.load(op.inputs[0]).reshape(op.inputs[0].shape)
-            e = np.exp(x - x.max(axis=-1, keepdims=True))
-            self.store(op.output,
-                       (e / e.sum(axis=-1, keepdims=True)).astype(np.float32))
-        elif k == "fully_connected":
-            x = self.load(op.inputs[0]).reshape(-1, op.inputs[0].shape[-1])
-            filt = self.weights[id(op)]["filter"]
-            self.store(op.output,
-                       (x @ filt).reshape(op.output.shape).astype(np.float32))
-        elif k == "matmul":
-            a = self.load(op.inputs[0]).reshape(-1, op.inputs[0].shape[-1])
-            b = self.load(op.inputs[1]).reshape(op.inputs[1].shape)
-            self.store(op.output,
-                       (a @ b).reshape(op.output.shape).astype(np.float32))
-        elif k == "concat":
-            axis = op.params.get("axis", -1)
-            xs = [self.load(t).reshape(t.shape) for t in op.inputs]
-            self.store(op.output, np.concatenate(xs, axis=axis))
-        elif k == "pad":
-            x = self.load(op.inputs[0]).reshape(op.inputs[0].shape)
-            self.store(op.output, np.pad(x, op.params["paddings"]))
-        elif k == "mean":
-            x = self.load(op.inputs[0]).reshape(op.inputs[0].shape)
-            axes = tuple(op.params.get("axes", range(x.ndim - 1)))
-            self.store(op.output, x.mean(axis=axes).reshape(op.output.shape)
-                       .astype(np.float32))
-        elif k == "reshape":
-            pass  # aliasing no-op
+            self.store_rows(op, (X.pool_row(op, x3, oy, q)
+                                 for oy in range(oh)))
         else:
-            raise NotImplementedError(f"arena executor: {k}")
+            xs = [self.load(t).reshape(t.shape) for t in op.inputs
+                  if t.storage().kind != "weight"]
+            self.store(op.output, X.eval_op(op, xs, self._filter(op, q), q))
 
 
 class ReferenceExec(_Exec):
     def __init__(self, graph: Graph, inputs: Dict[str, np.ndarray],
-                 seed: int = 0, weights=None):
-        super().__init__(graph, seed, weights)
+                 seed: int = 0, weights=None, quant=None):
+        super().__init__(graph, seed, weights, quant)
         self.vals: Dict[Tensor, np.ndarray] = {}
         for t in graph.tensors:
             if t.kind == "input":
-                self.vals[t.storage()] = inputs[t.name].astype(np.float32)
+                v = np.asarray(inputs[t.name])
+                # int8 inputs stay int8 (quantised execution); everything
+                # else is the f32 tier (including calibration runs, which
+                # feed float inputs to an int8-annotated graph)
+                self.vals[t.storage()] = v if v.dtype == np.int8 \
+                    else v.astype(np.float32)
 
     def load(self, t: Tensor) -> np.ndarray:
         return self.vals[t.storage()]
@@ -122,62 +114,73 @@ class ReferenceExec(_Exec):
 
 
 class ArenaExec(_Exec):
-    """Executes inside a single flat float32 arena at planned offsets.
+    """Executes inside a single flat byte arena at planned offsets.
 
     Conv/pool outputs are written row-by-row (ascending), loads re-read the
     arena for every row — faithfully modelling the MCU execution order that
-    DMO's O_s guarantees safe.
+    DMO's O_s guarantees safe. Each tensor is a dtype view
+    (:func:`~repro.core.exec.ops.arena_dtype`) into the byte buffer at its
+    planned byte offset, which the planner keeps ``dtype_bytes``-aligned.
     """
 
     def __init__(self, graph: Graph, plan: Plan,
-                 inputs: Dict[str, np.ndarray], seed: int = 0, weights=None):
-        super().__init__(graph, seed, weights)
+                 inputs: Dict[str, np.ndarray], seed: int = 0, weights=None,
+                 quant=None):
+        super().__init__(graph, seed, weights, quant)
+        if quant is None and X.needs_quant(graph):
+            # without a QuantSpec every op would run the f32 tier and its
+            # store would silently truncate floats into the int8 views —
+            # fail loudly instead (NumpyExecutor.execute auto-calibrates)
+            raise ValueError(
+                f"{graph.name!r} has int8 arena tensors: arena execution "
+                "requires a QuantSpec (see repro.core.exec.ops.calibrate)")
         self.plan = plan
-        assert plan.peak_bytes % 4 == 0
-        self.arena = np.zeros(plan.peak_bytes // 4, np.float32)
+        self.arena = np.zeros(plan.peak_bytes, np.uint8)
         for t in graph.tensors:
             if t.kind == "input":
-                self.store(t, inputs[t.name].astype(np.float32))
+                self.store(t, np.asarray(inputs[t.name]))
 
-    def _slice(self, t: Tensor) -> slice:
+    def _view(self, t: Tensor) -> np.ndarray:
+        """Typed view of the tensor's storage bytes inside the arena."""
         s = t.storage()
         off = self.plan.offsets[s]
-        assert off % 4 == 0 and s.dtype_bytes == 4, "arena exec is float32-only"
-        return slice(off // 4, off // 4 + s.elems)
+        assert off % s.dtype_bytes == 0, \
+            f"{s.name}: byte offset {off} not {s.dtype_bytes}-byte aligned"
+        return self.arena[off:off + s.nbytes].view(X.arena_dtype(s.dtype_bytes))
 
     def load(self, t: Tensor) -> np.ndarray:
-        return self.arena[self._slice(t)].copy().reshape(t.shape)
+        return self._view(t).copy().reshape(t.shape)
 
     def store(self, t: Tensor, v: np.ndarray) -> None:
-        self.arena[self._slice(t)] = v.reshape(-1)
+        view = self._view(t)
+        view[:] = np.asarray(v, dtype=view.dtype).reshape(-1)
 
     def store_rows(self, op: Op, rows) -> None:
         out = op.output
-        sl = self._slice(out)
+        view = self._view(out)
         row_elems = out.elems // out.shape[-3]
-        base = sl.start
         for i, r in enumerate(rows):
             # NOTE: each row's inputs were loaded lazily by conv_row via the
             # generator *before* this store — but rows are produced one at a
             # time, so reads for row i+1 happen after the row-i store, exactly
             # the diagonal order.
-            self.arena[base + i * row_elems: base + (i + 1) * row_elems] = \
-                r.reshape(-1)
+            view[i * row_elems:(i + 1) * row_elems] = r.reshape(-1)
 
     def execute(self, op: Op) -> None:
         # conv/pool must re-load input per row to see the live arena
         if op.kind in ("conv2d", "depthwise_conv2d", "pool"):
+            q = X.op_quant(op, self.quant)
             x_t = op.inputs[0]
-            filt = self.weights[id(op)].get("filter")
+            filt = self._filter(op, q)
             oh = op.output.shape[-3]
 
             def rows():
                 for oy in range(oh):
                     x3 = self.load(x_t).reshape(x_t.shape[-3:])
                     if op.kind == "pool":
-                        yield X.pool_row(op, x3, oy)
+                        yield X.pool_row(op, x3, oy, q)
                     else:
-                        yield X.conv_row(op, x3, filt, oy)
+                        yield X.conv_row(op, x3, filt, oy, q)
 
             self.store_rows(op, rows())
         else:
@@ -191,16 +194,17 @@ class ArenaExec(_Exec):
 
 def run_reference(graph: Graph, inputs: Dict[str, np.ndarray],
                   order: Optional[List[Op]] = None, seed: int = 0,
-                  weights=None) -> Dict[str, np.ndarray]:
-    ex = ReferenceExec(graph, inputs, seed, weights)
+                  weights=None, quant=None) -> Dict[str, np.ndarray]:
+    ex = ReferenceExec(graph, inputs, seed, weights, quant)
     ex.run(order)
     return {t.name: ex.vals[t.storage()]
             for t in graph.tensors if t.kind == "output"}
 
 
 def run_in_arena(graph: Graph, plan: Plan, inputs: Dict[str, np.ndarray],
-                 seed: int = 0, weights=None) -> Dict[str, np.ndarray]:
-    ex = ArenaExec(graph, plan, inputs, seed, weights)
+                 seed: int = 0, weights=None,
+                 quant=None) -> Dict[str, np.ndarray]:
+    ex = ArenaExec(graph, plan, inputs, seed, weights, quant)
     ex.run(plan.order)
     return {t.name: ex.load(t) for t in graph.tensors if t.kind == "output"}
 
@@ -211,33 +215,40 @@ class NumpyExecutor:
     name = "numpy"
 
     def execute(self, plan_or_compiled, inputs=None, weights=None, *,
-                seed: int = 0) -> Dict[str, np.ndarray]:
+                seed: int = 0, quant=None) -> Dict[str, np.ndarray]:
         from repro.core.exec import unwrap_plan
         plan, graph = unwrap_plan(plan_or_compiled)
         reason = X.executability(graph)
         if reason is not None:
             # same gate as the pallas backend: split row bands / strided
-            # views / non-f32 graphs would execute with silently wrong
-            # semantics rather than fail — refuse loudly instead
+            # views / unsupported-dtype graphs would execute with silently
+            # wrong semantics rather than fail — refuse loudly instead
             raise ValueError(
                 f"numpy backend cannot execute {graph.name!r}: {reason}")
-        if inputs is None:
-            inputs = X.random_inputs(graph, seed)
         if weights is None:
             weights = X.synth_weights(graph, seed)
-        return run_in_arena(graph, plan, inputs, seed, weights)
+        if quant is None and X.needs_quant(graph):
+            quant = X.calibrate(graph, seed, weights)
+        if inputs is None:
+            inputs = (X.quant_inputs(graph, quant, seed) if quant is not None
+                      else X.random_inputs(graph, seed))
+        return run_in_arena(graph, plan, inputs, seed, weights, quant)
 
 
 def verify_plan(graph: Graph, plan: Plan, seed: int = 0,
                 backend: str = "numpy") -> None:
     """Assert the planned arena execution matches private buffers: bit-exact
-    for the numpy backend; fp32 tolerance for backends (pallas) whose dot
-    accumulations XLA may reassociate. Any unsafe overlap in the plan
-    clobbers a live value and raises ``AssertionError``."""
+    for the numpy backend; tolerance for backends (pallas) whose dot
+    accumulations XLA may reassociate (fp32 atol, or <= 1 LSB on int8
+    outputs). Any unsafe overlap in the plan clobbers a live value and
+    raises ``AssertionError``."""
     from repro.core.exec import compare_outputs, get_backend
-    inputs = X.random_inputs(graph, seed)
     weights = X.synth_weights(graph, seed)
-    ref = run_reference(graph, inputs, plan.order, seed, weights)
-    got = get_backend(backend).execute(plan, inputs, weights, seed=seed)
+    quant = X.calibrate(graph, seed, weights) if X.needs_quant(graph) else None
+    inputs = (X.quant_inputs(graph, quant, seed) if quant is not None
+              else X.random_inputs(graph, seed))
+    ref = run_reference(graph, inputs, plan.order, seed, weights, quant)
+    got = get_backend(backend).execute(plan, inputs, weights, seed=seed,
+                                       quant=quant)
     compare_outputs(ref, got, exact=(backend == "numpy"),
                     label=f"{backend} arena vs reference")

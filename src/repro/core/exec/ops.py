@@ -12,12 +12,24 @@ Backends reuse these definitions rather than re-deriving them:
   same loop nests in its kernels (:mod:`repro.kernels.arena_ops`) and is
   cross-checked against the numpy backend by the pipeline's verify pass.
 
+Every kernel is **dtype-parameterised**: with ``q=None`` it runs the f32
+reference semantics; with an :class:`OpQuant` context it runs the quantised
+tier — int8 storage, int32 accumulation, per-tensor scale/zero-point
+requantisation (TFLite-micro affine convention: asymmetric int8 activations,
+symmetric int8 weights). The requantisation arithmetic is float32 end to end
+(:func:`requantise`), formula-for-formula identical to the jnp mirrors in
+:mod:`repro.kernels.arena_ops`, so the two backends agree to <= 1 LSB.
+
 Weight synthesis lives here too, so all backends execute the same network:
 weights are deterministic per (graph, seed) and keyed by op identity.
+Quantisation parameters come from :func:`calibrate` — a float reference run
+records per-tensor ranges, exactly the post-training calibration step of the
+paper's 8-bit TFLite models.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -29,6 +41,13 @@ SUPPORTED_KINDS = frozenset({
     "conv2d", "depthwise_conv2d", "pool", "elementwise", "softmax",
     "fully_connected", "matmul", "concat", "pad", "mean", "reshape",
 })
+
+#: Arena dtype widths the executor backends implement, mapped to the numpy
+#: dtype a byte-arena view uses. (f16 plans are plannable but not executable.)
+SUPPORTED_DTYPES: Dict[int, np.dtype] = {
+    1: np.dtype(np.int8),
+    4: np.dtype(np.float32),
+}
 
 #: Elementwise function table shared by all backends (numpy ufunc semantics;
 #: the pallas backend maps these 1:1 onto jnp equivalents).
@@ -43,23 +62,35 @@ ELEMENTWISE = {
 }
 
 
+def arena_dtype(dtype_bytes: int) -> np.dtype:
+    """Numpy dtype a byte-arena view uses for a tensor of this width."""
+    return SUPPORTED_DTYPES[dtype_bytes]
+
+
 def weights_for(op: Op, rng: np.random.Generator) -> Dict[str, np.ndarray]:
-    """Deterministic random weights per op (same for every backend)."""
+    """Deterministic random weights per op (same for every backend),
+    fan-in-scaled (He style) so activation magnitudes stay O(1) through
+    arbitrarily deep graphs — unscaled gaussians blow up to ~1e16 after ~30
+    conv layers, which destroys f32 precision and makes post-training
+    calibration (and therefore the int8 tier) degenerate."""
     w: Dict[str, np.ndarray] = {}
     if op.kind == "conv2d":
         kh, kw = op.params["kernel"]
         ic = op.inputs[0].shape[-1]
         oc = op.output.shape[-1]
-        w["filter"] = rng.standard_normal((kh, kw, ic, oc)).astype(np.float32)
+        w["filter"] = (rng.standard_normal((kh, kw, ic, oc))
+                       / np.sqrt(kh * kw * ic)).astype(np.float32)
     elif op.kind == "depthwise_conv2d":
         kh, kw = op.params["kernel"]
         ic = op.inputs[0].shape[-1]
         kc = op.params.get("multiplier", 1)
-        w["filter"] = rng.standard_normal((kh, kw, ic, kc)).astype(np.float32)
+        w["filter"] = (rng.standard_normal((kh, kw, ic, kc))
+                       / np.sqrt(kh * kw)).astype(np.float32)
     elif op.kind == "fully_connected":
         idim = op.inputs[0].shape[-1]
         od = op.output.shape[-1]
-        w["filter"] = rng.standard_normal((idim, od)).astype(np.float32)
+        w["filter"] = (rng.standard_normal((idim, od))
+                       / np.sqrt(idim)).astype(np.float32)
     return w
 
 
@@ -72,12 +103,156 @@ def synth_weights(graph: Graph, seed: int = 0) -> Dict[int, Dict[str, np.ndarray
 
 
 def random_inputs(graph: Graph, seed: int = 0) -> Dict[str, np.ndarray]:
-    """Deterministic random model inputs (float32), keyed by tensor name."""
+    """Deterministic random model inputs (float32), keyed by tensor name.
+    These are the *real-valued* inputs; int8 graphs quantise them through
+    :func:`quant_inputs` after calibration."""
     rng = np.random.default_rng(seed + 1)
     return {
         t.name: rng.standard_normal(t.shape).astype(np.float32)
         for t in graph.tensors if t.kind == "input"
     }
+
+
+# ---------------------------------------------------------------------------
+# Quantisation (the paper's 8-bit TFLite-micro tier)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class QParams:
+    """Per-tensor affine quantisation: ``real = (q - zero_point) * scale``."""
+    scale: float
+    zero_point: int
+
+
+@dataclasses.dataclass
+class QuantSpec:
+    """Quantisation of one (graph, seed, weights) triple: per-tensor
+    activation params plus symmetric int8 weights per weighted op. Built by
+    :func:`calibrate`; shared by every backend so they execute the identical
+    quantised network."""
+    tensors: Dict[str, QParams]                  # storage tensor name -> params
+    weight_scale: Dict[int, float]               # id(op) -> weight scale
+    weights_q: Dict[int, Dict[str, np.ndarray]]  # id(op) -> int8 weights
+
+
+@dataclasses.dataclass(frozen=True)
+class OpQuant:
+    """Per-op quantised execution context: params of each arena input, of the
+    output, and the (symmetric) weight scale for weighted kinds."""
+    ins: Tuple[QParams, ...]
+    out: QParams
+    wscale: float = 0.0
+
+
+def needs_quant(graph: Graph) -> bool:
+    """True when any arena tensor is int8 — execution then requires a
+    :class:`QuantSpec`."""
+    return any(t.dtype_bytes == 1 for t in graph.arena_tensors())
+
+
+def quantise(x: np.ndarray, qp: QParams) -> np.ndarray:
+    """f32 -> int8 at the tensor's affine params (round half-to-even, the
+    convention both numpy and jnp share)."""
+    q = np.round(x.astype(np.float32) / np.float32(qp.scale)) + qp.zero_point
+    return np.clip(q, -128, 127).astype(np.int8)
+
+
+def dequantise(q: np.ndarray, qp: QParams) -> np.ndarray:
+    """int8 -> f32 at the tensor's affine params."""
+    return (q.astype(np.float32) - np.float32(qp.zero_point)) \
+        * np.float32(qp.scale)
+
+
+def requantise(acc: np.ndarray, mult: float, zp: int) -> np.ndarray:
+    """int32 accumulator (or f32 partial) -> int8 output: scale by the f32
+    multiplier, round, re-centre on the output zero point, saturate. The jnp
+    kernels implement this formula operation-for-operation, so backend
+    outputs agree to the last rounding ulp."""
+    q = np.round(acc.astype(np.float32) * np.float32(mult)) + zp
+    return np.clip(q, -128, 127).astype(np.int8)
+
+
+def rescale_q(x: np.ndarray, src: QParams, dst: QParams) -> np.ndarray:
+    """int8 -> int8 between two affine params (concat/pad input alignment)."""
+    mult = f32_div(src.scale, dst.scale)
+    return requantise(x.astype(np.int32) - src.zero_point, mult,
+                      dst.zero_point)
+
+
+def f32_div(a: float, b: float) -> float:
+    """a / b evaluated in float32 — the shared multiplier precision, so both
+    backends bake the bit-identical constant into their requantisation."""
+    return float(np.float32(np.float32(a) / np.float32(b)))
+
+
+def acc_multiplier(op: Op, q: OpQuant) -> float:
+    """The requantisation multiplier of an int32-accumulating op, evaluated
+    in float32: ``s_x * s_w / s_y`` for conv/depthwise/fully_connected,
+    ``s_a * s_b / s_y`` for matmul, ``s_x / s_y`` for pool/mean."""
+    if op.kind in ("conv2d", "depthwise_conv2d", "fully_connected"):
+        num = np.float32(np.float32(q.ins[0].scale) * np.float32(q.wscale))
+    elif op.kind == "matmul":
+        num = np.float32(np.float32(q.ins[0].scale) * np.float32(q.ins[1].scale))
+    else:  # pool / mean: storage passthrough scale
+        num = np.float32(q.ins[0].scale)
+    return float(np.float32(num / np.float32(q.out.scale)))
+
+
+def calibrate(graph: Graph, seed: int = 0,
+              weights: Optional[Dict[int, Dict[str, np.ndarray]]] = None,
+              ) -> QuantSpec:
+    """Post-training calibration: run the float32 reference once, record each
+    arena tensor's observed range (forced to include 0, the TFLite
+    convention), and derive asymmetric int8 activation params plus symmetric
+    int8 weights (zero_point 0, -128 reserved)."""
+    from repro.core.exec.numpy_backend import ReferenceExec  # lazy: no cycle
+    if weights is None:
+        weights = synth_weights(graph, seed)
+    ex = ReferenceExec(graph, random_inputs(graph, seed), seed, weights)
+    ex.run()
+    tensors: Dict[str, QParams] = {}
+    for t in graph.arena_tensors():
+        v = ex.vals.get(t)
+        lo = float(min(0.0, v.min())) if v is not None and v.size else -1.0
+        hi = float(max(0.0, v.max())) if v is not None and v.size else 1.0
+        scale = (hi - lo) / 255.0 or 1.0
+        zp = int(np.clip(round(-128.0 - lo / scale), -128, 127))
+        tensors[t.name] = QParams(scale, zp)
+    wscale: Dict[int, float] = {}
+    wq: Dict[int, Dict[str, np.ndarray]] = {}
+    for op in graph.ops:
+        w = weights.get(id(op), {})
+        if "filter" in w and op.output.storage().dtype_bytes == 1:
+            s = (float(np.abs(w["filter"]).max()) / 127.0) or 1.0
+            wscale[id(op)] = s
+            wq[id(op)] = {"filter": np.clip(
+                np.round(w["filter"] / np.float32(s)), -127, 127
+            ).astype(np.int8)}
+    return QuantSpec(tensors, wscale, wq)
+
+
+def quant_inputs(graph: Graph, spec: QuantSpec,
+                 seed: int = 0) -> Dict[str, np.ndarray]:
+    """The deterministic model inputs of :func:`random_inputs`, with int8
+    input tensors quantised at their calibrated params."""
+    floats = random_inputs(graph, seed)
+    return {
+        t.name: (quantise(floats[t.name], spec.tensors[t.name])
+                 if t.dtype_bytes == 1 else floats[t.name])
+        for t in graph.tensors if t.kind == "input"
+    }
+
+
+def op_quant(op: Op, spec: Optional[QuantSpec]) -> Optional[OpQuant]:
+    """Quantised execution context for one op, or ``None`` when the op runs
+    the f32 tier (f32 output, or no spec at all)."""
+    if spec is None or op.output.storage().dtype_bytes != 1:
+        return None
+    ins = tuple(spec.tensors[t.storage().name] for t in op.inputs
+                if t.storage().kind != "weight")
+    return OpQuant(ins, spec.tensors[op.output.storage().name],
+                   spec.weight_scale.get(id(op), 0.0))
 
 
 def pads(op: Op) -> Tuple[int, int]:
@@ -92,46 +267,64 @@ def pads(op: Op) -> Tuple[int, int]:
     return 0, 0
 
 
-def conv_row(op: Op, x: np.ndarray, filt: np.ndarray, oy: int) -> np.ndarray:
-    """One output row of conv2d/depthwise (x is HWC)."""
+# ---------------------------------------------------------------------------
+# Row kernels (conv/pool walk output rows in ascending index order)
+# ---------------------------------------------------------------------------
+
+
+def conv_row(op: Op, x: np.ndarray, filt: np.ndarray, oy: int,
+             q: Optional[OpQuant] = None) -> np.ndarray:
+    """One output row of conv2d/depthwise (x is HWC). f32 path with
+    ``q=None``; int8 path accumulates ``(x - x_zp) * w`` in int32 and
+    requantises with the float32 multiplier."""
     ih, iw, ic = x.shape
     oh, ow = op.output.shape[-3], op.output.shape[-2]
     kh, kw = op.params["kernel"]
     sh, sw = op.params.get("stride", (1, 1))
     dh, dw = op.params.get("dilation", (1, 1))
     ph, pw = pads(op)
-    if op.kind == "conv2d":
-        oc = op.output.shape[-1]
-        row = np.zeros((ow, oc), np.float32)
+    kc = op.params.get("multiplier", 1)
+    oc = op.output.shape[-1] if op.kind == "conv2d" else ic * kc
+    if q is not None:
+        acc = np.zeros((ow, oc), np.int32)
+        x_zp = q.ins[0].zero_point
     else:
-        kc = op.params.get("multiplier", 1)
-        row = np.zeros((ow, ic * kc), np.float32)
+        acc = np.zeros((ow, oc), np.float32)
     for fy in range(kh):
         iy = oy * sh - ph + fy * dh
         if not 0 <= iy < ih:
             continue
+        row = x[iy]                                           # (iw, ic)
+        if q is not None:
+            row = row.astype(np.int32) - x_zp
         for fx in range(kw):
             ixs = np.arange(ow) * sw - pw + fx * dw
             valid = (ixs >= 0) & (ixs < iw)
-            src = x[iy, np.clip(ixs, 0, iw - 1), :]          # (Ow, ic)
-            src = np.where(valid[:, None], src, 0.0)
+            src = row[np.clip(ixs, 0, iw - 1), :]             # (ow, ic)
+            src = np.where(valid[:, None], src, 0 if q is not None else 0.0)
+            w = filt[fy, fx]
             if op.kind == "conv2d":
-                row += src @ filt[fy, fx]                     # (Ow, oc)
+                acc += src @ (w.astype(np.int32) if q is not None else w)
             else:
-                kc = op.params.get("multiplier", 1)
-                contrib = src[:, :, None] * filt[fy, fx][None, :, :]
-                row += contrib.reshape(ow, ic * kc)
-    return row
+                w = w.astype(np.int32) if q is not None else w
+                acc += (src[:, :, None] * w[None, :, :]).reshape(ow, ic * kc)
+    if q is not None:
+        return requantise(acc, acc_multiplier(op, q), q.out.zero_point)
+    return acc
 
 
-def pool_row(op: Op, x: np.ndarray, oy: int) -> np.ndarray:
+def pool_row(op: Op, x: np.ndarray, oy: int,
+             q: Optional[OpQuant] = None) -> np.ndarray:
     ih, iw, c = x.shape
     ow = op.output.shape[-2]
     kh, kw = op.params["kernel"]
     sh, sw = op.params.get("stride", (1, 1))
     ph, pw = pads(op)
     mode = op.params.get("mode", "avg")
-    acc = np.full((ow, c), -np.inf if mode == "max" else 0.0, np.float32)
+    if q is not None:
+        acc = np.full((ow, c), -2147483647 if mode == "max" else 0, np.int32)
+    else:
+        acc = np.full((ow, c), -np.inf if mode == "max" else 0.0, np.float32)
     cnt = np.zeros((ow, 1), np.float32)
     for fy in range(kh):
         iy = oy * sh - ph + fy
@@ -141,14 +334,96 @@ def pool_row(op: Op, x: np.ndarray, oy: int) -> np.ndarray:
             ixs = np.arange(ow) * sw - pw + fx
             valid = (ixs >= 0) & (ixs < iw)
             src = x[iy, np.clip(ixs, 0, iw - 1), :]
+            if q is not None:
+                src = src.astype(np.int32)
             if mode == "max":
                 acc = np.where(valid[:, None], np.maximum(acc, src), acc)
             else:
-                acc += np.where(valid[:, None], src, 0.0)
+                acc += np.where(valid[:, None], src,
+                                0 if q is not None else 0.0)
                 cnt += valid[:, None].astype(np.float32)
+    if q is not None:
+        x_zp, mult = q.ins[0].zero_point, acc_multiplier(op, q)
+        if mode == "avg":
+            val = acc.astype(np.float32) / np.maximum(cnt, 1.0) - x_zp
+        else:
+            val = acc - x_zp
+        return requantise(val, mult, q.out.zero_point)
     if mode == "avg":
         acc = acc / np.maximum(cnt, 1.0)
     return acc
+
+
+# ---------------------------------------------------------------------------
+# Whole-tensor kernels (the non-row op kinds), dtype-parameterised
+# ---------------------------------------------------------------------------
+
+
+def eval_op(op: Op, xs: Sequence[np.ndarray],
+            filt: Optional[np.ndarray] = None,
+            q: Optional[OpQuant] = None) -> np.ndarray:
+    """Evaluate a non-row op on already-loaded arena inputs ``xs`` (weight
+    inputs excluded, op order preserved). ``filt`` is the synthesized weight
+    where the kind takes one (int8 when ``q`` is set). Returns the output
+    tensor value in the op's storage dtype."""
+    k = op.kind
+    if k == "elementwise":
+        fn = ELEMENTWISE[op.params.get("fn", "relu")]
+        if q is not None:
+            xs = [dequantise(x, qp) for x, qp in zip(xs, q.ins)]
+        xs = list(xs)
+        if len(xs) == 2 and xs[1].size != xs[0].size:
+            xs[1] = np.broadcast_to(xs[1], xs[0].shape)
+        if q is not None:
+            return quantise(fn(*xs).astype(np.float32), q.out)
+        return fn(*xs).astype(np.float32)
+    if k == "softmax":
+        x = dequantise(xs[0], q.ins[0]) if q is not None else xs[0]
+        e = np.exp(x - x.max(axis=-1, keepdims=True))
+        y = (e / e.sum(axis=-1, keepdims=True)).astype(np.float32)
+        return quantise(y, q.out) if q is not None else y
+    if k == "fully_connected":
+        x = xs[0].reshape(-1, op.inputs[0].shape[-1])
+        if q is not None:
+            acc = (x.astype(np.int32) - q.ins[0].zero_point) \
+                @ filt.astype(np.int32)
+            return requantise(acc, acc_multiplier(op, q),
+                              q.out.zero_point).reshape(op.output.shape)
+        return (x @ filt).reshape(op.output.shape).astype(np.float32)
+    if k == "matmul":
+        a = xs[0].reshape(-1, op.inputs[0].shape[-1])
+        b = xs[1].reshape(op.inputs[1].shape)
+        if q is not None:
+            acc = (a.astype(np.int32) - q.ins[0].zero_point) \
+                @ (b.astype(np.int32) - q.ins[1].zero_point)
+            return requantise(acc, acc_multiplier(op, q),
+                              q.out.zero_point).reshape(op.output.shape)
+        return (a @ b).reshape(op.output.shape).astype(np.float32)
+    if k == "concat":
+        axis = op.params.get("axis", -1)
+        if q is not None:
+            xs = [rescale_q(x, qp, q.out) for x, qp in zip(xs, q.ins)]
+        return np.concatenate(list(xs), axis=axis)
+    if k == "pad":
+        if q is not None:
+            padded = np.pad(xs[0], op.params["paddings"],
+                            constant_values=q.ins[0].zero_point)
+            return rescale_q(padded, q.ins[0], q.out)
+        return np.pad(xs[0], op.params["paddings"])
+    if k == "mean":
+        x = xs[0]
+        axes = tuple(op.params.get("axes", range(x.ndim - 1)))
+        if q is not None:
+            cnt = 1
+            for ax in axes:
+                cnt *= x.shape[ax]
+            acc = x.astype(np.int32).sum(axis=axes)
+            val = acc.astype(np.float32) / np.float32(cnt) \
+                - q.ins[0].zero_point
+            return requantise(val, acc_multiplier(op, q),
+                              q.out.zero_point).reshape(op.output.shape)
+        return x.mean(axis=axes).reshape(op.output.shape).astype(np.float32)
+    raise NotImplementedError(f"arena executor: {k}")
 
 
 # ---------------------------------------------------------------------------
@@ -164,23 +439,42 @@ def has_strided_views(graph: Graph) -> bool:
 
 
 def executability(graph: Graph) -> Optional[str]:
-    """None when every arena backend can execute ``graph``; else a short
-    human-readable reason why not (used by lowering gates and error text)."""
+    """None when every arena backend can execute ``graph``; else a
+    human-readable ``"; "``-joined list of *all* refusal reasons (so a mixed
+    int8 + split-band graph reports both problems at once, not just the first
+    the walk happens to meet)."""
+    reasons: List[str] = []
+
+    def add(r: str) -> None:
+        if r not in reasons:
+            reasons.append(r)
+
     for op in graph.ops:
         if op.kind not in SUPPORTED_KINDS:
-            return f"unsupported op kind {op.kind!r}"
+            add(f"unsupported op kind {op.kind!r}")
         if "row_range" in op.params:
-            return "split row bands"
-        if op.kind == "elementwise" and op.params.get("fn", "relu") not in ELEMENTWISE:
-            return f"unknown elementwise fn {op.params.get('fn')!r}"
+            add("split row bands")
+        if op.kind == "elementwise" and \
+                op.params.get("fn", "relu") not in ELEMENTWISE:
+            add(f"unknown elementwise fn {op.params.get('fn')!r}")
         for t in op.inputs:
             if t.storage().kind == "weight":
-                return f"op {op.name} reads a non-arena (weight) tensor"
+                add(f"op {op.name} reads a non-arena (weight) tensor")
+        if op.kind != "reshape":
+            widths = {t.storage().dtype_bytes for t in op.inputs
+                      if t.storage().kind != "weight"}
+            widths.add(op.output.storage().dtype_bytes)
+            if len(widths) > 1:
+                add(f"op {op.name} mixes arena dtypes "
+                    f"{sorted(widths)} (no cast ops)")
+    for t in graph.arena_tensors():
+        if t.dtype_bytes not in SUPPORTED_DTYPES:
+            add(f"unsupported arena dtype ({t.dtype_bytes}-byte tensor "
+                f"{t.name})")
+            break
     if has_strided_views(graph):
-        return "aggregated views (strided offsets)"
-    if any(t.dtype_bytes != 4 for t in graph.arena_tensors()):
-        return "non-f32 arena tensors"
-    return None
+        add("aggregated views (strided offsets)")
+    return "; ".join(reasons) if reasons else None
 
 
 def executable(graph: Graph) -> bool:

@@ -2,12 +2,19 @@
 
 The lowering walks :meth:`Plan.op_layouts` and emits one
 :class:`~repro.kernels.arena_ops.OpSpec` per op — the op kind plus the
-*element offsets* the planner chose, which is all a kernel needs to index the
-flat arena. The spec sequence jit-compiles to ``fn(arena, *weights)`` with
-the arena argument donated and every kernel aliasing its arena operand
+dtype-carrying layout record the planner chose (*byte* offsets into the flat
+arena plus each tensor's width), which is all a kernel needs to index the
+shared buffer. The spec sequence jit-compiles to ``fn(arena, *weights)``
+with the arena argument donated and every kernel aliasing its arena operand
 (``input_output_aliases={0: 0}``), so the entire network executes inside one
-flat f32 buffer of exactly ``plan.peak_bytes`` — the planner's peak *is* the
-runtime footprint, overlaps included.
+flat *byte* buffer of exactly ``plan.peak_bytes`` — the planner's peak *is*
+the runtime footprint, overlaps included.
+
+The arena is uint8; kernels bitcast their windows to the tier the layout
+declares — f32 ops read/write float32 views, int8 ops read/write i8 views
+and run the quantised tier (int32 accumulation, per-tensor scale/zero-point
+requantisation whose float32 multipliers are baked into the spec as static
+``qmeta``), so mixed-dtype plans execute in the one buffer.
 
 ``interpret=True`` (default) runs on CPU CI; on an actual TPU the arena
 would live in VMEM (the paper's SRAM analogue). Row loops are sequential
@@ -17,7 +24,7 @@ would live in VMEM (the paper's SRAM analogue). Row loops are sequential
 from __future__ import annotations
 
 import warnings
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -54,6 +61,35 @@ def _canon_meta(op: Op) -> Tuple:
     return ()
 
 
+def _canon_qmeta(op: Op, q: Optional[X.OpQuant]) -> Tuple:
+    """Hashable quantisation statics per kind (zero points and the float32
+    requantisation multipliers of :func:`repro.core.exec.ops.acc_multiplier`
+    / :func:`~repro.core.exec.ops.rescale_q`, so both backends bake the
+    bit-identical constants)."""
+    if q is None:
+        return ()
+    k = op.kind
+    if k in ("conv2d", "depthwise_conv2d", "fully_connected", "pool", "mean"):
+        return (q.ins[0].zero_point, X.acc_multiplier(op, q),
+                q.out.zero_point)
+    if k == "matmul":
+        return (q.ins[0].zero_point, q.ins[1].zero_point,
+                X.acc_multiplier(op, q), q.out.zero_point)
+    if k in ("elementwise", "softmax"):
+        in_q = tuple((qp.scale, qp.zero_point) for qp in q.ins)
+        out_q = (q.out.scale, q.out.zero_point)
+        return (in_q[0], out_q) if k == "softmax" else (in_q, out_q)
+    if k == "concat":
+        in_q = tuple((qp.zero_point, X.f32_div(qp.scale, q.out.scale))
+                     for qp in q.ins)
+        return (in_q, (q.out.zero_point,))
+    if k == "pad":
+        return ((q.ins[0].zero_point,
+                 X.f32_div(q.ins[0].scale, q.out.scale)),
+                (q.out.zero_point,))
+    return ()
+
+
 class PallasExecutor:
     """The ``pallas`` :class:`~repro.core.exec.ArenaExecutor` backend."""
 
@@ -62,25 +98,31 @@ class PallasExecutor:
     def __init__(self, interpret: bool = True):
         self.interpret = interpret
 
-    def lower(self, plan: Plan) -> Tuple:
-        """Plan -> OpSpec sequence (static lowering, no weights bound)."""
+    def lower(self, plan: Plan,
+              quant: Optional[X.QuantSpec] = None) -> Tuple:
+        """Plan -> OpSpec sequence (static lowering, no weights bound).
+        ``quant`` must be supplied for plans with int8 ops — its per-op
+        contexts become the kernels' static ``qmeta``."""
         from repro.kernels.arena_ops import OpSpec
         specs: List[OpSpec] = []
-        for op, in_offs, out_off in plan.op_layouts():
-            assert all(o is not None for o in in_offs), \
+        for lay in plan.op_layouts():
+            op = lay.op
+            assert all(l is not None for l in lay.inputs), \
                 f"{op.name}: non-arena input cannot be lowered"
+            q = X.op_quant(op, quant)
             specs.append(OpSpec(
                 kind=op.kind,
-                in_off=tuple(in_offs),
-                in_shape=tuple(t.shape for t in op.inputs
-                               if t.storage().kind != "weight"),
-                out_off=out_off,
-                out_shape=op.output.shape,
-                meta=_canon_meta(op)))
+                in_off=tuple(l.byte_offset for l in lay.inputs),
+                in_shape=tuple(l.shape for l in lay.inputs),
+                out_off=lay.output.byte_offset,
+                out_shape=lay.output.shape,
+                dtype="i8" if lay.output.dtype_bytes == 1 else "f32",
+                meta=_canon_meta(op),
+                qmeta=_canon_qmeta(op, q)))
         return tuple(specs)
 
     def execute(self, plan_or_compiled, inputs=None, weights=None, *,
-                seed: int = 0) -> Dict[str, np.ndarray]:
+                seed: int = 0, quant=None) -> Dict[str, np.ndarray]:
         import jax.numpy as jnp
         from repro.kernels import arena_ops
 
@@ -89,25 +131,32 @@ class PallasExecutor:
         if reason is not None:
             raise ValueError(
                 f"pallas backend cannot lower {graph.name!r}: {reason}")
-        if inputs is None:
-            inputs = X.random_inputs(graph, seed)
         if weights is None:
             weights = X.synth_weights(graph, seed)
+        if quant is None and X.needs_quant(graph):
+            quant = X.calibrate(graph, seed, weights)
+        if inputs is None:
+            inputs = (X.quant_inputs(graph, quant, seed) if quant is not None
+                      else X.random_inputs(graph, seed))
 
-        specs = self.lower(plan)
+        specs = self.lower(plan, quant)
         wflat = []
         for op in plan.order:
             if op.kind in arena_ops.WEIGHTED_KINDS:
-                wflat.append(jnp.asarray(weights[id(op)]["filter"],
-                                         jnp.float32))
+                if quant is not None and id(op) in quant.weights_q:
+                    wflat.append(jnp.asarray(quant.weights_q[id(op)]["filter"],
+                                             jnp.int8))
+                else:
+                    wflat.append(jnp.asarray(weights[id(op)]["filter"],
+                                             jnp.float32))
 
-        assert plan.peak_bytes % 4 == 0
-        arena = np.zeros(plan.peak_bytes // 4, np.float32)
+        arena = np.zeros(plan.peak_bytes, np.uint8)
         for t in graph.tensors:
             if t.kind == "input":
-                s, off = t.storage(), plan.offsets[t.storage()] // 4
-                arena[off:off + s.elems] = \
-                    inputs[t.name].astype(np.float32).reshape(-1)
+                s, off = t.storage(), plan.offsets[t.storage()]
+                v = np.asarray(inputs[t.name],
+                               X.arena_dtype(s.dtype_bytes)).reshape(-1)
+                arena[off:off + s.nbytes] = v.view(np.uint8)
 
         fn = arena_ops.lower_program(specs, self.interpret)
         with warnings.catch_warnings():
@@ -119,6 +168,7 @@ class PallasExecutor:
         outs: Dict[str, np.ndarray] = {}
         for t in graph.tensors:
             if t.kind == "output":
-                s, off = t.storage(), plan.offsets[t.storage()] // 4
-                outs[t.name] = out_arena[off:off + s.elems].reshape(t.shape)
+                s, off = t.storage(), plan.offsets[t.storage()]
+                outs[t.name] = out_arena[off:off + s.nbytes].view(
+                    X.arena_dtype(s.dtype_bytes)).reshape(t.shape)
         return outs

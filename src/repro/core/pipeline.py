@@ -172,13 +172,15 @@ class CompiledPlan:
         return self.plan.peak_bytes
 
     def execute(self, inputs=None, weights=None, *, seed: int = 0,
-                backend: Optional[str] = None) -> Dict[str, Any]:
+                backend: Optional[str] = None,
+                quant: Optional[Any] = None) -> Dict[str, Any]:
         """Run the plan inside its arena on the compiled-for executor backend
         (override with ``backend=``). Inputs/weights default to the
-        deterministic synthesis shared by all backends; returns the model
-        outputs keyed by tensor name."""
+        deterministic synthesis shared by all backends; int8 graphs take a
+        :class:`~repro.core.exec.ops.QuantSpec` via ``quant`` (auto-calibrated
+        when omitted). Returns the model outputs keyed by tensor name."""
         be = X.get_backend(backend or self.backend)
-        return be.execute(self, inputs, weights, seed=seed)
+        return be.execute(self, inputs, weights, seed=seed, quant=quant)
 
     @property
     def baseline_bytes(self) -> int:
@@ -435,26 +437,34 @@ class VerifyPass(Pass):
                 raise ValueError(
                     "verify='numeric' requested but the winning graph is not "
                     "executable by the arena interpreter (unsupported op "
-                    "kind, split bands, aggregated views, non-f32 dtype, or "
-                    "too large)")
+                    "kind, split bands, aggregated views, unsupported arena "
+                    "dtype, or too large)")
             state.log.append("verify: constraints only (graph not "
                              "numerically executable)")
             return
         # one reference + one numpy arena execution serve both tiers: the
         # bit-exact numeric check here, and (for backend="pallas") the
-        # cross-check below against the same data — no redundant runs
+        # cross-check below against the same data — no redundant runs.
+        # int8 graphs calibrate once (a float reference run) and share the
+        # QuantSpec across the reference and every backend.
         opt = state.options
         g = state.plan.graph
-        inputs = X.random_inputs(g, opt.seed)
         weights = X.synth_weights(g, opt.seed)
-        ref = run_reference(g, inputs, state.plan.order, weights=weights)
-        got_np = X.get_backend("numpy").execute(state.plan, inputs, weights)
+        quant = (X.calibrate(g, opt.seed, weights)
+                 if X.needs_quant(g) else None)
+        inputs = (X.quant_inputs(g, quant, opt.seed) if quant is not None
+                  else X.random_inputs(g, opt.seed))
+        ref = run_reference(g, inputs, state.plan.order, weights=weights,
+                            quant=quant)
+        got_np = X.get_backend("numpy").execute(state.plan, inputs, weights,
+                                                quant=quant)
         X.compare_outputs(ref, got_np, exact=True, label="numpy arena")
         state.verified = "numeric"
-        state.log.append("verify: arena execution bit-exact")
+        state.log.append("verify: arena execution bit-exact"
+                         + (" (int8 quantised tier)" if quant else ""))
         if opt.backend == "pallas":
             got_pl = X.get_backend("pallas").execute(state.plan, inputs,
-                                                     weights)
+                                                     weights, quant=quant)
             X.compare_outputs(got_np, got_pl, exact=False,
                               label="pallas vs numpy")
             state.verified = "numeric+pallas"

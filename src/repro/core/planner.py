@@ -32,6 +32,45 @@ def _default_overlap(method: str = "auto", profile: str = "paper") -> OverlapFn:
                                                     profile=profile)
 
 
+@dataclasses.dataclass(frozen=True)
+class TensorLayout:
+    """Byte-granular placement of one arena tensor view: the dtype width, the
+    byte offset the planner chose for its storage, and the (derived) element
+    offset. This is the layout contract between the planner and the executor
+    backends — kernels index the flat *byte* arena with it, so mixed-dtype
+    plans (int8 next to f32) need no implicit element size."""
+
+    name: str
+    shape: Tuple[int, ...]
+    dtype_bytes: int
+    byte_offset: int
+
+    @property
+    def elem_offset(self) -> int:
+        return self.byte_offset // self.dtype_bytes
+
+    @property
+    def elems(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= int(s)
+        return n
+
+    @property
+    def nbytes(self) -> int:
+        return self.elems * self.dtype_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class OpLayout:
+    """Lowering record for one executed op: the op plus the layout of every
+    data input (``None`` for non-arena weight inputs) and of the output."""
+
+    op: Op
+    inputs: Tuple[Optional[TensorLayout], ...]
+    output: TensorLayout
+
+
 @dataclasses.dataclass
 class Plan:
     graph: Graph
@@ -44,37 +83,54 @@ class Plan:
     def peak_bytes(self) -> int:
         return max((off + t.nbytes for t, off in self.offsets.items()), default=0)
 
+    def peak_bytes_by_dtype(self) -> Dict[int, int]:
+        """Arena peak extent per dtype width (bytes): for each dtype, the
+        highest end offset of any tensor of that width. Sums need not equal
+        ``peak_bytes`` — dtypes share the one arena and may interleave."""
+        out: Dict[int, int] = {}
+        for t, off in self.offsets.items():
+            out[t.dtype_bytes] = max(out.get(t.dtype_bytes, 0), off + t.nbytes)
+        return out
+
+    _DTYPE_NAMES = {1: "i8", 2: "f16", 4: "f32"}
+
+    def dtype_peaks_report(self) -> str:
+        """Human-readable per-dtype peaks, e.g. ``"i8:64KB"`` or
+        ``"i8:1KB+f32:12KB"`` (the single formatter the benchmarks share)."""
+        return "+".join(
+            f"{self._DTYPE_NAMES.get(db, f'{db}B')}:{peak / 1024:.0f}KB"
+            for db, peak in sorted(self.peak_bytes_by_dtype().items()))
+
     def offset_of(self, t: Tensor) -> int:
         return self.offsets[t.storage()]
 
-    def op_layouts(self) -> List[Tuple[Op, Tuple[Optional[int], ...], int]]:
-        """Flat-arena lowering metadata, one entry per executed op in order:
-        ``(op, input element offsets, output element offset)``.
+    def _layout(self, t: Tensor) -> TensorLayout:
+        s = t.storage()
+        off = self.offsets[s]
+        assert off % s.dtype_bytes == 0, \
+            f"{s.name}: byte offset {off} not {s.dtype_bytes}-byte aligned"
+        return TensorLayout(s.name, tuple(t.shape), s.dtype_bytes, off)
 
-        Offsets are in dtype *elements* (the executor backends run f32
-        arenas), aliases resolve to their storage owner, weight inputs (which
-        live outside the arena) yield ``None``, and aliasing no-ops
-        (``reshape``) are omitted — they move no bytes. This is exactly what
-        a kernel needs to index the shared buffer at the planned layout."""
-        out: List[Tuple[Op, Tuple[Optional[int], ...], int]] = []
+    def op_layouts(self) -> List[OpLayout]:
+        """Flat-arena lowering metadata, one :class:`OpLayout` per executed op
+        in order. Layouts carry per-tensor ``dtype_bytes`` alongside byte and
+        element offsets, so backends execute mixed-dtype plans over a single
+        flat byte arena. Aliases resolve to their storage owner, weight inputs
+        (which live outside the arena) yield ``None``, and aliasing no-ops
+        (``reshape``) are omitted — they move no bytes. Every offset is
+        asserted ``dtype_bytes``-aligned (the placement invariant
+        :func:`_lowest_feasible` maintains)."""
+        out: List[OpLayout] = []
         for op in self.order:
             if op.kind == "reshape":
                 continue
-            ins: List[Optional[int]] = []
+            ins: List[Optional[TensorLayout]] = []
             for t in op.inputs:
-                s = t.storage()
-                if s.kind == "weight":
+                if t.storage().kind == "weight":
                     ins.append(None)
                     continue
-                off = self.offsets[s]
-                assert off % s.dtype_bytes == 0, \
-                    f"{s.name}: offset {off} not element-aligned"
-                ins.append(off // s.dtype_bytes)
-            s = op.output.storage()
-            off = self.offsets[s]
-            assert off % s.dtype_bytes == 0, \
-                f"{s.name}: offset {off} not element-aligned"
-            out.append((op, tuple(ins), off // s.dtype_bytes))
+                ins.append(self._layout(t))
+            out.append(OpLayout(op, tuple(ins), self._layout(op.output)))
         return out
 
     def validate(self) -> None:
@@ -210,12 +266,19 @@ def _forbidden_intervals(t: Tensor, placed: Dict[Tensor, int], scopes,
 
 
 def _lowest_feasible(t: Tensor, placed, scopes, order, overlaps) -> int:
+    """Lowest conflict-free start offset for ``t``, rounded up to the
+    tensor's ``dtype_bytes`` alignment so executor backends can view the byte
+    arena at the planned offset (an f32 tensor packed after an odd-sized int8
+    tensor must not land on an unaligned byte). All-f32 graphs are unaffected:
+    every boundary there is already a multiple of 4."""
+    a = max(1, t.dtype_bytes)
     iv = sorted(_forbidden_intervals(t, placed, scopes, order, overlaps))
     x = 0
     for lo, hi in iv:
         if x < lo:
             break
         x = max(x, hi)
+        x = -(-x // a) * a  # next aligned start at or above the interval end
     return x
 
 

@@ -25,11 +25,18 @@ def _make_divisible(v: float, divisor: int = 8, min_value: Optional[int] = None)
     return new_v
 
 
+def _name(base: str, dtype_bytes: int) -> str:
+    """Graph name with the dtype tag every builder shares (8-bit models are
+    the paper's flagship rows and, since the dtype-aware executor layer,
+    runnable — the tag keeps reports/benchmarks self-describing)."""
+    return base + ("_8bit" if dtype_bytes == 1 else "")
+
+
 class _B:
     """Builder helper around a Graph, NHWC batch-1."""
 
     def __init__(self, name: str, dtype_bytes: int = 4):
-        self.g = Graph(name)
+        self.g = Graph(_name(name, dtype_bytes))
         self.db = dtype_bytes
 
     def input(self, h: int, w: int, c: int, name: str = "input") -> Tensor:
@@ -94,8 +101,7 @@ def mobilenet_v1(alpha: float = 1.0, res: int = 224, dtype_bytes: int = 4,
                  external_input: bool = False) -> Graph:
     """``external_input``: model input lives outside the arena (e.g. a
     camera DMA buffer) — the convention of the paper's §II.A example."""
-    b = _B(f"mobilenet_v1_{alpha}_{res}" + ("_8bit" if dtype_bytes == 1 else ""),
-           dtype_bytes)
+    b = _B(f"mobilenet_v1_{alpha}_{res}", dtype_bytes)
     c = lambda ch: max(8, int(ch * alpha))
     x = b.input(res, res, 3)
     if external_input:
@@ -467,3 +473,18 @@ TABLE3_MODELS = {
     "densenet_121": (lambda: densenet121(224, 4), 8624, 8232),
     "resnet_50_v2": (lambda: resnet50_v2(224, 4), 10976, 10976),
 }
+
+#: The paper's flagship 8-bit rows (Table III measures its headline savings
+#: on these). Since the dtype-aware executor layer they are *executable*,
+#: not just plannable — table3_memory_savings executes and parity-checks
+#: them against the quantised reference.
+TABLE3_8BIT_MODELS = ("mobilenet_v1_1.0_224_8bit",
+                      "mobilenet_v1_0.25_128_8bit")
+
+
+def executable_models() -> dict:
+    """The Table III rows whose (untransformed) graphs the arena executor
+    backends accept — i.e. the rows that can be run, not only planned."""
+    from repro.core import exec as X
+    return {name: spec for name, spec in TABLE3_MODELS.items()
+            if X.executable(spec[0]())}

@@ -1,14 +1,22 @@
 """Generalised DMO arena kernels: every supported op as a Pallas call over
-ONE flat arena buffer.
+ONE flat *byte* arena buffer.
 
 This generalises :mod:`repro.kernels.dmo_arena_dwconv` (a single hard-coded
 depthwise conv) to the full op set a :class:`~repro.core.planner.Plan` can
 contain: conv2d / depthwise_conv2d / pool / elementwise / softmax /
 fully_connected / matmul / concat / pad / mean. Each op becomes one
-``pl.pallas_call`` whose first operand is the flat f32 arena and whose output
-*aliases* it (``input_output_aliases={0: 0}``), so the arena is threaded
-in-place through the op sequence — the TPU-VMEM analogue of the paper's SRAM
-tensor arena.
+``pl.pallas_call`` whose first operand is the flat uint8 arena and whose
+output *aliases* it (``input_output_aliases={0: 0}``), so the arena is
+threaded in-place through the op sequence — the TPU-VMEM analogue of the
+paper's SRAM tensor arena.
+
+The arena is byte-granular and the kernels are **dtype-parameterised**
+(``OpSpec.dtype``): f32 ops bitcast 4-byte windows of the arena to float32,
+int8 ops bitcast single bytes to int8 and run the quantised tier — int32
+accumulation plus the float32 scale/zero-point requantisation of
+:mod:`repro.core.exec.ops` (``requantise``), mirrored here
+operation-for-operation so numpy and pallas agree to <= 1 LSB. Mixed-dtype
+plans therefore execute in one buffer with no implicit element size.
 
 Safety contract (paper §III.A): kernels read *and* write through the aliased
 output ref, and conv/pool walk output rows in ascending index order inside a
@@ -19,7 +27,7 @@ live value. A parallel grid over rows would break that guarantee, precisely
 the paper's multi-threading caveat (§III.F) — keep the row loop sequential.
 
 ``interpret=True`` (the default) runs the kernels on CPU; compiled TPU
-execution of a *flat* arena with element-granular dynamic slices would fight
+execution of a *flat* arena with byte-granular dynamic slices would fight
 the (8, 128) tiling constraints, so on-device use should go through
 row-blocked layouts like the dwconv kernel's ``(rows, rowlen)`` arena.
 """
@@ -50,16 +58,20 @@ WEIGHTED_KINDS = frozenset({"conv2d", "depthwise_conv2d", "fully_connected"})
 
 @dataclasses.dataclass(frozen=True)
 class OpSpec:
-    """Hashable, fully static description of one lowered op: element offsets
-    into the flat arena, shapes, and kind-specific parameters. Two plans with
-    identical layouts produce equal specs, so lowered programs are shared."""
+    """Hashable, fully static description of one lowered op: *byte* offsets
+    into the flat arena, shapes, the arena dtype tier ("f32" or "i8"), and
+    kind-specific parameters (plus quantisation statics for int8 ops). Two
+    plans with identical layouts produce equal specs, so lowered programs
+    are shared."""
 
     kind: str
-    in_off: Tuple[int, ...]            # element offset per data input
+    in_off: Tuple[int, ...]            # byte offset per data input
     in_shape: Tuple[Tuple[int, ...], ...]
-    out_off: int
+    out_off: int                       # byte offset of the output
     out_shape: Tuple[int, ...]
+    dtype: str = "f32"                 # arena tier: "f32" | "i8"
     meta: Tuple = ()                   # kind-specific statics (see builders)
+    qmeta: Tuple = ()                  # int8 statics (zero points, multipliers)
 
 
 def _elems(shape: Tuple[int, ...]) -> int:
@@ -69,12 +81,44 @@ def _elems(shape: Tuple[int, ...]) -> int:
     return n
 
 
-def _read(ref, off: int, shape: Tuple[int, ...]):
-    return ref[pl.dslice(off, _elems(shape))].reshape(shape)
+def _isz(dtype: str) -> int:
+    return 1 if dtype == "i8" else 4
 
 
-def _write(ref, off: int, value):
-    ref[pl.dslice(off, _elems(value.shape))] = value.reshape(-1)
+def _read(ref, byte_off, elems: int, dtype: str):
+    """``elems`` values of the given tier from the uint8 arena at a (possibly
+    traced) byte offset, as a flat typed vector."""
+    if dtype == "i8":
+        raw = ref[pl.dslice(byte_off, elems)]
+        return jax.lax.bitcast_convert_type(raw, jnp.int8)
+    raw = ref[pl.dslice(byte_off, 4 * elems)].reshape(elems, 4)
+    return jax.lax.bitcast_convert_type(raw, jnp.float32)
+
+
+def _read_t(ref, byte_off, shape: Tuple[int, ...], dtype: str):
+    return _read(ref, byte_off, _elems(shape), dtype).reshape(shape)
+
+
+def _write(ref, byte_off, value):
+    """Store a typed value back into the uint8 arena at a byte offset."""
+    flat = value.reshape(-1)
+    raw = jax.lax.bitcast_convert_type(flat, jnp.uint8).reshape(-1)
+    ref[pl.dslice(byte_off, raw.size)] = raw
+
+
+def _requant(acc, mult: float, zp: int):
+    """jnp mirror of repro.core.exec.ops.requantise (same f32 arithmetic)."""
+    q = jnp.round(acc.astype(jnp.float32) * jnp.float32(mult)) + zp
+    return jnp.clip(q, -128, 127).astype(jnp.int8)
+
+
+def _dequant(x, scale: float, zp: int):
+    return (x.astype(jnp.float32) - zp) * jnp.float32(scale)
+
+
+def _quant(v, scale: float, zp: int):
+    q = jnp.round(v / jnp.float32(scale)) + zp
+    return jnp.clip(q, -128, 127).astype(jnp.int8)
 
 
 # ---------------------------------------------------------------------------
@@ -89,29 +133,42 @@ def _conv_kernel(_a, w_ref, o_ref, *, spec: OpSpec):
     kh, kw, sh, sw, dh, dw, ph, pw, mult = spec.meta
     in_off, out_off = spec.in_off[0], spec.out_off
     depthwise = spec.kind == "depthwise_conv2d"
+    quant = spec.dtype == "i8"
+    isz = _isz(spec.dtype)
 
     def body(oy, _):
-        acc = jnp.zeros((ow, oc), jnp.float32)
+        if quant:
+            x_zp, amult, y_zp = spec.qmeta
+            acc = jnp.zeros((ow, oc), jnp.int32)
+        else:
+            acc = jnp.zeros((ow, oc), jnp.float32)
         for fy in range(kh):                    # static unroll (kh small)
             iy = oy * sh - ph + fy * dh
             row_ok = (iy >= 0) & (iy < ih)
             iy_c = jnp.clip(iy, 0, ih - 1)
-            row = o_ref[pl.dslice(in_off + iy_c * iw * ic, iw * ic)]
-            row = row.reshape(iw, ic)
+            row = _read(o_ref, in_off + iy_c * iw * ic * isz, iw * ic,
+                        spec.dtype).reshape(iw, ic)
+            if quant:
+                row = row.astype(jnp.int32) - x_zp
             for fx in range(kw):
                 ix = jax.lax.broadcasted_iota(jnp.int32, (ow, 1), 0)
                 ix = ix * sw - pw + fx * dw
                 valid = (ix >= 0) & (ix < iw) & row_ok
                 taps = jnp.take_along_axis(row, jnp.clip(ix, 0, iw - 1),
                                            axis=0)          # (ow, ic)
-                taps = jnp.where(valid, taps, 0.0)
+                taps = jnp.where(valid, taps, 0 if quant else 0.0)
+                w = w_ref[fy, fx]
+                if quant:
+                    w = w.astype(jnp.int32)
                 if depthwise:
                     acc += (taps[:, :, None]
-                            * w_ref[fy, fx][None, :, :]).reshape(ow, ic * mult)
+                            * w[None, :, :]).reshape(ow, ic * mult)
                 else:
-                    acc += jnp.dot(taps, w_ref[fy, fx],
-                                   preferred_element_type=jnp.float32)
-        _write(o_ref, out_off + oy * ow * oc, acc)
+                    acc += jnp.dot(
+                        taps, w, preferred_element_type=(
+                            jnp.int32 if quant else jnp.float32))
+        out = _requant(acc, amult, y_zp) if quant else acc
+        _write(o_ref, out_off + oy * ow * oc * isz, out)
         return 0
 
     jax.lax.fori_loop(0, oh, body, 0)
@@ -122,17 +179,25 @@ def _pool_kernel(_a, o_ref, *, spec: OpSpec):
     oh, ow, _ = spec.out_shape[-3:]
     kh, kw, sh, sw, ph, pw, mode = spec.meta
     in_off, out_off = spec.in_off[0], spec.out_off
+    quant = spec.dtype == "i8"
+    isz = _isz(spec.dtype)
 
     def body(oy, _):
-        acc = jnp.full((ow, c), -jnp.inf if mode == "max" else 0.0,
-                       jnp.float32)
+        if quant:
+            acc = jnp.full((ow, c), -2147483647 if mode == "max" else 0,
+                           jnp.int32)
+        else:
+            acc = jnp.full((ow, c), -jnp.inf if mode == "max" else 0.0,
+                           jnp.float32)
         cnt = jnp.zeros((ow, 1), jnp.float32)
         for fy in range(kh):
             iy = oy * sh - ph + fy
             row_ok = (iy >= 0) & (iy < ih)
             iy_c = jnp.clip(iy, 0, ih - 1)
-            row = o_ref[pl.dslice(in_off + iy_c * iw * c, iw * c)]
-            row = row.reshape(iw, c)
+            row = _read(o_ref, in_off + iy_c * iw * c * isz, iw * c,
+                        spec.dtype).reshape(iw, c)
+            if quant:
+                row = row.astype(jnp.int32)
             for fx in range(kw):
                 ix = jax.lax.broadcasted_iota(jnp.int32, (ow, 1), 0)
                 ix = ix * sw - pw + fx
@@ -142,10 +207,18 @@ def _pool_kernel(_a, o_ref, *, spec: OpSpec):
                 if mode == "max":
                     acc = jnp.where(valid, jnp.maximum(acc, taps), acc)
                 else:
-                    acc = acc + jnp.where(valid, taps, 0.0)
+                    acc = acc + jnp.where(valid, taps, 0 if quant else 0.0)
                     cnt = cnt + valid.astype(jnp.float32)
-        out = acc / jnp.maximum(cnt, 1.0) if mode == "avg" else acc
-        _write(o_ref, out_off + oy * ow * c, out)
+        if quant:
+            x_zp, amult, y_zp = spec.qmeta
+            if mode == "avg":
+                val = acc.astype(jnp.float32) / jnp.maximum(cnt, 1.0) - x_zp
+            else:
+                val = acc - x_zp
+            out = _requant(val, amult, y_zp)
+        else:
+            out = acc / jnp.maximum(cnt, 1.0) if mode == "avg" else acc
+        _write(o_ref, out_off + oy * ow * c * isz, out)
         return 0
 
     jax.lax.fori_loop(0, oh, body, 0)
@@ -153,50 +226,100 @@ def _pool_kernel(_a, o_ref, *, spec: OpSpec):
 
 def _elementwise_kernel(_a, o_ref, *, spec: OpSpec):
     fn = _ELEMENTWISE[spec.meta[0]]
-    xs = [_read(o_ref, off, shp)
+    xs = [_read_t(o_ref, off, shp, spec.dtype)
           for off, shp in zip(spec.in_off, spec.in_shape)]
+    if spec.dtype == "i8":
+        in_q, (ys, yzp) = spec.qmeta
+        xs = [_dequant(x, s, zp) for x, (s, zp) in zip(xs, in_q)]
     if len(xs) == 2 and _elems(spec.in_shape[1]) != _elems(spec.in_shape[0]):
         xs[1] = jnp.broadcast_to(xs[1], xs[0].shape)
-    _write(o_ref, spec.out_off, fn(*xs).astype(jnp.float32))
+    v = fn(*xs).astype(jnp.float32)
+    _write(o_ref, spec.out_off,
+           _quant(v, ys, yzp) if spec.dtype == "i8" else v)
 
 
 def _softmax_kernel(_a, o_ref, *, spec: OpSpec):
-    x = _read(o_ref, spec.in_off[0], spec.in_shape[0])
+    x = _read_t(o_ref, spec.in_off[0], spec.in_shape[0], spec.dtype)
+    if spec.dtype == "i8":
+        (xs, xzp), (ys, yzp) = spec.qmeta
+        x = _dequant(x, xs, xzp)
     e = jnp.exp(x - jnp.max(x, axis=-1, keepdims=True))
-    _write(o_ref, spec.out_off, e / jnp.sum(e, axis=-1, keepdims=True))
+    y = e / jnp.sum(e, axis=-1, keepdims=True)
+    _write(o_ref, spec.out_off,
+           _quant(y, ys, yzp) if spec.dtype == "i8" else y)
 
 
 def _fully_connected_kernel(_a, w_ref, o_ref, *, spec: OpSpec):
     idim = spec.in_shape[0][-1]
-    x = _read(o_ref, spec.in_off[0], spec.in_shape[0]).reshape(-1, idim)
-    y = jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32)
+    x = _read_t(o_ref, spec.in_off[0], spec.in_shape[0],
+                spec.dtype).reshape(-1, idim)
+    if spec.dtype == "i8":
+        x_zp, amult, y_zp = spec.qmeta
+        acc = jnp.dot(x.astype(jnp.int32) - x_zp,
+                      w_ref[...].astype(jnp.int32),
+                      preferred_element_type=jnp.int32)
+        y = _requant(acc, amult, y_zp)
+    else:
+        y = jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32)
     _write(o_ref, spec.out_off, y.reshape(spec.out_shape))
 
 
 def _matmul_kernel(_a, o_ref, *, spec: OpSpec):
-    a = _read(o_ref, spec.in_off[0], spec.in_shape[0])
+    a = _read_t(o_ref, spec.in_off[0], spec.in_shape[0], spec.dtype)
     a = a.reshape(-1, spec.in_shape[0][-1])
-    b = _read(o_ref, spec.in_off[1], spec.in_shape[1])
-    y = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    b = _read_t(o_ref, spec.in_off[1], spec.in_shape[1], spec.dtype)
+    if spec.dtype == "i8":
+        a_zp, b_zp, amult, y_zp = spec.qmeta
+        acc = jnp.dot(a.astype(jnp.int32) - a_zp,
+                      b.astype(jnp.int32) - b_zp,
+                      preferred_element_type=jnp.int32)
+        y = _requant(acc, amult, y_zp)
+    else:
+        y = jnp.dot(a, b, preferred_element_type=jnp.float32)
     _write(o_ref, spec.out_off, y.reshape(spec.out_shape))
+
+
+def _rescale(x, src, dst):
+    """jnp mirror of repro.core.exec.ops.rescale_q (f32 multiplier is baked
+    into qmeta by the lowering, so both backends use the identical bits)."""
+    (s_zp, mult), (y_zp,) = src, dst
+    return _requant(x.astype(jnp.int32) - s_zp, mult, y_zp)
 
 
 def _concat_kernel(_a, o_ref, *, spec: OpSpec):
     axis = spec.meta[0]
-    xs = [_read(o_ref, off, shp)
+    xs = [_read_t(o_ref, off, shp, spec.dtype)
           for off, shp in zip(spec.in_off, spec.in_shape)]
+    if spec.dtype == "i8":
+        in_q, (yzp,) = spec.qmeta
+        xs = [_rescale(x, q, (yzp,)) for x, q in zip(xs, in_q)]
     _write(o_ref, spec.out_off, jnp.concatenate(xs, axis=axis))
 
 
 def _pad_kernel(_a, o_ref, *, spec: OpSpec):
-    x = _read(o_ref, spec.in_off[0], spec.in_shape[0])
+    x = _read_t(o_ref, spec.in_off[0], spec.in_shape[0], spec.dtype)
+    if spec.dtype == "i8":
+        (x_zp, mult), (y_zp,) = spec.qmeta
+        padded = jnp.pad(x, spec.meta[0], constant_values=x_zp)
+        _write(o_ref, spec.out_off, _rescale(padded, (x_zp, mult), (y_zp,)))
+        return
     _write(o_ref, spec.out_off, jnp.pad(x, spec.meta[0]))
 
 
 def _mean_kernel(_a, o_ref, *, spec: OpSpec):
-    x = _read(o_ref, spec.in_off[0], spec.in_shape[0])
-    y = jnp.mean(x, axis=spec.meta[0]).reshape(spec.out_shape)
-    _write(o_ref, spec.out_off, y)
+    x = _read_t(o_ref, spec.in_off[0], spec.in_shape[0], spec.dtype)
+    axes = spec.meta[0]
+    if spec.dtype == "i8":
+        x_zp, amult, y_zp = spec.qmeta
+        cnt = 1
+        for ax in axes:
+            cnt *= x.shape[ax]
+        acc = jnp.sum(x.astype(jnp.int32), axis=axes)
+        val = acc.astype(jnp.float32) / jnp.float32(cnt) - x_zp
+        y = _requant(val, amult, y_zp)
+    else:
+        y = jnp.mean(x, axis=axes)
+    _write(o_ref, spec.out_off, y.reshape(spec.out_shape))
 
 
 _KERNELS = {
@@ -215,7 +338,8 @@ _KERNELS = {
 
 def apply_op(arena: jax.Array, spec: OpSpec, weights: Tuple[jax.Array, ...],
              interpret: bool = True) -> jax.Array:
-    """Run one op in-place on the flat arena; returns the (aliased) arena."""
+    """Run one op in-place on the flat byte arena; returns the (aliased)
+    arena."""
     kernel = functools.partial(_KERNELS[spec.kind], spec=spec)
     fn = pl.pallas_call(
         kernel,
