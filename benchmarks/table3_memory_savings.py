@@ -16,6 +16,12 @@ the quantised private-buffer reference — "executed", not "planned-only".
 ``REPRO_DMO_EXEC_ELEMS`` caps how large a model the row-by-row executors
 attempt (default 8M arena elements, which covers both 8-bit rows).
 
+Since the row-blocked layout layer, each row additionally reports the
+*legalised* (row-blocked) arena peak next to the byte-granular one: what a
+compiled-mode (tiled VMEM) execution actually allocates, with the tiling
+padding overhead made explicit against the report's stated per-model bound
+(:func:`padding_bound_pct`; rows exceeding it print OVER-BOUND).
+
 Paper numbers are cited inline; structural deltas for the complex connected
 models (whose exact TFLite graph serialisations the paper does not specify)
 are discussed in EXPERIMENTS.md.
@@ -26,12 +32,55 @@ import os
 import time
 
 from repro.core import exec as X
+from repro.core import planner as P
 from repro.core import zoo
 from repro.core.arena import run_reference
 from repro.core.pipeline import auto_budget_s, compile as compile_graph
 
 #: Executor size cap (total arena elements) for the execution-status column.
 _EXEC_ELEMS = int(os.environ.get("REPRO_DMO_EXEC_ELEMS", 8_000_000))
+
+#: Stated per-model bound on the row-blocked tiling padding (+% over the
+#: byte-granular DMO peak). One image row per (lane-tiled) arena row plus
+#: sublane-aligned offsets costs real bytes, and the *tighter* the byte plan
+#: packs the larger the relative padding — measured ~+105% on the flagship
+#: 8-bit MobileNet up to ~+715% on MobileNet v2 0.35 (whose widest image
+#: row sets the arena rowlen while DMO halves the byte peak). Bounds are
+#: the measured overheads with ~30-40% plan-variability headroom; the bound
+#: makes a padding regression loud in this report (rows print OVER-BOUND)
+#: and in tests/test_block_layouts.py.
+_PAD_BOUND_PCT = {
+    "mobilenet_v1_1.0_224": 280.0,
+    "mobilenet_v1_1.0_224_8bit": 300.0,
+    "mobilenet_v1_0.25_128_8bit": 200.0,
+    "mobilenet_v2_0.35_224": 1000.0,
+    "mobilenet_v2_1.0_224": 450.0,
+    "inception_resnet_v2": 470.0,
+    "nasnet_mobile": 570.0,
+}
+_PAD_BOUND_DEFAULT_PCT = 400.0
+
+
+def padding_bound_pct(name: str) -> float:
+    """The report's stated padding-overhead bound for a Table III row."""
+    return _PAD_BOUND_PCT.get(name, _PAD_BOUND_DEFAULT_PCT)
+
+
+def _blocked_status(name: str, cp, g) -> str:
+    """Row-blocked (legalised) peak next to the byte-granular peak. Falls
+    back to a fresh input-graph DMO plan when the winning variant is not
+    legalisable (aggregated concat-removal views)."""
+    bp = cp.legalised()
+    if bp is None:
+        try:
+            bp = P.legalise_for_blocks(P.plan_dmo(g))
+        except ValueError as e:
+            return f"blocked=n/a({e})"
+    bound = padding_bound_pct(name)
+    flag = "" if bp.padding_overhead_pct <= bound else " OVER-BOUND"
+    return (f"blocked={bp.padded_peak_bytes / 1024:.0f}KB "
+            f"pad=+{bp.padding_overhead_pct:.1f}%"
+            f"(bound {bound:.0f}%){flag}")
 
 
 def _execute_status(name, build) -> str:
@@ -88,6 +137,7 @@ def run(csv_rows, search: bool = True):
             ext = cp.peak_bytes
         us = (time.perf_counter() - t0) * 1e6  # planning time only
         status = _execute_status(name, build)
+        blocked = _blocked_status(name, cp, g)
         orig_kb = cp.baseline_bytes / 1024
         opt_kb = cp.peak_bytes / 1024
         psav = (100.0 * (1 - paper_opt / paper_orig)) if paper_orig else 0.0
@@ -98,6 +148,7 @@ def run(csv_rows, search: bool = True):
             f"saving={cp.saving_pct:.1f}%(paper {psav:.1f}%) "
             f"beyond={ext / 1024:.0f}KB "
             f"dtypes={cp.plan.dtype_peaks_report()} "
+            f"{blocked} "
             f"exec={status} "
             # a warm plan cache (disk tier) turns us_per_call into load time,
             # not planning time — disclose it per row

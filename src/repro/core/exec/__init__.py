@@ -10,10 +10,17 @@ into a pluggable runtime layer:
 - ``numpy``  — :mod:`.numpy_backend`: the row-by-row NumPy interpreter
   (bit-exact ground truth, used by ``verify_plan``);
 - ``pallas`` — :mod:`.pallas_backend`: lowers the plan to a sequence of
-  Pallas kernels indexing into one flat donated arena buffer
-  (``input_output_aliases`` threads the arena through the op sequence;
-  ``interpret=True`` runs on CPU CI, the TPU analogue of the paper's SRAM
-  arena being VMEM).
+  Pallas kernels over one donated arena buffer (``input_output_aliases``
+  threads the arena through the op sequence). Two programs: the
+  **row-blocked** 2-D arena (plans legalised onto per-dtype VMEM tiles by
+  :func:`repro.core.planner.legalise_for_blocks` — the compiled-mode path,
+  and the default whenever the plan legalises) and the **flat** byte arena
+  (interpret-only fallback for mixed-dtype plans, and the cross-check
+  reference). ``mode="interpret"`` runs either on CPU CI;
+  ``mode="compiled"`` (or ``REPRO_DMO_INTERPRET=0``) lowers the blocked
+  program with ``interpret=False`` — the TPU analogue of the paper's SRAM
+  arena being VMEM. Select per instance via
+  ``get_backend("pallas", mode=..., layout=...)``.
 
 Every backend implements the :class:`ArenaExecutor` protocol::
 
@@ -149,12 +156,15 @@ def compare_outputs(ref: Dict[str, np.ndarray], got: Dict[str, np.ndarray],
 
 
 def cross_check(plan_or_compiled, seed: int = 0,
-                backends: Tuple[str, str] = ("numpy", "pallas")) -> None:
+                backends: Tuple = ("numpy", "pallas")) -> None:
     """Execute the plan on both backends with identical inputs/weights (and,
     for int8 graphs, one shared calibration) and assert the arena outputs
     agree — fp32 tolerance where XLA may reassociate the dot-product
     accumulations the numpy semantics run in loop order, <= 1 LSB on
-    quantised outputs. Raises ``AssertionError`` on any mismatch."""
+    quantised outputs. Raises ``AssertionError`` on any mismatch. Entries of
+    ``backends`` are registry names or pre-configured executor instances
+    (e.g. ``get_backend("pallas", layout="flat")``), so differently-laid-out
+    programs of one backend can be diffed too."""
     plan, graph = unwrap_plan(plan_or_compiled)
     reason = executability(graph)
     if reason is not None:
@@ -163,12 +173,14 @@ def cross_check(plan_or_compiled, seed: int = 0,
     quant = calibrate(graph, seed, weights) if needs_quant(graph) else None
     inputs = (quant_inputs(graph, quant, seed) if quant is not None
               else random_inputs(graph, seed))
-    a = get_backend(backends[0]).execute(plan, inputs, weights, seed=seed,
-                                         quant=quant)
-    b = get_backend(backends[1]).execute(plan, inputs, weights, seed=seed,
-                                         quant=quant)
+    resolve = lambda b: b if hasattr(b, "execute") else get_backend(b)
+    label = lambda b: b if isinstance(b, str) else getattr(b, "name", str(b))
+    a = resolve(backends[0]).execute(plan, inputs, weights, seed=seed,
+                                     quant=quant)
+    b = resolve(backends[1]).execute(plan, inputs, weights, seed=seed,
+                                     quant=quant)
     compare_outputs(a, b, exact=False,
-                    label=f"{backends[1]} vs {backends[0]}")
+                    label=f"{label(backends[1])} vs {label(backends[0])}")
 
 
 __all__ = [

@@ -1,23 +1,31 @@
 """Pallas arena executor: lower a plan to kernels over ONE donated buffer.
 
-The lowering walks :meth:`Plan.op_layouts` and emits one
-:class:`~repro.kernels.arena_ops.OpSpec` per op — the op kind plus the
-dtype-carrying layout record the planner chose (*byte* offsets into the flat
-arena plus each tensor's width), which is all a kernel needs to index the
-shared buffer. The spec sequence jit-compiles to ``fn(arena, *weights)``
+Two arena programs share the backend (see :mod:`repro.kernels.arena_ops`):
+
+- **row-blocked** (the default whenever the plan legalises): the plan is
+  passed through :func:`repro.core.planner.legalise_for_blocks`, giving
+  every tensor a ``(rows, rowlen)`` block at a sublane-tile-aligned row
+  offset over one typed 2-D arena ((8, 128) f32 / (32, 128) int8 tiles).
+  Kernels address whole arena rows via ``pl.dslice`` — no byte bitcasts —
+  so the same program lowers under ``interpret=False``: this is the
+  compiled-mode path, the TPU-VMEM realisation of the paper's SRAM arena.
+- **flat** (fallback, and the cross-check reference): the byte-granular
+  program over a 1-D uint8 arena of exactly ``plan.peak_bytes``; kernels
+  bitcast their windows to the tier each layout declares, so mixed-dtype
+  plans execute in one buffer. Byte-granular dynamic slices fight the VMEM
+  tilings, so this program is interpret-mode only.
+
+Execution mode is ``mode="interpret"`` (CPU CI) or ``mode="compiled"``
+(``interpret=False`` lowering; requires row-blocked layouts and a backend
+with a real Pallas lowering). The default follows the stack-wide
+``REPRO_DMO_INTERPRET`` switch (:mod:`repro.kernels.runtime`), so one env
+var retargets the executor and every standalone kernel together.
+
+In either program the spec sequence jit-compiles to ``fn(arena, *weights)``
 with the arena argument donated and every kernel aliasing its arena operand
 (``input_output_aliases={0: 0}``), so the entire network executes inside one
-flat *byte* buffer of exactly ``plan.peak_bytes`` — the planner's peak *is*
-the runtime footprint, overlaps included.
-
-The arena is uint8; kernels bitcast their windows to the tier the layout
-declares — f32 ops read/write float32 views, int8 ops read/write i8 views
-and run the quantised tier (int32 accumulation, per-tensor scale/zero-point
-requantisation whose float32 multipliers are baked into the spec as static
-``qmeta``), so mixed-dtype plans execute in the one buffer.
-
-``interpret=True`` (default) runs on CPU CI; on an actual TPU the arena
-would live in VMEM (the paper's SRAM analogue). Row loops are sequential
+buffer — the planner's peak (padded to whole rows in blocked mode) *is* the
+runtime footprint, overlaps included. Row loops are sequential
 ``fori_loop``s — see the §III.F multi-threading caveat in
 :mod:`repro.kernels.arena_ops`.
 """
@@ -31,7 +39,7 @@ import numpy as np
 from repro.core.exec import ops as X
 from repro.core.exec import unwrap_plan
 from repro.core.graph import Op
-from repro.core.planner import Plan
+from repro.core.planner import BlockPlan, Plan, legalise_for_blocks
 
 
 def _canon_meta(op: Op) -> Tuple:
@@ -91,18 +99,61 @@ def _canon_qmeta(op: Op, q: Optional[X.OpQuant]) -> Tuple:
 
 
 class PallasExecutor:
-    """The ``pallas`` :class:`~repro.core.exec.ArenaExecutor` backend."""
+    """The ``pallas`` :class:`~repro.core.exec.ArenaExecutor` backend.
+
+    ``mode``: ``"interpret"`` (CPU-runnable, the default) or ``"compiled"``
+    (``interpret=False`` lowering). ``None`` defers to the shared
+    ``REPRO_DMO_INTERPRET`` switch. ``layout``: ``"auto"`` runs the
+    row-blocked program whenever the plan legalises (uniform dtype, no
+    aggregated views) and falls back to the flat byte program otherwise;
+    ``"blocks"`` / ``"flat"`` force one program. Compiled mode requires the
+    row-blocked program — a flat byte arena cannot meet the VMEM tilings."""
 
     name = "pallas"
 
-    def __init__(self, interpret: bool = True):
-        self.interpret = interpret
+    def __init__(self, interpret: Optional[bool] = None,
+                 mode: Optional[str] = None, layout: str = "auto"):
+        if mode is not None and mode not in ("interpret", "compiled"):
+            raise ValueError(f"unknown pallas mode {mode!r} "
+                             "(expected 'interpret' or 'compiled')")
+        if layout not in ("auto", "blocks", "flat"):
+            raise ValueError(f"unknown pallas layout {layout!r} "
+                             "(expected 'auto', 'blocks' or 'flat')")
+        if mode is None and interpret is not None:
+            mode = "interpret" if interpret else "compiled"
+        #: None = follow the REPRO_DMO_INTERPRET env *per call*, so the
+        #: default-constructed (registry-cached) instance retargets when
+        #: the switch flips mid-process
+        self._mode = mode
+        self.layout = layout
+        self._check_mode_layout()
+
+    @property
+    def mode(self) -> str:
+        if self._mode is not None:
+            return self._mode
+        from repro.kernels.runtime import default_interpret
+        return "interpret" if default_interpret() else "compiled"
+
+    @property
+    def interpret(self) -> bool:
+        return self.mode == "interpret"
+
+    def _check_mode_layout(self) -> None:
+        if self.mode == "compiled" and self.layout == "flat":
+            raise ValueError(
+                "compiled mode requires row-blocked layouts: the flat byte "
+                "arena is interpret-only (byte-granular dynamic slices "
+                "cannot meet the (8, 128)/(32, 128) VMEM tilings)")
+
+    # -- lowering -----------------------------------------------------------
 
     def lower(self, plan: Plan,
               quant: Optional[X.QuantSpec] = None) -> Tuple:
-        """Plan -> OpSpec sequence (static lowering, no weights bound).
-        ``quant`` must be supplied for plans with int8 ops — its per-op
-        contexts become the kernels' static ``qmeta``."""
+        """Plan -> flat-program OpSpec sequence (static lowering, no weights
+        bound): *byte* offsets from :meth:`Plan.op_layouts`. ``quant`` must
+        be supplied for plans with int8 ops — its per-op contexts become the
+        kernels' static ``qmeta``."""
         from repro.kernels.arena_ops import OpSpec
         specs: List[OpSpec] = []
         for lay in plan.op_layouts():
@@ -120,6 +171,59 @@ class PallasExecutor:
                 meta=_canon_meta(op),
                 qmeta=_canon_qmeta(op, q)))
         return tuple(specs)
+
+    def lower_blocks(self, bplan: BlockPlan,
+                     quant: Optional[X.QuantSpec] = None) -> Tuple:
+        """BlockPlan -> row-blocked OpSpec sequence: arena *row* offsets and
+        ``(rows, used)`` block shapes from the legalised
+        :class:`~repro.core.planner.BlockLayout` records."""
+        from repro.kernels.arena_ops import OpSpec
+        dtype = "i8" if bplan.dtype_bytes == 1 else "f32"
+        specs: List[OpSpec] = []
+        for op in bplan.order:
+            if op.kind == "reshape":
+                continue
+            ins = [t for t in op.inputs if t.storage().kind != "weight"]
+            assert len(ins) == len(op.inputs), \
+                f"{op.name}: non-arena input cannot be lowered"
+            lays = [bplan.layout_of(t) for t in ins]
+            out = bplan.layout_of(op.output)
+            q = X.op_quant(op, quant)
+            specs.append(OpSpec(
+                kind=op.kind,
+                in_off=tuple(l.row_offset for l in lays),
+                in_shape=tuple(tuple(t.shape) for t in ins),
+                out_off=out.row_offset,
+                out_shape=tuple(op.output.shape),
+                dtype=dtype,
+                meta=_canon_meta(op),
+                qmeta=_canon_qmeta(op, q),
+                rowlen=bplan.arena_rowlen,
+                in_rows=tuple((l.rows, l.rowlen) for l in lays),
+                out_rows=(out.rows, out.rowlen)))
+        return tuple(specs)
+
+    # -- execution ----------------------------------------------------------
+
+    def _legalised(self, plan: Plan) -> Optional[BlockPlan]:
+        """The row-blocked legalisation this call should execute, or None
+        for the flat program. An explicit ``layout="flat"`` always runs the
+        flat program — a BlockPlan's byte offsets are valid flat offsets —
+        so blocked-vs-flat cross-checks stay meaningful. A plan that cannot
+        be row-blocked (mixed dtype, aggregated views) raises under
+        ``layout="blocks"`` and falls back to flat under ``"auto"`` —
+        except in compiled mode, where flat is not lowerable."""
+        self._check_mode_layout()   # env-followed mode may have flipped
+        if self.layout == "flat":
+            return None
+        if isinstance(plan, BlockPlan):
+            return plan
+        try:
+            return legalise_for_blocks(plan)
+        except ValueError:
+            if self.layout == "blocks" or self.mode == "compiled":
+                raise
+            return None
 
     def execute(self, plan_or_compiled, inputs=None, weights=None, *,
                 seed: int = 0, quant=None) -> Dict[str, np.ndarray]:
@@ -139,7 +243,6 @@ class PallasExecutor:
             inputs = (X.quant_inputs(graph, quant, seed) if quant is not None
                       else X.random_inputs(graph, seed))
 
-        specs = self.lower(plan, quant)
         wflat = []
         for op in plan.order:
             if op.kind in arena_ops.WEIGHTED_KINDS:
@@ -150,13 +253,19 @@ class PallasExecutor:
                     wflat.append(jnp.asarray(weights[id(op)]["filter"],
                                              jnp.float32))
 
-        arena = np.zeros(plan.peak_bytes, np.uint8)
-        for t in graph.tensors:
-            if t.kind == "input":
-                s, off = t.storage(), plan.offsets[t.storage()]
-                v = np.asarray(inputs[t.name],
-                               X.arena_dtype(s.dtype_bytes)).reshape(-1)
-                arena[off:off + s.nbytes] = v.view(np.uint8)
+        bplan = self._legalised(plan)
+        if bplan is not None:
+            specs = self.lower_blocks(bplan, quant)
+            arena = self._seed_block_arena(bplan, graph, inputs)
+        else:
+            specs = self.lower(plan, quant)
+            arena = np.zeros(plan.peak_bytes, np.uint8)
+            for t in graph.tensors:
+                if t.kind == "input":
+                    s, off = t.storage(), plan.offsets[t.storage()]
+                    v = np.asarray(inputs[t.name],
+                                   X.arena_dtype(s.dtype_bytes)).reshape(-1)
+                    arena[off:off + s.nbytes] = v.view(np.uint8)
 
         fn = arena_ops.lower_program(specs, self.interpret)
         with warnings.catch_warnings():
@@ -165,10 +274,43 @@ class PallasExecutor:
             warnings.filterwarnings("ignore", message=".*donated.*")
             out_arena = np.asarray(fn(jnp.asarray(arena), *wflat))
 
+        if bplan is not None:
+            return self._gather_block_outputs(bplan, graph, out_arena)
         outs: Dict[str, np.ndarray] = {}
         for t in graph.tensors:
             if t.kind == "output":
                 s, off = t.storage(), plan.offsets[t.storage()]
                 outs[t.name] = out_arena[off:off + s.nbytes].view(
                     X.arena_dtype(s.dtype_bytes)).reshape(t.shape)
+        return outs
+
+    @staticmethod
+    def _seed_block_arena(bplan: BlockPlan, graph, inputs) -> np.ndarray:
+        """A zeroed (total_rows, rowlen) typed arena with every model input
+        scattered into its block layout (row-major over the used row
+        prefix)."""
+        dt = X.arena_dtype(bplan.dtype_bytes)
+        arena = np.zeros((bplan.total_rows, bplan.arena_rowlen), dt)
+        for t in graph.tensors:
+            if t.kind != "input":
+                continue
+            lay = bplan.layout_of(t)
+            flat = np.asarray(inputs[t.name], dt).reshape(-1)
+            block = np.zeros(lay.rows * lay.rowlen, dt)
+            block[:flat.size] = flat
+            arena[lay.row_offset:lay.row_offset + lay.rows,
+                  :lay.rowlen] = block.reshape(lay.rows, lay.rowlen)
+        return arena
+
+    @staticmethod
+    def _gather_block_outputs(bplan: BlockPlan, graph,
+                              out_arena: np.ndarray) -> Dict[str, np.ndarray]:
+        outs: Dict[str, np.ndarray] = {}
+        for t in graph.tensors:
+            if t.kind != "output":
+                continue
+            lay = bplan.layout_of(t)
+            block = out_arena[lay.row_offset:lay.row_offset + lay.rows,
+                              :lay.rowlen]
+            outs[t.name] = block.reshape(-1)[:t.elems].reshape(t.shape)
         return outs

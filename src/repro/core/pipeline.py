@@ -199,6 +199,16 @@ class CompiledPlan:
         does not."""
         return {t.name: off for t, off in self.plan.offsets.items()}
 
+    def legalised(self) -> Optional[P.BlockPlan]:
+        """The plan legalised onto the row-blocked (tiled) arena grid —
+        what compiled-mode Pallas execution allocates — or ``None`` when no
+        row-blocked arena can express it (mixed dtypes, aggregated
+        views)."""
+        try:
+            return P.legalise_for_blocks(self.plan)
+        except ValueError:
+            return None
+
     def report(self) -> str:
         lines = [
             f"# compile({self.original.name}): {self.peak_bytes} bytes "
@@ -211,6 +221,14 @@ class CompiledPlan:
             f"compile={self.compile_s * 1e3:.1f} ms",
             f"  passes: {' -> '.join(self.passes)}",
         ]
+        bp = self.legalised()
+        if bp is not None:
+            lines.append(
+                f"  row-blocked (tile {bp.tiling[0]}x{bp.tiling[1]}): "
+                f"{bp.padded_peak_bytes} bytes "
+                f"({bp.padded_peak_bytes / 1024:.1f} KB), "
+                f"+{bp.padding_overhead_pct:.1f}% tiling padding over the "
+                "byte-granular peak")
         if self.recompute_elems:
             lines.append(f"  recompute: {self.recompute_elems} elements")
         lines += [f"  | {entry}" for entry in self.log]
@@ -326,24 +344,24 @@ class SplitPass(Pass):
 
 
 def _has_aliases(g: Graph) -> bool:
-    """Any alias (reshape or view): storage-level dependencies then
-    under-constrain reordering (an alias's producer and its storage owner
-    collide in the producer map), so such graphs keep construction order."""
+    """Any alias (reshape or view) — the split gate: split_pair's tensor
+    remapping resolves aliases to their storage owner, which is not a valid
+    rewrite (serialisation handles aliases fine since ``serialise._deps``
+    became view-aware)."""
     return any(t.alias_of is not None for t in g.tensors)
 
 
 @register_pass
 class SerialisePass(Pass):
     """§II.B: candidate execution orders (eager / lazy / memory-greedy) per
-    variant; the plan pass keeps the best plan over all of them."""
+    variant; the plan pass keeps the best plan over all of them. Since
+    ``serialise._deps`` became view-aware, concat-removal variants (whose
+    branch ops write into aggregated views) are reordered too instead of
+    pinning construction order."""
     name = "serialise"
 
     def run(self, state: PipelineState) -> None:
         for i, (label, g) in enumerate(state.variants):
-            if _has_aliases(g):
-                state.log.append(f"serialise[{label}]: kept construction "
-                                 "order (aliased tensors)")
-                continue
             orders = candidate_orders(g)
             if len(orders) > 1:
                 state.orders[i] = orders
@@ -463,13 +481,28 @@ class VerifyPass(Pass):
         state.log.append("verify: arena execution bit-exact"
                          + (" (int8 quantised tier)" if quant else ""))
         if opt.backend == "pallas":
-            got_pl = X.get_backend("pallas").execute(state.plan, inputs,
-                                                     weights, quant=quant)
-            X.compare_outputs(got_np, got_pl, exact=False,
-                              label="pallas vs numpy")
+            # the flat byte program is the lowering reference; the
+            # row-blocked program is what compiled mode executes — verify
+            # both against the numpy arena semantics
+            got_fl = X.get_backend("pallas", layout="flat").execute(
+                state.plan, inputs, weights, quant=quant)
+            X.compare_outputs(got_np, got_fl, exact=False,
+                              label="pallas flat vs numpy")
+            tiers = "flat"
+            try:
+                got_blk = X.get_backend("pallas", layout="blocks").execute(
+                    state.plan, inputs, weights, quant=quant)
+            except ValueError:
+                # mixed-dtype plans have no single-typed row-blocked arena
+                state.log.append("verify: row-blocked tier skipped "
+                                 "(plan not legalisable)")
+            else:
+                X.compare_outputs(got_np, got_blk, exact=False,
+                                  label="pallas row-blocked vs numpy")
+                tiers = "flat + row-blocked"
             state.verified = "numeric+pallas"
-            state.log.append(
-                "verify: pallas arena execution matches numpy backend")
+            state.log.append("verify: pallas arena execution matches "
+                             f"numpy backend ({tiers})")
 
 
 # ---------------------------------------------------------------------------
@@ -603,9 +636,13 @@ def compile(graph: Graph, *, profile: str = "paper",
             ``split_ops_limit`` is the op-count gate for ``auto``.
         verify: verification mode (``auto``/``constraints``/``numeric``/``off``).
         backend: executor backend the plan is compiled for (``"numpy"`` or
-            ``"pallas"``); ``"pallas"`` adds a verify tier cross-checking the
-            pallas arena execution against the numpy backend, and
-            ``CompiledPlan.execute()`` runs on this backend by default.
+            ``"pallas"``); ``"pallas"`` adds a verify tier cross-checking
+            *both* pallas arena programs — the flat byte arena and the
+            row-blocked (tiled) arena of
+            :func:`repro.core.planner.legalise_for_blocks`, the program
+            compiled mode executes — against the numpy backend, and
+            ``CompiledPlan.execute()`` runs on this backend by default
+            (interpret vs compiled mode follows ``REPRO_DMO_INTERPRET``).
         cache: look up / populate the content-addressed plan cache.
         disk_cache: persist/look up plans on disk under
             ``$REPRO_DMO_CACHE_DIR`` (default ``~/.cache/repro-dmo``) so

@@ -19,9 +19,9 @@ with the peak arena size and a safety validator.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
-from repro.core.graph import Graph, Op, Tensor
+from repro.core.graph import Graph, Op, Tensor, pad_amount
 from repro.core import overlap as overlap_mod
 
 OverlapFn = Callable[[Op, int], int]
@@ -79,6 +79,13 @@ class Plan:
     overlaps: Dict[Tuple[int, int], int]  # (op index, input index) -> O_s bytes
     strategy: str = ""
 
+    def __getstate__(self):
+        # derived state (the memoised default-tiling legalisation) must not
+        # inflate pickled plans (disk plan cache)
+        d = dict(self.__dict__)
+        d.pop("_block_cache", None)
+        return d
+
     @property
     def peak_bytes(self) -> int:
         return max((off + t.nbytes for t, off in self.offsets.items()), default=0)
@@ -133,18 +140,35 @@ class Plan:
             out.append(OpLayout(op, tuple(ins), self._layout(op.output)))
         return out
 
-    def validate(self) -> None:
-        """Assert no live value can be clobbered under the overlap rules."""
+    def validate(self, granularity: int = 1) -> None:
+        """Assert no live value can be clobbered under the overlap rules.
+
+        ``granularity`` is the clobber unit in bytes: 1 checks the paper's
+        byte-granular invariant; a unit > 1 additionally requires every
+        offset to be unit-aligned, rounds sizes up to whole units, and
+        rounds an overlap's required input/output distance (``|out| -
+        O_s``) *up* to whole units — the conservative direction for a
+        runtime that clobbers whole blocks. Note this pads *byte* sizes,
+        i.e. it models densely packed tensors; :class:`BlockPlan` overrides
+        with the exact per-tensor row footprints."""
+        g = max(1, int(granularity))
+        pad = lambda n: -(-n // g) * g
         scopes = self.graph.scopes(self.order)
         tensors = list(self.offsets)
+        if g > 1:
+            for t in tensors:
+                if self.offsets[t] % g:
+                    raise AssertionError(
+                        f"{t.name}: offset {self.offsets[t]} not aligned to "
+                        f"the {g}-byte row")
         for i, a in enumerate(tensors):
             sa, ea = scopes[a]
-            xa, na = self.offsets[a], a.nbytes
+            xa, na = self.offsets[a], pad(a.nbytes)
             for b in tensors[i + 1:]:
                 sb, eb = scopes[b]
                 if ea < sb or eb < sa:
                     continue  # time-disjoint
-                xb, nb = self.offsets[b], b.nbytes
+                xb, nb = self.offsets[b], pad(b.nbytes)
                 if xa + na <= xb or xb + nb <= xa:
                     continue  # space-disjoint
                 os_ = self._allowed_overlap(a, b, scopes)
@@ -153,7 +177,8 @@ class Plan:
                         f"plan clobbers: {a.name}@{xa} vs {b.name}@{xb}")
                 inp, outp = os_
                 xi, xo = self.offsets[inp], self.offsets[outp]
-                if xi < xo + outp.nbytes - os_bytes(self, inp, outp):
+                dist = pad(outp.nbytes - os_bytes(self, inp, outp))
+                if xi < xo + dist:
                     raise AssertionError(
                         f"overlap beyond O_s: {inp.name}@{xi} vs {outp.name}@{xo}")
 
@@ -185,6 +210,316 @@ def os_bytes(plan: Plan, inp: Tensor, outp: Tensor) -> int:
         if op.inputs[ii].storage() is inp and op.output.storage() is outp:
             return v
     return 0
+
+
+# ---------------------------------------------------------------------------
+# Row-blocked (tiled) layout legalisation
+# ---------------------------------------------------------------------------
+
+#: Per-dtype-width VMEM tile (sublanes, lanes): the minor arena axis must be
+#: a lanes multiple and row offsets land on sublane-tile boundaries — the
+#: (8, 128) f32 / (32, 128) int8 native TPU tilings.
+TPU_TILES: Dict[int, Tuple[int, int]] = {4: (8, 128), 2: (16, 128),
+                                         1: (32, 128)}
+
+#: Op kinds whose kernels stream output rows (and therefore read/write the
+#: arena one whole row at a time — the shapes the row-granular O_s covers).
+_ROW_STREAMING_KINDS = frozenset({"conv2d", "depthwise_conv2d", "pool"})
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockLayout:
+    """Row-blocked placement of one arena tensor: the tensor occupies
+    ``rows`` consecutive arena rows starting at ``row_offset`` (a sublane-
+    tile-aligned row index), using the first ``rowlen`` elements of each row.
+    Conv/pool operands map one *image* row per arena row (``rows = H``,
+    ``rowlen = W*C``); every other tensor packs densely (``rowlen`` = the
+    full arena row). The tail of each row — and of the final dense row — is
+    tiling padding, accounted by :meth:`BlockPlan.padded_peak_bytes`."""
+
+    name: str
+    shape: Tuple[int, ...]
+    dtype_bytes: int
+    row_offset: int
+    rows: int
+    rowlen: int              # elements of each arena row this tensor uses
+
+    @property
+    def elems(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= int(s)
+        return n
+
+
+@dataclasses.dataclass
+class BlockPlan(Plan):
+    """A byte :class:`Plan` legalised onto the row-blocked arena grid.
+
+    Still a valid byte-granular plan — ``offsets`` hold the (row-aligned)
+    byte offsets and ``overlaps`` the row-rounded effective O_s, so the
+    numpy backend and ``validate()`` work unchanged — plus the block-level
+    contract the compiled Pallas program lowers from: per-tensor
+    :class:`BlockLayout` records over a shared ``(total_rows, arena_rowlen)``
+    arena. ``validate()`` additionally re-checks the no-clobber invariant at
+    *row* granularity (a blocked kernel clobbers whole rows)."""
+
+    source: Optional[Plan] = None      #: the byte-granular plan legalised
+    tiling: Tuple[int, int] = (8, 128)  #: (sublanes, lanes) for the dtype
+    arena_rowlen: int = 128            #: arena row length in elements
+    total_rows: int = 0                #: arena rows (sublane-rounded)
+    layouts: Dict[Tensor, "BlockLayout"] = dataclasses.field(
+        default_factory=dict)
+    row_overlaps: Dict[Tuple[int, int], int] = dataclasses.field(
+        default_factory=dict)          #: (op idx, input idx) -> O_s in rows
+
+    @property
+    def dtype_bytes(self) -> int:
+        return (next(iter(self.layouts.values())).dtype_bytes
+                if self.layouts else 4)
+
+    @property
+    def row_bytes(self) -> int:
+        return self.arena_rowlen * self.dtype_bytes
+
+    @property
+    def padded_peak_bytes(self) -> int:
+        """The arena footprint a row-blocked runtime actually allocates:
+        every reserved row at full (lane-tiled) width."""
+        return self.total_rows * self.row_bytes
+
+    @property
+    def padding_overhead_pct(self) -> float:
+        """Tiling cost: legalised (row-blocked) peak over the byte-granular
+        source peak, as +%."""
+        base = (self.source or self).peak_bytes
+        if base == 0:
+            return 0.0
+        return 100.0 * (self.padded_peak_bytes / base - 1.0)
+
+    def layout_of(self, t: Tensor) -> "BlockLayout":
+        return self.layouts[t.storage()]
+
+    def validate(self, granularity: Optional[int] = None) -> None:
+        """Byte-granular check plus the exact block-footprint check: live
+        tensors never share an arena *row* beyond their row-granular O_s
+        distance. The generic ``Plan.validate(granularity)`` pads byte
+        sizes, which under-counts image-layout footprints (H arena rows at
+        ``rowlen < arena_rowlen`` hold fewer bytes than they reserve), so
+        this override walks the real :class:`BlockLayout` row extents."""
+        super().validate()
+        if granularity is not None:
+            super().validate(granularity)
+        self._validate_rows()
+
+    def _os_rows(self, inp: Tensor, outp: Tensor) -> int:
+        for (oi, ii), v in self.row_overlaps.items():
+            op = self.order[oi]
+            if op.inputs[ii].storage() is inp \
+                    and op.output.storage() is outp:
+                return v
+        return 0
+
+    def _validate_rows(self) -> None:
+        """No-clobber at arena-row granularity over the BlockLayout
+        footprints (a blocked kernel clobbers whole reserved rows)."""
+        scopes = self.graph.scopes(self.order)
+        lays = self.layouts
+        tensors = list(lays)
+        for i, a in enumerate(tensors):
+            sa, ea = scopes[a]
+            xa, na = lays[a].row_offset, lays[a].rows
+            for b in tensors[i + 1:]:
+                sb, eb = scopes[b]
+                if ea < sb or eb < sa:
+                    continue  # time-disjoint
+                xb, nb = lays[b].row_offset, lays[b].rows
+                if xa + na <= xb or xb + nb <= xa:
+                    continue  # row-disjoint
+                os_ = self._allowed_overlap(a, b, scopes)
+                if os_ is None:
+                    raise AssertionError(
+                        f"block plan clobbers rows: {a.name}@r{xa} "
+                        f"vs {b.name}@r{xb}")
+                inp, outp = os_
+                xi = lays[inp].row_offset
+                xo = lays[outp].row_offset
+                dist = lays[outp].rows - self._os_rows(inp, outp)
+                if xi < xo + dist:
+                    raise AssertionError(
+                        f"row overlap beyond O_s: {inp.name}@r{xi} "
+                        f"vs {outp.name}@r{xo} (need distance {dist})")
+
+    def report(self) -> str:
+        base = (self.source or self).peak_bytes
+        lines = [super().report(),
+                 f"  row-blocked: {self.total_rows} rows x "
+                 f"{self.arena_rowlen} elems ({self.padded_peak_bytes} bytes,"
+                 f" tile {self.tiling[0]}x{self.tiling[1]}) = "
+                 f"+{self.padding_overhead_pct:.1f}% padding over "
+                 f"byte-granular peak {base}"]
+        return "\n".join(lines)
+
+
+def _min_row_distance(op: Op) -> int:
+    """Smallest safe input/output *row* distance for a row-streaming op:
+    writing output row ``i`` (which clobbers its whole arena row, padding
+    included) must leave every input row that rows ``> i`` still read
+    intact. Exact by enumeration over output rows — the analytic byte O_s
+    rounded to rows can overstate the safe overlap when the output's dense
+    rows are narrower than the input's (e.g. width-strided convs), so the
+    legaliser takes the max of both distances."""
+    if op.kind not in _ROW_STREAMING_KINDS:
+        return 0
+    ih = op.inputs[0].shape[-3]
+    oh = op.output.shape[-3]
+    kh = op.params["kernel"][0]
+    sh = op.params.get("stride", (1, 1))[0]
+    dh = op.params.get("dilation", (1, 1))[0]
+    ph = (pad_amount(ih, oh, kh, sh, dh)
+          if op.params.get("padding", "same") == "same" else 0)
+    d = 0
+    for nxt in range(1, oh):
+        lo = None
+        for fy in range(kh):
+            iy = nxt * sh - ph + fy * dh
+            if 0 <= iy < ih:
+                lo = iy
+                break
+        if lo is None:
+            continue
+        d = max(d, nxt - lo)
+    return d
+
+
+def _image_layouts(plan: Plan) -> Dict[Tensor, Tuple[int, int]]:
+    """Storage tensors that must keep one *image* row per arena row (they
+    feed or come out of a row-streaming kernel): storage -> (H, W*C)."""
+    image: Dict[Tensor, Tuple[int, int]] = {}
+    for op in plan.order:
+        if op.kind not in _ROW_STREAMING_KINDS:
+            continue
+        for t in (op.inputs[0], op.output):
+            shp = tuple(t.shape)
+            lead = 1
+            for s in shp[:-3]:
+                lead *= int(s)
+            if len(shp) < 3 or lead != 1:
+                raise ValueError(
+                    f"{op.name}: operand {t.name} shape {shp} has no "
+                    "batch-1 HWC row structure to block")
+            s = t.storage()
+            rows_used = (int(shp[-3]), int(shp[-2]) * int(shp[-1]))
+            if image.setdefault(s, rows_used) != rows_used:
+                raise ValueError(
+                    f"{s.name}: conflicting image-row layouts "
+                    f"{image[s]} vs {rows_used} (aggregated views cannot "
+                    "be row-blocked)")
+    return image
+
+
+def legalise_for_blocks(plan: Plan,
+                        tiling: Optional[Mapping[int, Tuple[int, int]]] = None,
+                        ) -> BlockPlan:
+    """Legalise a byte-granular plan onto the row-blocked arena grid.
+
+    Every arena tensor gets a ``(rows, rowlen)`` block shape and a
+    sublane-tile-aligned row offset (per-dtype tiles: (8, 128) f32,
+    (32, 128) int8); each op's diagonal distance is re-derived at row
+    granularity — the byte distance ``|out| - O_s`` rounded *up* to whole
+    rows (the ``dmo_arena_dwconv`` rule), stiffened by the exact
+    row-streaming bound of :func:`_min_row_distance`. Placement re-runs the
+    lowest-feasible-offset allocator in row units over the same liveness
+    scopes, inserting tensors in the source plan's (byte-offset) order, so
+    the legalised plan keeps the source's packing structure.
+
+    Raises ``ValueError`` for plans no row-blocked arena can express
+    (mixed-dtype plans — one typed 2-D buffer has one element size —
+    unsupported dtype widths, or aggregated concat-removal views), and
+    ``AssertionError`` when the *source* plan is itself unsafe: the
+    legaliser re-places tensors, so it must refuse to silently repair a
+    clobbering layout."""
+    if tiling is None:
+        # memoised per plan: executors, reports and benchmarks all legalise
+        # the same plan, and re-placement + two O(T^2) validates per call
+        # would otherwise skew execution timings
+        cached = plan.__dict__.get("_block_cache")
+        if cached is not None:
+            return cached
+    tiles = dict(TPU_TILES) if tiling is None else dict(tiling)
+    tensors = list(plan.offsets)
+    widths = {t.dtype_bytes for t in tensors}
+    if len(widths) > 1:
+        raise ValueError(
+            f"mixed-dtype plan ({sorted(widths)}-byte tensors) cannot be "
+            "row-blocked: a typed (rows, rowlen) arena has one element size")
+    db = widths.pop() if widths else 4
+    if db not in tiles:
+        raise ValueError(f"no block tiling for {db}-byte tensors "
+                         f"(tilings: {sorted(tiles)})")
+    if any(t.alias_of is not None and t.elems != t.storage().elems
+           for t in plan.graph.tensors):
+        raise ValueError("aggregated views (strided offsets) cannot be "
+                         "row-blocked")
+    plan.validate()
+    sub, lanes = tiles[db]
+    image = _image_layouts(plan)
+
+    # arena row length: every image row must fit one arena row
+    need = max([lanes] + [used for _, used in image.values()])
+    arena_rowlen = -(-need // lanes) * lanes
+    row_bytes = arena_rowlen * db
+
+    rows: Dict[Tensor, int] = {}
+    rowlen: Dict[Tensor, int] = {}
+    for t in tensors:
+        if t in image:
+            rows[t], rowlen[t] = image[t]
+        else:
+            rows[t] = -(-t.elems // arena_rowlen)
+            rowlen[t] = arena_rowlen
+
+    # row-granular O_s per recorded overlap: distance = ceil(byte distance /
+    # row), stiffened by the exact row-streaming bound
+    row_overlaps: Dict[Tuple[int, int], int] = {}
+    for (oi, ii), v in plan.overlaps.items():
+        op = plan.order[oi]
+        outp = op.output.storage()
+        dist = -(-(outp.nbytes - v) // row_bytes)
+        dist = max(dist, _min_row_distance(op))
+        row_overlaps[(oi, ii)] = max(0, rows[outp] - dist)
+
+    scopes = plan.graph.scopes(plan.order)
+    placed: Dict[Tensor, int] = {}
+    for t in sorted(tensors, key=lambda t: (plan.offsets[t], -t.nbytes)):
+        placed[t] = _lowest_feasible(t, placed, scopes, plan.order,
+                                     row_overlaps, sizes=rows, align=sub)
+    total = max((placed[t] + rows[t] for t in tensors), default=0)
+    total = -(-total // sub) * sub
+
+    layouts = {
+        t: BlockLayout(t.name, tuple(t.shape), db, placed[t], rows[t],
+                       rowlen[t])
+        for t in tensors
+    }
+    # the legalised plan re-expressed in bytes: offsets are row-aligned and
+    # each O_s is the row-rounded effective overlap (>= 0), so byte-level
+    # validate()/numpy execution see a normal — just padded — plan
+    offsets = {t: placed[t] * row_bytes for t in tensors}
+    overlaps: Dict[Tuple[int, int], int] = {}
+    for (oi, ii), os_rows in row_overlaps.items():
+        outp = plan.order[oi].output.storage()
+        dist_b = (rows[outp] - os_rows) * row_bytes
+        overlaps[(oi, ii)] = max(0, outp.nbytes - dist_b)
+    bp = BlockPlan(plan.graph, list(plan.order), offsets, overlaps,
+                   plan.strategy + "+blocks", source=plan,
+                   tiling=(sub, lanes), arena_rowlen=arena_rowlen,
+                   total_rows=total, layouts=layouts,
+                   row_overlaps=row_overlaps)
+    bp.validate()
+    if tiling is None:
+        plan.__dict__["_block_cache"] = bp
+    return bp
 
 
 # ---------------------------------------------------------------------------
@@ -232,8 +567,14 @@ def _compute_overlaps(order: List[Op], overlap_fn: Optional[OverlapFn],
 
 def _forbidden_intervals(t: Tensor, placed: Dict[Tensor, int], scopes,
                          order: List[Op],
-                         overlaps: Dict[Tuple[int, int], int]) -> List[Tuple[int, int]]:
-    """Intervals of start offsets forbidden for tensor ``t``."""
+                         overlaps: Dict[Tuple[int, int], int],
+                         sizes: Optional[Mapping[Tensor, int]] = None,
+                         ) -> List[Tuple[int, int]]:
+    """Intervals of start offsets forbidden for tensor ``t``. Offsets, sizes
+    and O_s values share one unit: bytes by default, or whatever unit the
+    ``sizes`` map (and the matching ``overlaps`` values) are expressed in —
+    the row-blocked legaliser passes row counts through the same machinery."""
+    size = (lambda x: x.nbytes) if sizes is None else sizes.__getitem__
     # map (input storage, output storage) -> O_s for quick lookup
     relax: Dict[Tuple[Tensor, Tensor], int] = {}
     for (oi, ii), v in overlaps.items():
@@ -241,38 +582,44 @@ def _forbidden_intervals(t: Tensor, placed: Dict[Tensor, int], scopes,
         relax[(op.inputs[ii].storage(), op.output.storage())] = v
     sa, ea = scopes[t]
     out: List[Tuple[int, int]] = []
+    nt = size(t)
     for b, xb in placed.items():
         sb, eb = scopes[b]
         if ea < sb or eb < sa:
             continue
-        nb = b.nbytes
+        nb = size(b)
         if (t, b) in relax:        # t is input overlapping output b's tail
             hi = xb + nb - relax[(t, b)]
         elif (b, t) in relax:      # t is the output; b the (placed) input:
             # constraint: xb >= x_t + n_t - O_s  ->  x_t <= xb - n_t + O_s,
             # i.e. forbidden to START in (xb - n_t + O_s, xb + nb) unless
             # fully above b.  Lower edge of forbidden zone:
-            hi = xb + b.nbytes     # fully-above bound handled below
-            lo = xb - t.nbytes + relax[(b, t)]
+            hi = xb + nb           # fully-above bound handled below
+            lo = xb - nt + relax[(b, t)]
             if lo < hi:
                 out.append((lo + 1, xb + nb))
             continue
         else:
             hi = xb + nb
-        lo = xb - t.nbytes
+        lo = xb - nt
         if lo < hi:
             out.append((lo + 1, hi))  # forbidden start offsets [lo+1, hi)
     return out
 
 
-def _lowest_feasible(t: Tensor, placed, scopes, order, overlaps) -> int:
+def _lowest_feasible(t: Tensor, placed, scopes, order, overlaps,
+                     sizes: Optional[Mapping[Tensor, int]] = None,
+                     align: Optional[int] = None) -> int:
     """Lowest conflict-free start offset for ``t``, rounded up to the
     tensor's ``dtype_bytes`` alignment so executor backends can view the byte
     arena at the planned offset (an f32 tensor packed after an odd-sized int8
     tensor must not land on an unaligned byte). All-f32 graphs are unaffected:
-    every boundary there is already a multiple of 4."""
-    a = max(1, t.dtype_bytes)
-    iv = sorted(_forbidden_intervals(t, placed, scopes, order, overlaps))
+    every boundary there is already a multiple of 4. The row-blocked
+    legaliser reuses this with ``sizes`` in rows and ``align`` the sublane
+    tile, so offsets land on per-dtype tile boundaries."""
+    a = align if align is not None else max(1, t.dtype_bytes)
+    iv = sorted(_forbidden_intervals(t, placed, scopes, order, overlaps,
+                                     sizes))
     x = 0
     for lo, hi in iv:
         if x < lo:

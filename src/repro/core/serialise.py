@@ -15,17 +15,33 @@ from repro.core.graph import Graph, Op, Tensor
 
 
 def _deps(graph: Graph) -> Dict[Op, Set[Op]]:
-    producer: Dict[Tensor, Op] = {}
+    """Producer dependencies, *view-aware*.
+
+    After §II.C concat removal an op's output may be a view into an
+    aggregated tensor: several ops then write disjoint regions of ONE
+    storage. A storage-keyed producer map keeps only the last such writer,
+    under-constraining every reader of the aggregate — which is why removal
+    graphs used to be pinned to construction order. Here a reader of an
+    exactly-produced tensor (or view) depends on its producer, and a reader
+    that resolves through storage depends on *every* writer into that
+    storage (branch writers stay mutually unordered — they touch disjoint
+    regions — so removal variants admit real re-serialisation)."""
+    producer: Dict[int, Op] = {}          # id(exact output tensor) -> op
+    writers: Dict[Tensor, List[Op]] = {}  # storage -> every op writing into it
     for op in graph.ops:
         for t in op.outputs:
-            producer[t.storage()] = op
+            producer[id(t)] = op
+            writers.setdefault(t.storage(), []).append(op)
     deps: Dict[Op, Set[Op]] = {}
     for op in graph.ops:
-        deps[op] = {
-            producer[t.storage()]
-            for t in op.inputs
-            if t.storage() in producer
-        }
+        d: Set[Op] = set()
+        for t in op.inputs:
+            if id(t) in producer:
+                d.add(producer[id(t)])
+            if t.storage() in writers:
+                d.update(writers[t.storage()])
+        d.discard(op)
+        deps[op] = d
     return deps
 
 

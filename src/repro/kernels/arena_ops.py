@@ -1,35 +1,45 @@
 """Generalised DMO arena kernels: every supported op as a Pallas call over
-ONE flat *byte* arena buffer.
+ONE shared arena buffer, in either of two arena programs.
 
 This generalises :mod:`repro.kernels.dmo_arena_dwconv` (a single hard-coded
 depthwise conv) to the full op set a :class:`~repro.core.planner.Plan` can
 contain: conv2d / depthwise_conv2d / pool / elementwise / softmax /
 fully_connected / matmul / concat / pad / mean. Each op becomes one
-``pl.pallas_call`` whose first operand is the flat uint8 arena and whose
-output *aliases* it (``input_output_aliases={0: 0}``), so the arena is
-threaded in-place through the op sequence — the TPU-VMEM analogue of the
-paper's SRAM tensor arena.
+``pl.pallas_call`` whose first operand is the shared arena and whose output
+*aliases* it (``input_output_aliases={0: 0}``), so the arena is threaded
+in-place through the op sequence — the TPU-VMEM analogue of the paper's SRAM
+tensor arena.
 
-The arena is byte-granular and the kernels are **dtype-parameterised**
-(``OpSpec.dtype``): f32 ops bitcast 4-byte windows of the arena to float32,
-int8 ops bitcast single bytes to int8 and run the quantised tier — int32
-accumulation plus the float32 scale/zero-point requantisation of
-:mod:`repro.core.exec.ops` (``requantise``), mirrored here
-operation-for-operation so numpy and pallas agree to <= 1 LSB. Mixed-dtype
-plans therefore execute in one buffer with no implicit element size.
+Two arena addressings share the same kernel bodies through a small memory
+access layer (:class:`_FlatMem` / :class:`_BlockMem`; an :class:`OpSpec`
+with ``rowlen == 0`` selects the flat program, ``rowlen > 0`` the blocked
+one):
+
+- **flat** — the arena is a 1-D *byte* buffer; operands live at byte
+  offsets and kernels bitcast their windows to the tier the spec declares
+  (f32 windows / int8 bytes, the quantised tier running int32 accumulation
+  plus the float32 requantisation of :mod:`repro.core.exec.ops`). Mixed-
+  dtype plans execute in one buffer, but byte-granular dynamic slices fight
+  the TPU's (8, 128)/(32, 128) VMEM tilings — this program is
+  interpret-mode only.
+- **row-blocked** — the arena is a 2-D ``(rows, rowlen)`` buffer *typed* to
+  the plan's dtype, laid out by
+  :func:`repro.core.planner.legalise_for_blocks`: operands occupy whole
+  arena rows at sublane-tile-aligned row offsets, conv/pool walk one image
+  row per arena row via ``pl.dslice`` on the row axis, and no bitcasts are
+  needed — the same program lowers under ``interpret=False`` (compiled
+  mode on a real TPU).
 
 Safety contract (paper §III.A): kernels read *and* write through the aliased
 output ref, and conv/pool walk output rows in ascending index order inside a
 sequential ``fori_loop``. Reads for output row ``i`` therefore happen after
 the row ``i-1`` store — exactly the element order the safe overlap ``O_s``
 was derived against, which is why a planner-approved layout cannot clobber a
-live value. A parallel grid over rows would break that guarantee, precisely
-the paper's multi-threading caveat (§III.F) — keep the row loop sequential.
-
-``interpret=True`` (the default) runs the kernels on CPU; compiled TPU
-execution of a *flat* arena with byte-granular dynamic slices would fight
-the (8, 128) tiling constraints, so on-device use should go through
-row-blocked layouts like the dwconv kernel's ``(rows, rowlen)`` arena.
+live value. In the blocked program a row store clobbers the *whole* arena
+row (tiling padding included), which is why the legaliser re-derives each
+diagonal distance at row granularity. A parallel grid over rows would break
+the guarantee, precisely the paper's multi-threading caveat (§III.F) — keep
+the row loop sequential.
 """
 from __future__ import annotations
 
@@ -58,20 +68,30 @@ WEIGHTED_KINDS = frozenset({"conv2d", "depthwise_conv2d", "fully_connected"})
 
 @dataclasses.dataclass(frozen=True)
 class OpSpec:
-    """Hashable, fully static description of one lowered op: *byte* offsets
-    into the flat arena, shapes, the arena dtype tier ("f32" or "i8"), and
-    kind-specific parameters (plus quantisation statics for int8 ops). Two
-    plans with identical layouts produce equal specs, so lowered programs
-    are shared."""
+    """Hashable, fully static description of one lowered op: operand
+    placements in the shared arena, shapes, the arena dtype tier ("f32" or
+    "i8"), and kind-specific parameters (plus quantisation statics for int8
+    ops). Two plans with identical layouts produce equal specs, so lowered
+    programs are shared.
+
+    ``rowlen == 0`` selects the flat byte program: ``in_off``/``out_off``
+    are *byte* offsets into a 1-D uint8 arena. ``rowlen > 0`` selects the
+    row-blocked program over a typed ``(rows, rowlen)`` arena: offsets are
+    arena *row* indices and ``in_rows``/``out_rows`` carry each operand's
+    ``(rows, used-elements-per-row)`` block shape from its
+    :class:`~repro.core.planner.BlockLayout`."""
 
     kind: str
-    in_off: Tuple[int, ...]            # byte offset per data input
+    in_off: Tuple[int, ...]            # byte (flat) | arena-row (blocked)
     in_shape: Tuple[Tuple[int, ...], ...]
-    out_off: int                       # byte offset of the output
+    out_off: int
     out_shape: Tuple[int, ...]
     dtype: str = "f32"                 # arena tier: "f32" | "i8"
     meta: Tuple = ()                   # kind-specific statics (see builders)
     qmeta: Tuple = ()                  # int8 statics (zero points, multipliers)
+    rowlen: int = 0                    # arena row elements (0 = flat program)
+    in_rows: Tuple[Tuple[int, int], ...] = ()  # (rows, used) per input
+    out_rows: Tuple[int, int] = ()             # (rows, used) of the output
 
 
 def _elems(shape: Tuple[int, ...]) -> int:
@@ -85,25 +105,100 @@ def _isz(dtype: str) -> int:
     return 1 if dtype == "i8" else 4
 
 
-def _read(ref, byte_off, elems: int, dtype: str):
-    """``elems`` values of the given tier from the uint8 arena at a (possibly
-    traced) byte offset, as a flat typed vector."""
-    if dtype == "i8":
-        raw = ref[pl.dslice(byte_off, elems)]
-        return jax.lax.bitcast_convert_type(raw, jnp.int8)
-    raw = ref[pl.dslice(byte_off, 4 * elems)].reshape(elems, 4)
-    return jax.lax.bitcast_convert_type(raw, jnp.float32)
+def _jnp_dtype(dtype: str):
+    return jnp.int8 if dtype == "i8" else jnp.float32
 
 
-def _read_t(ref, byte_off, shape: Tuple[int, ...], dtype: str):
-    return _read(ref, byte_off, _elems(shape), dtype).reshape(shape)
+# ---------------------------------------------------------------------------
+# Memory access layer: the one place the two arena addressings differ.
+# Kernel bodies below are written once against this API.
+# ---------------------------------------------------------------------------
 
 
-def _write(ref, byte_off, value):
-    """Store a typed value back into the uint8 arena at a byte offset."""
-    flat = value.reshape(-1)
-    raw = jax.lax.bitcast_convert_type(flat, jnp.uint8).reshape(-1)
-    ref[pl.dslice(byte_off, raw.size)] = raw
+class _FlatMem:
+    """Flat byte-arena accessor: bitcast typed windows at byte offsets."""
+
+    def __init__(self, ref, spec: OpSpec):
+        self.ref, self.spec = ref, spec
+        self.isz = _isz(spec.dtype)
+
+    def _read(self, byte_off, elems: int):
+        if self.spec.dtype == "i8":
+            raw = self.ref[pl.dslice(byte_off, elems)]
+            return jax.lax.bitcast_convert_type(raw, jnp.int8)
+        raw = self.ref[pl.dslice(byte_off, 4 * elems)].reshape(elems, 4)
+        return jax.lax.bitcast_convert_type(raw, jnp.float32)
+
+    def read_t(self, i: int):
+        """Input ``i`` as a typed tensor in its view shape."""
+        shape = self.spec.in_shape[i]
+        return self._read(self.spec.in_off[i], _elems(shape)).reshape(shape)
+
+    def read_row(self, i: int, iy):
+        """One image row (W*C elements) of input ``i`` at a traced row
+        index."""
+        row = _elems(self.spec.in_shape[i][-2:])
+        return self._read(self.spec.in_off[i] + iy * row * self.isz, row)
+
+    def _write(self, byte_off, value):
+        flat = value.reshape(-1)
+        raw = jax.lax.bitcast_convert_type(flat, jnp.uint8).reshape(-1)
+        self.ref[pl.dslice(byte_off, raw.size)] = raw
+
+    def write(self, value):
+        self._write(self.spec.out_off, value)
+
+    def write_row(self, oy, value):
+        row = _elems(self.spec.out_shape[-2:])
+        self._write(self.spec.out_off + oy * row * self.isz, value)
+
+
+class _BlockMem:
+    """Row-blocked accessor: whole arena rows of a typed (R, L) buffer via
+    ``pl.dslice`` on the row axis — no bitcasts, compiled-mode lowerable."""
+
+    def __init__(self, ref, spec: OpSpec):
+        self.ref, self.spec = ref, spec
+        self.dt = _jnp_dtype(spec.dtype)
+        self.L = spec.rowlen
+
+    def read_t(self, i: int):
+        rows, used = self.spec.in_rows[i]
+        shape = self.spec.in_shape[i]
+        block = self.ref[pl.dslice(self.spec.in_off[i], rows), :]
+        flat = block[:, :used].reshape(rows * used)
+        return flat[:_elems(shape)].reshape(shape)
+
+    def read_row(self, i: int, iy):
+        used = _elems(self.spec.in_shape[i][-2:])
+        row = self.ref[pl.dslice(self.spec.in_off[i] + iy, 1), :]
+        return row.reshape(self.L)[:used]
+
+    def _pad_cols(self, block, rows: int, used: int):
+        """Zero-fill each row's tile-padding tail out to the arena row."""
+        if used == self.L:
+            return block
+        return jnp.concatenate(
+            [block, jnp.zeros((rows, self.L - used), self.dt)], axis=1)
+
+    def write(self, value):
+        rows, used = self.spec.out_rows
+        flat = value.reshape(-1).astype(self.dt)
+        if flat.size < rows * used:       # dense tail padding
+            flat = jnp.concatenate(
+                [flat, jnp.zeros(rows * used - flat.size, self.dt)])
+        block = self._pad_cols(flat.reshape(rows, used), rows, used)
+        self.ref[pl.dslice(self.spec.out_off, rows), :] = block
+
+    def write_row(self, oy, value):
+        used = _elems(self.spec.out_shape[-2:])
+        row = value.reshape(1, used).astype(self.dt)
+        self.ref[pl.dslice(self.spec.out_off + oy, 1), :] = \
+            self._pad_cols(row, 1, used)
+
+
+def _mem(ref, spec: OpSpec):
+    return _BlockMem(ref, spec) if spec.rowlen else _FlatMem(ref, spec)
 
 
 def _requant(acc, mult: float, zp: int):
@@ -123,18 +218,18 @@ def _quant(v, scale: float, zp: int):
 
 # ---------------------------------------------------------------------------
 # Kernel bodies — all state lives in out_ref (the aliased arena); the input
-# operand only seeds its initial contents via the alias.
+# operand only seeds its initial contents via the alias. Bodies are
+# addressing-agnostic: every arena touch goes through the mem layer.
 # ---------------------------------------------------------------------------
 
 
 def _conv_kernel(_a, w_ref, o_ref, *, spec: OpSpec):
+    mem = _mem(o_ref, spec)
     ih, iw, ic = spec.in_shape[0][-3:]
     oh, ow, oc = spec.out_shape[-3:]
     kh, kw, sh, sw, dh, dw, ph, pw, mult = spec.meta
-    in_off, out_off = spec.in_off[0], spec.out_off
     depthwise = spec.kind == "depthwise_conv2d"
     quant = spec.dtype == "i8"
-    isz = _isz(spec.dtype)
 
     def body(oy, _):
         if quant:
@@ -146,8 +241,7 @@ def _conv_kernel(_a, w_ref, o_ref, *, spec: OpSpec):
             iy = oy * sh - ph + fy * dh
             row_ok = (iy >= 0) & (iy < ih)
             iy_c = jnp.clip(iy, 0, ih - 1)
-            row = _read(o_ref, in_off + iy_c * iw * ic * isz, iw * ic,
-                        spec.dtype).reshape(iw, ic)
+            row = mem.read_row(0, iy_c).reshape(iw, ic)
             if quant:
                 row = row.astype(jnp.int32) - x_zp
             for fx in range(kw):
@@ -168,19 +262,18 @@ def _conv_kernel(_a, w_ref, o_ref, *, spec: OpSpec):
                         taps, w, preferred_element_type=(
                             jnp.int32 if quant else jnp.float32))
         out = _requant(acc, amult, y_zp) if quant else acc
-        _write(o_ref, out_off + oy * ow * oc * isz, out)
+        mem.write_row(oy, out)
         return 0
 
     jax.lax.fori_loop(0, oh, body, 0)
 
 
 def _pool_kernel(_a, o_ref, *, spec: OpSpec):
+    mem = _mem(o_ref, spec)
     ih, iw, c = spec.in_shape[0][-3:]
     oh, ow, _ = spec.out_shape[-3:]
     kh, kw, sh, sw, ph, pw, mode = spec.meta
-    in_off, out_off = spec.in_off[0], spec.out_off
     quant = spec.dtype == "i8"
-    isz = _isz(spec.dtype)
 
     def body(oy, _):
         if quant:
@@ -194,8 +287,7 @@ def _pool_kernel(_a, o_ref, *, spec: OpSpec):
             iy = oy * sh - ph + fy
             row_ok = (iy >= 0) & (iy < ih)
             iy_c = jnp.clip(iy, 0, ih - 1)
-            row = _read(o_ref, in_off + iy_c * iw * c * isz, iw * c,
-                        spec.dtype).reshape(iw, c)
+            row = mem.read_row(0, iy_c).reshape(iw, c)
             if quant:
                 row = row.astype(jnp.int32)
             for fx in range(kw):
@@ -218,41 +310,40 @@ def _pool_kernel(_a, o_ref, *, spec: OpSpec):
             out = _requant(val, amult, y_zp)
         else:
             out = acc / jnp.maximum(cnt, 1.0) if mode == "avg" else acc
-        _write(o_ref, out_off + oy * ow * c * isz, out)
+        mem.write_row(oy, out)
         return 0
 
     jax.lax.fori_loop(0, oh, body, 0)
 
 
 def _elementwise_kernel(_a, o_ref, *, spec: OpSpec):
+    mem = _mem(o_ref, spec)
     fn = _ELEMENTWISE[spec.meta[0]]
-    xs = [_read_t(o_ref, off, shp, spec.dtype)
-          for off, shp in zip(spec.in_off, spec.in_shape)]
+    xs = [mem.read_t(i) for i in range(len(spec.in_shape))]
     if spec.dtype == "i8":
         in_q, (ys, yzp) = spec.qmeta
         xs = [_dequant(x, s, zp) for x, (s, zp) in zip(xs, in_q)]
     if len(xs) == 2 and _elems(spec.in_shape[1]) != _elems(spec.in_shape[0]):
         xs[1] = jnp.broadcast_to(xs[1], xs[0].shape)
     v = fn(*xs).astype(jnp.float32)
-    _write(o_ref, spec.out_off,
-           _quant(v, ys, yzp) if spec.dtype == "i8" else v)
+    mem.write(_quant(v, ys, yzp) if spec.dtype == "i8" else v)
 
 
 def _softmax_kernel(_a, o_ref, *, spec: OpSpec):
-    x = _read_t(o_ref, spec.in_off[0], spec.in_shape[0], spec.dtype)
+    mem = _mem(o_ref, spec)
+    x = mem.read_t(0)
     if spec.dtype == "i8":
         (xs, xzp), (ys, yzp) = spec.qmeta
         x = _dequant(x, xs, xzp)
     e = jnp.exp(x - jnp.max(x, axis=-1, keepdims=True))
     y = e / jnp.sum(e, axis=-1, keepdims=True)
-    _write(o_ref, spec.out_off,
-           _quant(y, ys, yzp) if spec.dtype == "i8" else y)
+    mem.write(_quant(y, ys, yzp) if spec.dtype == "i8" else y)
 
 
 def _fully_connected_kernel(_a, w_ref, o_ref, *, spec: OpSpec):
+    mem = _mem(o_ref, spec)
     idim = spec.in_shape[0][-1]
-    x = _read_t(o_ref, spec.in_off[0], spec.in_shape[0],
-                spec.dtype).reshape(-1, idim)
+    x = mem.read_t(0).reshape(-1, idim)
     if spec.dtype == "i8":
         x_zp, amult, y_zp = spec.qmeta
         acc = jnp.dot(x.astype(jnp.int32) - x_zp,
@@ -261,13 +352,13 @@ def _fully_connected_kernel(_a, w_ref, o_ref, *, spec: OpSpec):
         y = _requant(acc, amult, y_zp)
     else:
         y = jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32)
-    _write(o_ref, spec.out_off, y.reshape(spec.out_shape))
+    mem.write(y.reshape(spec.out_shape))
 
 
 def _matmul_kernel(_a, o_ref, *, spec: OpSpec):
-    a = _read_t(o_ref, spec.in_off[0], spec.in_shape[0], spec.dtype)
-    a = a.reshape(-1, spec.in_shape[0][-1])
-    b = _read_t(o_ref, spec.in_off[1], spec.in_shape[1], spec.dtype)
+    mem = _mem(o_ref, spec)
+    a = mem.read_t(0).reshape(-1, spec.in_shape[0][-1])
+    b = mem.read_t(1)
     if spec.dtype == "i8":
         a_zp, b_zp, amult, y_zp = spec.qmeta
         acc = jnp.dot(a.astype(jnp.int32) - a_zp,
@@ -276,7 +367,7 @@ def _matmul_kernel(_a, o_ref, *, spec: OpSpec):
         y = _requant(acc, amult, y_zp)
     else:
         y = jnp.dot(a, b, preferred_element_type=jnp.float32)
-    _write(o_ref, spec.out_off, y.reshape(spec.out_shape))
+    mem.write(y.reshape(spec.out_shape))
 
 
 def _rescale(x, src, dst):
@@ -287,27 +378,29 @@ def _rescale(x, src, dst):
 
 
 def _concat_kernel(_a, o_ref, *, spec: OpSpec):
+    mem = _mem(o_ref, spec)
     axis = spec.meta[0]
-    xs = [_read_t(o_ref, off, shp, spec.dtype)
-          for off, shp in zip(spec.in_off, spec.in_shape)]
+    xs = [mem.read_t(i) for i in range(len(spec.in_shape))]
     if spec.dtype == "i8":
         in_q, (yzp,) = spec.qmeta
         xs = [_rescale(x, q, (yzp,)) for x, q in zip(xs, in_q)]
-    _write(o_ref, spec.out_off, jnp.concatenate(xs, axis=axis))
+    mem.write(jnp.concatenate(xs, axis=axis))
 
 
 def _pad_kernel(_a, o_ref, *, spec: OpSpec):
-    x = _read_t(o_ref, spec.in_off[0], spec.in_shape[0], spec.dtype)
+    mem = _mem(o_ref, spec)
+    x = mem.read_t(0)
     if spec.dtype == "i8":
         (x_zp, mult), (y_zp,) = spec.qmeta
         padded = jnp.pad(x, spec.meta[0], constant_values=x_zp)
-        _write(o_ref, spec.out_off, _rescale(padded, (x_zp, mult), (y_zp,)))
+        mem.write(_rescale(padded, (x_zp, mult), (y_zp,)))
         return
-    _write(o_ref, spec.out_off, jnp.pad(x, spec.meta[0]))
+    mem.write(jnp.pad(x, spec.meta[0]))
 
 
 def _mean_kernel(_a, o_ref, *, spec: OpSpec):
-    x = _read_t(o_ref, spec.in_off[0], spec.in_shape[0], spec.dtype)
+    mem = _mem(o_ref, spec)
+    x = mem.read_t(0)
     axes = spec.meta[0]
     if spec.dtype == "i8":
         x_zp, amult, y_zp = spec.qmeta
@@ -319,7 +412,7 @@ def _mean_kernel(_a, o_ref, *, spec: OpSpec):
         y = _requant(val, amult, y_zp)
     else:
         y = jnp.mean(x, axis=axes)
-    _write(o_ref, spec.out_off, y.reshape(spec.out_shape))
+    mem.write(y.reshape(spec.out_shape))
 
 
 _KERNELS = {
@@ -338,7 +431,8 @@ _KERNELS = {
 
 def apply_op(arena: jax.Array, spec: OpSpec, weights: Tuple[jax.Array, ...],
              interpret: bool = True) -> jax.Array:
-    """Run one op in-place on the flat byte arena; returns the (aliased)
+    """Run one op in-place on the shared arena (flat 1-D byte buffer or
+    row-blocked 2-D typed buffer, per the spec); returns the (aliased)
     arena."""
     kernel = functools.partial(_KERNELS[spec.kind], spec=spec)
     fn = pl.pallas_call(
@@ -353,7 +447,7 @@ def apply_op(arena: jax.Array, spec: OpSpec, weights: Tuple[jax.Array, ...],
 def lower_program(specs: Tuple[OpSpec, ...], interpret: bool = True):
     """Jit-compiled executor for a spec sequence: ``fn(arena, *weights) ->
     arena``. The arena argument is donated, so together with the per-op
-    aliasing the whole network runs in one flat buffer. Cached on the spec
+    aliasing the whole network runs in one shared buffer. Cached on the spec
     content — structurally identical plans share the compiled program."""
     return _lower_program_cached(tuple(specs), bool(interpret))
 

@@ -1,86 +1,56 @@
-"""Diagonal-memory-optimised depthwise conv2d as a Pallas TPU kernel.
+"""Diagonal-memory-optimised depthwise conv2d over a row-blocked VMEM arena.
 
 The paper overlaps an op's input and output buffers inside the MCU's SRAM
-arena. The TPU analogue of that SRAM is **VMEM**: this kernel keeps ONE flat
-arena resident in VMEM, with the input tensor placed ``d_rows`` rows above
-the output region — ``d_rows`` is derived from the *analytic* safe overlap
+arena. The TPU analogue of that SRAM is **VMEM**: ONE ``(rows, rowlen)``
+arena stays resident, with the input tensor placed ``d_rows`` rows above the
+output region — ``d_rows`` is derived from the *analytic* safe overlap
 ``O_s`` (repro.core.overlap.analytic), rounded up to row granularity (the
-"block-granular O_s" of DESIGN.md §3). The kernel walks output rows in
-ascending order (a sequential ``fori_loop``; the TPU-grid equivalent would
-be an ``arbitrary``-semantics grid axis — parallel grids would break the
-diagonal guarantee exactly like the paper's multi-threading caveat III.F).
+"block-granular O_s"). The kernel walks output rows in ascending order in a
+sequential ``fori_loop``; a parallel grid over rows would break the diagonal
+guarantee, exactly the paper's multi-threading caveat (§III.F).
 
 Because reads for output row ``i`` come from input rows ``i*stride + d``
 onward and the write goes to row ``i``, with ``d`` chosen from ``O_s``, no
 live input value is ever clobbered — so the op needs
 ``max(rows_in + d, rows_out)`` arena rows instead of ``rows_in + rows_out``.
 
-``input_output_aliases={0: 0}`` makes the arena genuinely in-place at the
-XLA level (the O_s = |out| donation case composed with the partial-overlap
-layout inside).
+This was the prototype the generalised row-blocked arena program grew from;
+it is now a thin wrapper over :mod:`repro.kernels.arena_ops` — a single
+blocked ``OpSpec`` (row offsets ``d_rows``/``0``, ``input_output_aliases=
+{0: 0}``) driving the shared depthwise kernel, the same code path
+:func:`repro.core.planner.legalise_for_blocks` layouts execute through.
 """
 from __future__ import annotations
 
-import functools
-from typing import Tuple
+from typing import Optional
 
 import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
-
-def _kernel(arena_ref, w_ref, out_ref, *, ih: int, oh: int, ow: int, iw: int,
-            c: int, kh: int, kw: int, stride: int, pad: int, d_rows: int):
-    """arena/out_ref: (R, rowlen) f32 aliased; w_ref: (kh, kw, c)."""
-    rowlen = arena_ref.shape[1]
-    w = w_ref[...]
-
-    def body(i, _):
-        # gather the kh input rows feeding output row i (clamped + masked)
-        acc = jnp.zeros((ow, c), jnp.float32)
-        for fy in range(kh):                       # static unroll (kh small)
-            iy = i * stride - pad + fy
-            valid_row = (iy >= 0) & (iy < ih)
-            src = arena_ref[pl.dslice(jnp.clip(iy, 0, ih - 1) + d_rows, 1), :]
-            row = src.reshape(rowlen)[: iw * c].reshape(iw, c)
-            for fx in range(kw):
-                ixs = jax.lax.broadcasted_iota(jnp.int32, (ow, 1), 0)
-                ix = ixs * stride - pad + fx
-                valid = (ix >= 0) & (ix < iw) & valid_row
-                taps = jnp.take_along_axis(
-                    row, jnp.clip(ix, 0, iw - 1), axis=0)
-                acc += jnp.where(valid, taps, 0.0) * w[fy, fx][None, :]
-        out_row = jnp.zeros((1, rowlen), jnp.float32)
-        out_row = out_row.at[0, : ow * c].set(acc.reshape(ow * c))
-        out_ref[pl.dslice(i, 1), :] = out_row
-        return 0
-
-    jax.lax.fori_loop(0, oh, body, 0)
-
-
-def _valid_iy_bound(ih: int):
-    return ih
+from repro.kernels.arena_ops import OpSpec, apply_op
+from repro.kernels.runtime import resolve_interpret
 
 
 def dmo_dwconv2d_arena(arena: jax.Array, w: jax.Array, *, ih: int, iw: int,
                        c: int, stride: int, pad: int, d_rows: int,
-                       oh: int, ow: int, interpret: bool = True) -> jax.Array:
+                       oh: int, ow: int,
+                       interpret: Optional[bool] = None) -> jax.Array:
     """Run the in-place depthwise conv on a prepared arena.
 
     arena: (R, rowlen) with the input occupying rows [d_rows, d_rows+ih) and
     the first iw*c entries of each row. Output lands in rows [0, oh).
     """
     kh, kw, _ = w.shape
-    fn = pl.pallas_call(
-        functools.partial(_kernel, ih=ih, oh=oh, ow=ow, iw=iw, c=c, kh=kh,
-                          kw=kw, stride=stride, pad=pad, d_rows=d_rows),
-        out_shape=jax.ShapeDtypeStruct(arena.shape, arena.dtype),
-        in_specs=[
-            pl.BlockSpec(arena.shape, lambda: (0, 0)),   # whole arena in VMEM
-            pl.BlockSpec(w.shape, lambda: (0, 0, 0)),
-        ],
-        out_specs=pl.BlockSpec(arena.shape, lambda: (0, 0)),
-        input_output_aliases={0: 0},                     # in-place arena
-        interpret=interpret,
+    spec = OpSpec(
+        kind="depthwise_conv2d",
+        in_off=(d_rows,),
+        in_shape=((ih, iw, c),),
+        out_off=0,
+        out_shape=(oh, ow, c),
+        meta=(kh, kw, stride, stride, 1, 1, pad, pad, 1),
+        rowlen=int(arena.shape[1]),
+        in_rows=((ih, iw * c),),
+        out_rows=(oh, ow * c),
     )
-    return fn(arena, w)
+    # the generalised kernel takes (kh, kw, ic, multiplier) filters
+    return apply_op(arena, spec, (w.reshape(kh, kw, c, 1),),
+                    resolve_interpret(interpret))

@@ -12,10 +12,13 @@ CPU dry-run lowering), and `ref.attention` is the exact oracle.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.runtime import resolve_interpret
 
 NEG = -1e30
 
@@ -56,8 +59,10 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, t: int, block_k: int,
 def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array,
                            causal: bool = True, block_q: int = 128,
                            block_k: int = 128,
-                           interpret: bool = True) -> jax.Array:
-    """q: (S,H,D); k,v: (T,H,D) -> (S,H,D)."""
+                           interpret: Optional[bool] = None) -> jax.Array:
+    """q: (S,H,D); k,v: (T,H,D) -> (S,H,D). ``interpret=None`` defers to the
+    shared ``REPRO_DMO_INTERPRET`` switch (default: interpret mode)."""
+    interpret = resolve_interpret(interpret)
     s, h, d = q.shape
     t = k.shape[0]
     bq = min(block_q, s)

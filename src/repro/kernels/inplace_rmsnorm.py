@@ -8,10 +8,13 @@ place, one (block, d) VMEM tile per grid step.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.runtime import resolve_interpret
 
 
 def _kernel(x_ref, g_ref, r_ref, o_ref, *, eps: float):
@@ -24,8 +27,11 @@ def _kernel(x_ref, g_ref, r_ref, o_ref, *, eps: float):
 
 def rmsnorm_scale_residual_inplace(x: jax.Array, g: jax.Array, r: jax.Array,
                                    eps: float = 1e-6, block: int = 128,
-                                   interpret: bool = True) -> jax.Array:
-    """x, r: (N, d); g: (d,). Output aliases x."""
+                                   interpret: Optional[bool] = None
+                                   ) -> jax.Array:
+    """x, r: (N, d); g: (d,). Output aliases x. ``interpret=None`` defers to
+    the shared ``REPRO_DMO_INTERPRET`` switch."""
+    interpret = resolve_interpret(interpret)
     n, d = x.shape
     b = min(block, n)
     while n % b:

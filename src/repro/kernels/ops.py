@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import functools
 import math
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +20,7 @@ from repro.core.overlap import safe_overlap
 from repro.kernels.dmo_arena_dwconv import dmo_dwconv2d_arena
 from repro.kernels.inplace_rmsnorm import rmsnorm_scale_residual_inplace
 from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.runtime import resolve_interpret
 
 
 def dwconv_overlap_rows(ih: int, iw: int, c: int, k: int, stride: int,
@@ -41,9 +42,8 @@ def dwconv_overlap_rows(ih: int, iw: int, c: int, k: int, stride: int,
 
 
 @functools.partial(jax.jit, static_argnames=("stride", "pad", "interpret"))
-def dmo_dwconv2d(x: jax.Array, w: jax.Array, stride: int = 1, pad: int = 0,
-                 interpret: bool = True) -> jax.Array:
-    """Depthwise conv through the shared VMEM arena. x: (IH,IW,C) f32."""
+def _dmo_dwconv2d_jit(x: jax.Array, w: jax.Array, stride: int, pad: int,
+                      interpret: bool) -> jax.Array:
     ih, iw, c = x.shape
     k = w.shape[0]
     d_rows, oh, ow = dwconv_overlap_rows(ih, iw, c, k, stride, pad)
@@ -57,6 +57,18 @@ def dmo_dwconv2d(x: jax.Array, w: jax.Array, stride: int = 1, pad: int = 0,
     return arena[:oh, : ow * c].reshape(oh, ow, c)
 
 
+def dmo_dwconv2d(x: jax.Array, w: jax.Array, stride: int = 1, pad: int = 0,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """Depthwise conv through the shared VMEM arena. x: (IH,IW,C) f32.
+
+    The ``REPRO_DMO_INTERPRET`` default is resolved *before* the jit
+    boundary: the concrete bool is the static cache key, so flipping the
+    env between calls retraces instead of silently reusing the previous
+    lowering."""
+    return _dmo_dwconv2d_jit(x, w, stride=stride, pad=pad,
+                             interpret=resolve_interpret(interpret))
+
+
 def dmo_dwconv2d_footprint(ih: int, iw: int, c: int, k: int, stride: int,
                            pad: int) -> Tuple[int, int]:
     """(arena bytes, two-buffer bytes) — the kernel-level memory saving."""
@@ -66,18 +78,35 @@ def dmo_dwconv2d_footprint(ih: int, iw: int, c: int, k: int, stride: int,
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def rmsnorm_residual(x: jax.Array, g: jax.Array, r: jax.Array,
-                     interpret: bool = True) -> jax.Array:
-    """In-place fused residual + RMSNorm: out aliases x (O_s = |out|)."""
+def _rmsnorm_residual_jit(x, g, r, interpret: bool) -> jax.Array:
     return rmsnorm_scale_residual_inplace(x, g, r, interpret=interpret)
+
+
+def rmsnorm_residual(x: jax.Array, g: jax.Array, r: jax.Array,
+                     interpret: Optional[bool] = None) -> jax.Array:
+    """In-place fused residual + RMSNorm: out aliases x (O_s = |out|).
+    The interpret default resolves before the jit boundary (see
+    :func:`dmo_dwconv2d`)."""
+    return _rmsnorm_residual_jit(x, g, r,
+                                 interpret=resolve_interpret(interpret))
 
 
 @functools.partial(jax.jit,
                    static_argnames=("causal", "block_q", "block_k",
                                     "interpret"))
-def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
-                    causal: bool = True, block_q: int = 128,
-                    block_k: int = 128, interpret: bool = True) -> jax.Array:
-    """Blockwise online-softmax attention. q,k,v: (S,H,D)/(T,H,D)."""
+def _flash_attention_jit(q, k, v, causal: bool, block_q: int, block_k: int,
+                         interpret: bool) -> jax.Array:
     return flash_attention_kernel(q, k, v, causal=causal, block_q=block_q,
                                   block_k=block_k, interpret=interpret)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Blockwise online-softmax attention. q,k,v: (S,H,D)/(T,H,D). The
+    interpret default resolves before the jit boundary (see
+    :func:`dmo_dwconv2d`)."""
+    return _flash_attention_jit(q, k, v, causal=causal, block_q=block_q,
+                                block_k=block_k,
+                                interpret=resolve_interpret(interpret))

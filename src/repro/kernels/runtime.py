@@ -1,0 +1,35 @@
+"""One switch for Pallas interpret-vs-compiled execution.
+
+Every Pallas kernel in the repo used to hardcode ``interpret: bool = True``
+(the CPU-CI-safe default) with no way to flip the whole stack onto compiled
+TPU lowering. :func:`default_interpret` is that shared switch: kernels take
+``interpret: Optional[bool] = None`` and resolve ``None`` here, so one env
+var retargets the executor backend and every standalone kernel together::
+
+    REPRO_DMO_INTERPRET=0  # compiled lowering (requires a real TPU/GPU)
+    REPRO_DMO_INTERPRET=1  # force interpret mode (the default)
+
+Unset, the default stays interpret mode — correct on CPU CI, and the safe
+choice anywhere a Mosaic lowering is unavailable.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+_FALSY = ("0", "false", "no", "off", "compiled")
+
+
+def default_interpret() -> bool:
+    """The stack-wide interpret default: ``REPRO_DMO_INTERPRET`` when set
+    (``0``/``false``/``off``/``compiled`` select compiled lowering),
+    else True."""
+    v = os.environ.get("REPRO_DMO_INTERPRET")
+    if v is None or not v.strip():
+        return True
+    return v.strip().lower() not in _FALSY
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Per-call override (explicit bool) or the shared default (None)."""
+    return default_interpret() if interpret is None else bool(interpret)

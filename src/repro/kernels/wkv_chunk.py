@@ -19,10 +19,13 @@ chunked jaxpr implementation (tests/test_kernels.py).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.runtime import resolve_interpret
 
 
 def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, y_ref, sT_ref, *,
@@ -63,9 +66,12 @@ def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, y_ref, sT_ref, *,
 
 def wkv_chunk_kernel(r: jax.Array, k: jax.Array, v: jax.Array,
                      logw: jax.Array, u: jax.Array, q: int = 64,
-                     interpret: bool = True):
+                     interpret: Optional[bool] = None):
     """r,k,v,logw: (B,S,H,D) (logw = log decay, <= 0); u: (H,D).
-    Returns (y (B,S,H,D) f32, final state (B,H,D,D) f32)."""
+    Returns (y (B,S,H,D) f32, final state (B,H,D,D) f32).
+    ``interpret=None`` defers to the shared ``REPRO_DMO_INTERPRET``
+    switch."""
+    interpret = resolve_interpret(interpret)
     b, s, h, d = r.shape
     assert s % q == 0
     tr = lambda t: jnp.moveaxis(t, 2, 1).reshape(b * h, s, d)

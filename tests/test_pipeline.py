@@ -226,3 +226,58 @@ def test_compile_zoo_clean_and_no_worse_than_original(name):
     assert cp.peak_bytes <= cp.baseline_bytes
     # the pipeline baseline IS plan_original of the input graph
     assert cp.baseline_bytes == plan_original(g).peak_bytes
+
+
+# ---------------------------------------------------------------------------
+# §II.B x §II.C: view-aware serialisation of concat-removal variants
+# ---------------------------------------------------------------------------
+
+
+def _branchy_concat_graph():
+    """Two two-op branches built *interleaved* feeding a removable concat:
+    depth-first re-serialisation must differ from construction order."""
+    g = Graph("branchy")
+    x = g.tensor("x", (8, 8, 4), 4, "input")
+    conv = dict(kernel=(3, 3), stride=(1, 1), padding="same")
+    a1 = g.op("conv2d", [x], (8, 8, 4), conv, name="a1")
+    b1 = g.op("conv2d", [x], (8, 8, 4), conv, name="b1")
+    a2 = g.op("conv2d", [a1], (8, 8, 4),
+              dict(kernel=(1, 1), stride=(1, 1), padding="same"), name="a2")
+    b2 = g.op("conv2d", [b1], (8, 8, 4),
+              dict(kernel=(1, 1), stride=(1, 1), padding="same"), name="b2")
+    c = g.op("concat", [a2, b2], (8, 8, 8), dict(axis=-1), name="cat")
+    g.op("elementwise", [c], (8, 8, 8), dict(fn="relu"), name="out",
+         out_kind="output")
+    g.validate()
+    return g
+
+
+def test_removal_variant_reorders():
+    """serialise._deps is view-aware: a concat-removal graph (branch ops
+    writing into aggregated views) admits candidate orders beyond the
+    construction order, every order respects the writers-before-readers
+    contract, and the pipeline serialises the removal variant instead of
+    pinning construction order (the ROADMAP strided-view item)."""
+    from repro.core.removal import removable, remove_concats
+    from repro.core.serialise import _deps, candidate_orders
+
+    g = _branchy_concat_graph()
+    assert any(removable(g, op) for op in g.ops)
+    rg = remove_concats(g)
+    assert any(t.alias_of is not None for t in rg.tensors)  # real views
+    orders = candidate_orders(rg)
+    assert len(orders) >= 2
+    assert any([op.name for op in o] != [op.name for op in rg.ops]
+               for o in orders), "removal variant still pinned"
+    deps = _deps(rg)
+    # the aggregate reader depends on EVERY view writer, not just the last
+    out = next(op for op in rg.ops if op.name == "out")
+    assert {d.name for d in deps[out]} == {"a2", "b2"}
+    for o in orders:  # writers-before-readers in every candidate
+        done = set()
+        for op in o:
+            assert deps[op] <= done, f"{op.name} ran before a dependency"
+            done.add(op)
+    cp = pipeline.compile(g, cache=False)
+    assert any("serialise[remove_concats]" in line for line in cp.log)
+    assert cp.peak_bytes <= cp.baseline_bytes
