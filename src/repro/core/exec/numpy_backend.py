@@ -220,9 +220,11 @@ class NumpyExecutor:
         plan, graph = unwrap_plan(plan_or_compiled)
         reason = X.executability(graph)
         if reason is not None:
-            # same gate as the pallas backend: split row bands / strided
-            # views / unsupported-dtype graphs would execute with silently
-            # wrong semantics rather than fail — refuse loudly instead
+            # same gate as the pallas backend: strided views / unsupported-
+            # dtype graphs / legacy (pad-less) split bands would execute
+            # with silently wrong semantics rather than fail — refuse
+            # loudly instead. Split row bands carrying explicit band pads
+            # pass the gate and run as ordinary convs over band shapes.
             raise ValueError(
                 f"numpy backend cannot execute {graph.name!r}: {reason}")
         if weights is None:

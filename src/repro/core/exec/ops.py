@@ -33,7 +33,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.graph import Graph, Op, Tensor, pad_amount
+from repro.core.graph import Graph, Op, Tensor, band_range, op_pads
 
 #: Op kinds every arena executor implements. An op kind outside this set
 #: cannot be executed (and therefore not numerically verified or lowered).
@@ -97,9 +97,27 @@ def weights_for(op: Op, rng: np.random.Generator) -> Dict[str, np.ndarray]:
 def synth_weights(graph: Graph, seed: int = 0) -> Dict[int, Dict[str, np.ndarray]]:
     """All weights of a graph, keyed by ``id(op)``. The rng is consumed in
     op order, so every backend handed the same (graph, seed) pair executes
-    the identical network."""
+    the identical network.
+
+    Split row bands (ops carrying ``split_src``) share ONE draw per source
+    op: every band of a split conv convolves the same filter — and since a
+    band's filter has the source op's shape, the split graph's rng stream
+    stays position-for-position aligned with its unsplit reference, so the
+    two graphs execute the identical network (the property the split-vs-
+    unsplit verification tier rests on)."""
     rng = np.random.default_rng(seed)
-    return {id(op): weights_for(op, rng) for op in graph.ops}
+    out: Dict[int, Dict[str, np.ndarray]] = {}
+    groups: Dict[str, Dict[str, np.ndarray]] = {}
+    for op in graph.ops:
+        src = op.params.get("split_src")
+        if src is not None and src in groups:
+            out[id(op)] = groups[src]
+            continue
+        w = weights_for(op, rng)
+        out[id(op)] = w
+        if src is not None:
+            groups[src] = w
+    return out
 
 
 def random_inputs(graph: Graph, seed: int = 0) -> Dict[str, np.ndarray]:
@@ -205,17 +223,36 @@ def calibrate(graph: Graph, seed: int = 0,
     """Post-training calibration: run the float32 reference once, record each
     arena tensor's observed range (forced to include 0, the TFLite
     convention), and derive asymmetric int8 activation params plus symmetric
-    int8 weights (zero_point 0, -128 reserved)."""
+    int8 weights (zero_point 0, -128 reserved).
+
+    Band pieces of one split op (``split_src`` provenance) pool their ranges
+    into one group, so every band quantises at the params the *unsplit*
+    tensor would calibrate to — the bands jointly observe exactly the
+    reference tensor's values, and the shared params make a split graph's
+    int8 execution elementwise-identical to its unsplit reference (the
+    concat realigning the bands becomes a lossless identity rescale)."""
     from repro.core.exec.numpy_backend import ReferenceExec  # lazy: no cycle
     if weights is None:
         weights = synth_weights(graph, seed)
     ex = ReferenceExec(graph, random_inputs(graph, seed), seed, weights)
     ex.run()
-    tensors: Dict[str, QParams] = {}
+    group_of: Dict[Tensor, str] = {}
+    for op in graph.ops:
+        src = op.params.get("split_src")
+        if src is not None:
+            group_of[op.output.storage()] = src
+    ranges: Dict[str, Tuple[float, float]] = {}
     for t in graph.arena_tensors():
         v = ex.vals.get(t)
         lo = float(min(0.0, v.min())) if v is not None and v.size else -1.0
         hi = float(max(0.0, v.max())) if v is not None and v.size else 1.0
+        key = group_of.get(t, t.name)
+        if key in ranges:
+            lo, hi = min(lo, ranges[key][0]), max(hi, ranges[key][1])
+        ranges[key] = (lo, hi)
+    tensors: Dict[str, QParams] = {}
+    for t in graph.arena_tensors():
+        lo, hi = ranges[group_of.get(t, t.name)]
         scale = (hi - lo) / 255.0 or 1.0
         zp = int(np.clip(round(-128.0 - lo / scale), -128, 127))
         tensors[t.name] = QParams(scale, zp)
@@ -256,15 +293,11 @@ def op_quant(op: Op, spec: Optional[QuantSpec]) -> Optional[OpQuant]:
 
 
 def pads(op: Op) -> Tuple[int, int]:
-    """Leading (ph, pw) pad of a conv/pool op (TF SAME convention)."""
-    ih, iw = op.inputs[0].shape[-3], op.inputs[0].shape[-2]
-    oh, ow = op.output.shape[-3], op.output.shape[-2]
-    kh, kw = op.params["kernel"]
-    sh, sw = op.params.get("stride", (1, 1))
-    dh, dw = op.params.get("dilation", (1, 1))
-    if op.params.get("padding", "same") == "same":
-        return pad_amount(ih, oh, kh, sh, dh), pad_amount(iw, ow, kw, sw, dw)
-    return 0, 0
+    """Leading (ph, pw) pad of a conv/pool op (TF SAME convention). Split
+    row bands substitute their explicit per-band pads — see
+    :func:`repro.core.graph.op_pads` — which is all the row kernels below
+    need to run a band as an ordinary conv over its band shapes."""
+    return op_pads(op)
 
 
 # ---------------------------------------------------------------------------
@@ -452,8 +485,21 @@ def executability(graph: Graph) -> Optional[str]:
     for op in graph.ops:
         if op.kind not in SUPPORTED_KINDS:
             add(f"unsupported op kind {op.kind!r}")
-        if "row_range" in op.params:
-            add("split row bands")
+        rr = band_range(op)
+        if rr is not None:
+            # a band op executes as an ordinary conv over its band shapes
+            # *iff* it carries the explicit band-local pads; legacy split
+            # graphs (pre-band_pad) would execute with silently wrong
+            # geometry, so they stay refused
+            if op.kind not in ("conv2d", "depthwise_conv2d", "pool"):
+                add(f"split row bands on non-row-streaming op {op.name} "
+                    f"({op.kind!r})")
+            elif "band_pad" not in op.params:
+                add(f"split row bands without explicit band pads "
+                    f"(op {op.name}: legacy split graph)")
+            elif rr[1] - rr[0] != op.output.shape[-3]:
+                add(f"split row bands: op {op.name} row_range {rr} "
+                    f"disagrees with its {op.output.shape[-3]} output rows")
         if op.kind == "elementwise" and \
                 op.params.get("fn", "relu") not in ELEMENTWISE:
             add(f"unknown elementwise fn {op.params.get('fn')!r}")

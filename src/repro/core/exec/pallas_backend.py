@@ -21,6 +21,12 @@ with a real Pallas lowering). The default follows the stack-wide
 ``REPRO_DMO_INTERPRET`` switch (:mod:`repro.kernels.runtime`), so one env
 var retargets the executor and every standalone kernel together.
 
+Split row bands lower like any conv/pool: ``_canon_meta`` takes the op's
+geometry from the band-aware :func:`repro.core.exec.ops.pads`, so a band's
+OpSpec carries its band shapes plus the explicit band-local pads (negative
+leading row pad for producer bands) and the ordinary row kernels index
+exactly the band's rows — in both the flat and the row-blocked program.
+
 In either program the spec sequence jit-compiles to ``fn(arena, *weights)``
 with the arena argument donated and every kernel aliasing its arena operand
 (``input_output_aliases={0: 0}``), so the entire network executes inside one

@@ -267,3 +267,34 @@ def pad_amount(in_dim: int, out_dim: int, k: int, stride: int, dilation: int = 1
     """Leading pad, eq. (5)/(6) of the paper (TF SAME convention)."""
     total = max(0, (out_dim - 1) * stride + (k - 1) * dilation + 1 - in_dim)
     return total // 2
+
+
+def band_range(op: Op) -> Optional[Tuple[int, int]]:
+    """The nominal output-row range ``[r0, r1)`` a row-banded conv-family op
+    computes (operation splitting, §II.A), or ``None`` for unbanded ops."""
+    rr = op.params.get("row_range")
+    return (int(rr[0]), int(rr[1])) if rr is not None else None
+
+
+def op_pads(op: Op) -> Tuple[int, int]:
+    """Leading ``(ph, pw)`` pads of a conv-family op — the one geometry
+    source every O_s calculator, executor backend and legaliser shares.
+
+    Row-banded ops (those carrying ``row_range``) use their explicit
+    ``band_pad``: output-local row ``o`` reads input-local rows
+    ``o*sh - ph + fy*dh``, exactly the plain-conv loop nest, so a band is an
+    ordinary conv over its band shapes once this pad is substituted. ``ph``
+    may be *negative* for a producer band (its output rows start deep inside
+    the full input it reads). Unbanded ops derive pads from the ``padding``
+    mode as before."""
+    bp = op.params.get("band_pad")
+    if bp is not None:
+        return int(bp[0]), int(bp[1])
+    ih, iw = op.inputs[0].shape[-3], op.inputs[0].shape[-2]
+    oh, ow = op.output.shape[-3], op.output.shape[-2]
+    kh, kw = op.params["kernel"]
+    sh, sw = op.params.get("stride", (1, 1))
+    dh, dw = op.params.get("dilation", (1, 1))
+    if op.params.get("padding", "same") == "same":
+        return pad_amount(ih, oh, kh, sh, dh), pad_amount(iw, ow, kw, sw, dw)
+    return 0, 0

@@ -20,7 +20,7 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from repro.core.graph import Op, Tensor, pad_amount
+from repro.core.graph import Op, Tensor, op_pads
 
 _INF = np.iinfo(np.int64).max // 4
 
@@ -55,11 +55,11 @@ def _spatial_min_read(op: Op) -> Tuple[np.ndarray, Tuple[int, ...]]:
     sh, sw = op.params.get("stride", (1, 1))
     dh, dw = op.params.get("dilation", (1, 1))
     kh, kw = op.params["kernel"]
-    if op.params.get("padding", "same") == "same":
-        ph = pad_amount(ih, oh, kh, sh, dh)
-        pw = pad_amount(iw, ow, kw, sw, dw)
-    else:
-        ph = pw = 0
+    # band-aware: row-banded ops substitute their explicit per-band pads
+    # (possibly negative ph) and the whole band-local loop nest — reads
+    # confined to the halo rows, writes to the band's output rows — falls
+    # out of the same offset arithmetic
+    ph, pw = op_pads(op)
     iy = _min_valid_coord(np.arange(oh), sh, ph, kh, dh, ih)   # (Oh,)
     ix = _min_valid_coord(np.arange(ow), sw, pw, kw, dw, iw)   # (Ow,)
     grid = iy[:, None] * (iw * idep) + ix[None, :] * idep       # (Oh, Ow)

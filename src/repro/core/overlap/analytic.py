@@ -27,7 +27,7 @@ from __future__ import annotations
 import math
 from typing import Optional, Tuple
 
-from repro.core.graph import Op, pad_amount
+from repro.core.graph import Op, op_pads
 from repro.core.overlap.algorithmic import _hwc
 
 
@@ -38,11 +38,11 @@ def _conv_family_constants(op: Op) -> Tuple[float, float, int]:
     sh, sw = op.params.get("stride", (1, 1))
     dh, dw = op.params.get("dilation", (1, 1))
     kh, kw = op.params["kernel"]
-    if op.params.get("padding", "same") == "same":
-        ph = pad_amount(ih, oh, kh, sh, dh)
-        pw = pad_amount(iw, ow, kw, sw, dw)
-    else:
-        ph = pw = 0
+    # band-aware: the constants take the band's effective padding (op_pads
+    # substitutes the explicit per-band pads for row_range-carrying ops;
+    # a producer band's negative ph only raises minR, so the truncated
+    # linear bound stays a lower bound)
+    ph, pw = op_pads(op)
     if op.kind == "depthwise_conv2d":
         kc = op.params.get("multiplier", 1)
         a = (sh * iw) / (ow * kc)

@@ -18,7 +18,7 @@ from typing import Iterator, List, Tuple
 
 import numpy as np
 
-from repro.core.graph import Op, pad_amount
+from repro.core.graph import Op, op_pads
 from repro.core.overlap.algorithmic import _hwc
 
 Event = Tuple[int, int, bool]  # (step, element offset, is_read)
@@ -30,11 +30,8 @@ def _conv_geometry(op: Op):
     sh, sw = op.params.get("stride", (1, 1))
     dh, dw = op.params.get("dilation", (1, 1))
     kh, kw = op.params["kernel"]
-    if op.params.get("padding", "same") == "same":
-        ph = pad_amount(ih, oh, kh, sh, dh)
-        pw = pad_amount(iw, ow, kw, sw, dw)
-    else:
-        ph = pw = 0
+    # band-aware (op_pads): row-banded ops replay their band-local loop nest
+    ph, pw = op_pads(op)
     return (ih, iw, idep), (oh, ow, od), (sh, sw), (dh, dw), (kh, kw), (ph, pw)
 
 

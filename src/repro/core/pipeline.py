@@ -310,10 +310,12 @@ class RemoveConcatsPass(Pass):
 
 @register_pass
 class SplitPass(Pass):
-    """§II.A operation splitting, automated: greedily split the
-    peak-defining conv pair into row bands while the planned peak improves.
-    Applied to the input graph (splitting through aggregated views is not
-    defined). ``split="auto"`` skips graphs above ``split_ops_limit`` —
+    """§II.A operation splitting, automated and overlap-aware: greedily
+    split the peak-defining conv pair into row bands while the planned peak
+    improves, evaluating every candidate with the DMO planner so the chosen
+    splits are the ones that compose with the diagonal relaxation (banded
+    O_s). Applied to the input graph (splitting through aggregated views is
+    not defined). ``split="auto"`` skips graphs above ``split_ops_limit`` —
     auto_split re-plans every candidate, which is expensive on the big
     connected graphs where it never fires anyway."""
     name = "split"
@@ -334,7 +336,8 @@ class SplitPass(Pass):
             state.log.append(
                 f"split: skipped ({len(g.ops)} ops > {opt.split_ops_limit})")
             return
-        sg, rc, slog = auto_split(g, max_parts=opt.split_max_parts)
+        sg, rc, slog = auto_split(g, max_parts=opt.split_max_parts,
+                                  method=opt.method, profile=opt.profile)
         if not slog:
             state.log.append("split: no profitable split")
             return
@@ -373,8 +376,11 @@ class SerialisePass(Pass):
 class PlanPass(Pass):
     """DMO planning over every (variant, order) pair; keeps the lowest-peak
     plan. The baseline is itself a candidate, so the result is never worse
-    than the non-overlapping plan of the input graph. ``budget_s > 0`` adds
-    an ILS ``plan_search`` refinement on the winning variant."""
+    than the non-overlapping plan of the input graph. Split variants plan
+    with the full relaxation like every other variant — band ops carry
+    their own banded O_s (explicit band pads), which is how splitting and
+    diagonal overlap compose. ``budget_s > 0`` adds an ILS ``plan_search``
+    refinement on the winning variant."""
     name = "plan"
 
     def run(self, state: PipelineState) -> None:
@@ -388,32 +394,22 @@ class PlanPass(Pass):
             orders = [None] + [o for o in state.orders.get(i, [])
                                if list(o) != list(g.ops)]
             for order in orders:
-                if label == "split":
-                    # split bands extend producer/consumer scopes; the paper
-                    # notes the O_s relaxation is off across split ops
-                    cands.append((label, P.plan_original(g, order)))
-                else:
-                    cands.append((label, P.plan_dmo(
-                        g, order, method=opt.method, profile=opt.profile)))
+                cands.append((label, P.plan_dmo(
+                    g, order, method=opt.method, profile=opt.profile)))
         label, best = min(cands, key=lambda c: c[1].peak_bytes)
         budget = (auto_budget_s(state.original)
                   if opt.budget_s == "auto" else opt.budget_s)
         if budget > 0:
-            # refine the best *searchable* candidate (split variants plan
-            # without the O_s relaxation, so ILS does not apply to them) and
-            # keep the overall winner
-            searchable = [c for c in cands if c[0] != "split"]
-            if searchable:
-                slabel, sbase = min(searchable, key=lambda c: c[1].peak_bytes)
-                sp = P.plan_search(sbase.graph, sbase.order,
-                                   method=opt.method, budget_s=budget,
-                                   seed=opt.seed, profile=opt.profile)
-                state.log.append(
-                    f"plan: ILS search ({budget:.1f}s"
-                    f"{', autoscaled' if opt.budget_s == 'auto' else ''}) "
-                    f"-> {sp.peak_bytes}")
-                if sp.peak_bytes < best.peak_bytes:
-                    best, label = sp, slabel
+            # refine the best candidate's insertion order by ILS
+            sp = P.plan_search(best.graph, best.order,
+                               method=opt.method, budget_s=budget,
+                               seed=opt.seed, profile=opt.profile)
+            state.log.append(
+                f"plan: ILS search ({budget:.1f}s"
+                f"{', autoscaled' if opt.budget_s == 'auto' else ''}) "
+                f"-> {sp.peak_bytes}")
+            if sp.peak_bytes < best.peak_bytes:
+                best = sp
         state.plan, state.winner = best, label
         state.log.append(
             f"plan: {len(cands)} candidate(s), best={best.strategy} "
@@ -435,11 +431,14 @@ class VerifyPass(Pass):
     """Plan safety: always the formal no-clobber constraint check; plus the
     bit-exact arena-vs-private-buffers execution (:func:`verify_plan`) when
     the winning graph is executable by the NumPy arena interpreter
-    (``verify="numeric"`` forces it and raises when it is not). Compiling for
-    the ``pallas`` backend adds a third tier: the plan is executed by the
-    pallas backend (interpret mode) and cross-checked output-for-output
-    against the numpy arena execution (fp32 tolerance where XLA reassociates
-    the accumulation order)."""
+    (``verify="numeric"`` forces it and raises when it is not). A winning
+    *split* variant is additionally cross-checked against its **unsplit**
+    reference — band ops share the source op's weights and calibration, so
+    the banded execution must reproduce the original graph's outputs.
+    Compiling for the ``pallas`` backend adds a further tier: the plan is
+    executed by the pallas backend (interpret mode) and cross-checked
+    output-for-output against the numpy arena execution (fp32 tolerance
+    where XLA reassociates the accumulation order)."""
     name = "verify"
 
     def run(self, state: PipelineState) -> None:
@@ -455,8 +454,8 @@ class VerifyPass(Pass):
                 raise ValueError(
                     "verify='numeric' requested but the winning graph is not "
                     "executable by the arena interpreter (unsupported op "
-                    "kind, split bands, aggregated views, unsupported arena "
-                    "dtype, or too large)")
+                    "kind, aggregated views, unsupported arena dtype, or "
+                    "too large)")
             state.log.append("verify: constraints only (graph not "
                              "numerically executable)")
             return
@@ -480,6 +479,27 @@ class VerifyPass(Pass):
         state.verified = "numeric"
         state.log.append("verify: arena execution bit-exact"
                          + (" (int8 quantised tier)" if quant else ""))
+        if state.winner == "split" and g is not state.original \
+                and _numeric_verifiable(state.original):
+            # split graphs compute the same network as their unsplit
+            # reference (band ops share the source op's weight draw, and
+            # calibration pools band ranges), so the arena execution must
+            # reproduce the *original* graph's outputs too: f32 bit-exact
+            # (band arithmetic replays the reference loop order), int8 to
+            # <= 1 LSB (a valid-padded pair can leave intermediate rows no
+            # band recomputes, nudging the pooled calibration range)
+            w0 = X.synth_weights(state.original, opt.seed)
+            q0 = (X.calibrate(state.original, opt.seed, w0)
+                  if X.needs_quant(state.original) else None)
+            in0 = (X.quant_inputs(state.original, q0, opt.seed)
+                   if q0 is not None
+                   else X.random_inputs(state.original, opt.seed))
+            ref0 = run_reference(state.original, in0, weights=w0, quant=q0)
+            X.compare_outputs(ref0, got_np, exact=(quant is None),
+                              label="split bands vs unsplit reference")
+            state.log.append(
+                "verify: split-band execution matches the unsplit "
+                "reference" + (" (<= 1 LSB)" if quant else " (bit-exact)"))
         if opt.backend == "pallas":
             # the flat byte program is the lowering reference; the
             # row-blocked program is what compiled mode executes — verify

@@ -21,7 +21,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
-from repro.core.graph import Graph, Op, Tensor, pad_amount
+from repro.core.graph import Graph, Op, Tensor, op_pads
 from repro.core import overlap as overlap_mod
 
 OverlapFn = Callable[[Op, int], int]
@@ -376,8 +376,7 @@ def _min_row_distance(op: Op) -> int:
     kh = op.params["kernel"][0]
     sh = op.params.get("stride", (1, 1))[0]
     dh = op.params.get("dilation", (1, 1))[0]
-    ph = (pad_amount(ih, oh, kh, sh, dh)
-          if op.params.get("padding", "same") == "same" else 0)
+    ph = op_pads(op)[0]  # band-aware: banded ops enumerate band-local rows
     d = 0
     for nxt in range(1, oh):
         lo = None

@@ -1,4 +1,4 @@
-"""Operation splitting (paper §II.A) — automated.
+"""Operation splitting (paper §II.A) — automated, overlap-aware.
 
 A pair of conv-family ops with a large intermediate can be split into
 ``parts`` row bands executed sequentially: each band recomputes a small halo
@@ -8,29 +8,50 @@ recomputed) and calls automating it future work; :func:`auto_split` is that
 automation — it repeatedly splits the peak-defining pair while the planned
 peak improves, accounting the recompute penalty.
 
-Splitting extends the producer/consumer scopes, so DMO overlap is disabled
-across split ops (exactly the incompatibility the paper notes).
+Band semantics: every band op carries
+
+- ``row_range=(r0, r1)`` — the output rows of its reference op it computes
+  (band-local after re-splitting an already-banded op);
+- ``band_pad=(ph, pw)`` — the *explicit* leading pads of the band-local
+  loop nest (:func:`repro.core.graph.op_pads`): output-local row ``o``
+  reads input-local rows ``o*sh - ph + fy*dh``. A consumer band's ``ph``
+  is its share of the pair's SAME padding (``ph`` rows on the first band,
+  0 once the halo starts inside the intermediate); a producer band's
+  ``ph`` is *negative* — its output rows start ``m0*sh - ph`` rows deep in
+  the full input it reads. Carrying the pads explicitly (instead of the
+  old ``padding="valid"`` re-labelling) is what keeps the edge bands'
+  declared shapes consistent under SAME padding — the valid-conv reading
+  made the first/last bands ``ph`` rows short;
+- ``split_src=<op name>`` — weight/calibration provenance: all bands of
+  one reference op share its weight draw and pool their activation ranges
+  (:func:`repro.core.exec.ops.synth_weights` /
+  :func:`~repro.core.exec.ops.calibrate`), so a split graph computes the
+  *same network* as its unsplit reference, band for band.
+
+With those params a band is an ordinary conv/pool over its band shapes, so
+the O_s calculators, the executor backends and the row-blocked legaliser
+all handle bands through the one shared geometry helper — splitting and
+diagonal overlap compose (the paper's §II.A + §III future-work item), and
+:func:`auto_split` evaluates candidates with the overlap-aware planner.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import List, Optional, Tuple
 
-from repro.core.graph import Graph, Op, Tensor, pad_amount
-from repro.core.planner import Plan, plan_original
+from repro.core.graph import Graph, Op, Tensor, op_pads
+from repro.core.planner import plan_dmo, plan_original
 
 _SPLITTABLE = ("conv2d", "depthwise_conv2d", "pool")
 
 
 def _rows_needed(op: Op, o0: int, o1: int) -> Tuple[int, int]:
-    """Input row range feeding output rows [o0, o1) of a conv-family op."""
+    """Input row range feeding output rows [o0, o1) of a conv-family op
+    (band-local when ``op`` is itself already banded)."""
     ih = op.inputs[0].shape[0]
-    oh = op.output.shape[0]
     kh = op.params["kernel"][0]
     sh = op.params.get("stride", (1, 1))[0]
     dh = op.params.get("dilation", (1, 1))[0]
-    ph = (pad_amount(ih, oh, kh, sh, dh)
-          if op.params.get("padding", "same") == "same" else 0)
+    ph = op_pads(op)[0]
     lo = max(0, o0 * sh - ph)
     hi = min(ih, (o1 - 1) * sh - ph + (kh - 1) * dh + 1)
     return lo, hi
@@ -44,7 +65,7 @@ def split_pair(g: Graph, ia: int, parts: int
     pair is not splittable (wrong kinds, intermediate multiply consumed...).
     """
     ops = g.ops
-    if ia + 1 >= len(ops):
+    if ia < 0 or ia + 1 >= len(ops):
         return None
     a, b = ops[ia], ops[ia + 1]
     if a.kind not in _SPLITTABLE or b.kind not in _SPLITTABLE:
@@ -67,8 +88,18 @@ def split_pair(g: Graph, ia: int, parts: int
             mapping[s] = ng.tensor(s.name, s.shape, s.dtype_bytes, s.kind)
         return mapping[s]
 
-    recompute = 0
+    ph_a, pw_a = op_pads(a)
+    ph_b, pw_b = op_pads(b)
+    sh_a = a.params.get("stride", (1, 1))[0]
+    sh_b = b.params.get("stride", (1, 1))[0]
+    # re-splitting an already-banded op keeps the *reference* op's
+    # weight/calibration group, so sub-bands still share its draw
+    src_a = a.params.get("split_src", a.name)
+    src_b = b.params.get("split_src", b.name)
     band = oh_b // parts
+    halo_rows = 0      # intermediate rows produced across all bands
+    covered_hi = None  # union of the bands' halo row ranges (they ascend)
+    covered = 0
     for i, op in enumerate(ops):
         if i == ia:
             continue
@@ -79,39 +110,62 @@ def split_pair(g: Graph, ia: int, parts: int
             for p in range(parts):
                 o0, o1 = p * band, (p + 1) * band
                 m0, m1 = _rows_needed(b, o0, o1)
+                if m1 <= m0:
+                    return None  # a band reading pure padding: degenerate
                 mid_p = ng.tensor(f"{mid.name}_p{p}",
                                   (m1 - m0, w_mid, c_mid), mid.dtype_bytes)
                 ng.add(Op(a.kind, [t0], [mid_p],
-                          dict(a.params, row_range=(m0, m1)),
+                          dict(a.params, row_range=(m0, m1),
+                               band_pad=(ph_a - m0 * sh_a, pw_a),
+                               split_src=src_a),
                           f"{a.name}_p{p}"))
                 out_p = ng.tensor(f"{b.output.name}_p{p}",
                                   (o1 - o0, *b.output.shape[1:]),
                                   b.output.dtype_bytes)
                 ng.add(Op(b.kind, [mid_p], [out_p],
-                          dict(b.params, padding="valid",
-                               row_range=(o0, o1)), f"{b.name}_p{p}"))
+                          dict(b.params, row_range=(o0, o1),
+                               band_pad=(ph_b + m0 - o0 * sh_b, pw_b),
+                               split_src=src_b),
+                          f"{b.name}_p{p}"))
                 pieces.append(out_p)
-                recompute += (m1 - m0) * w_mid * c_mid
+                halo_rows += m1 - m0
+                covered += m1 - max(m0, covered_hi if covered_hi is not None
+                                    else m0)
+                covered_hi = m1
             out = map_t(b.output)
             ng.add(Op("concat", pieces, [out], dict(axis=0),
                       f"{b.name}_cat"))
-            recompute -= mid.elems
             continue
         new_ins = [map_t(t) for t in op.inputs]
         new_outs = [map_t(t) for t in op.outputs]
         ng.add(Op(op.kind, new_ins, new_outs, dict(op.params), op.name))
+    # recompute = rows produced more than once (the bands' halo total minus
+    # the union of rows they cover — NOT minus the full intermediate, which
+    # over-credited rows no band ever produces, e.g. a valid-padded pair's
+    # bottom leftover rows)
+    recompute = (halo_rows - covered) * a.output.shape[1] * a.output.shape[2]
     return ng, max(0, recompute)
 
 
-def auto_split(g: Graph, max_parts: int = 8, rounds: int = 3
-               ) -> Tuple[Graph, int, List[str]]:
+def auto_split(g: Graph, max_parts: int = 8, rounds: int = 3,
+               overlap: bool = True, method: str = "algorithmic",
+               profile: str = "paper") -> Tuple[Graph, int, List[str]]:
     """Greedy: while the planned peak improves, split the pair whose live
-    set defines the peak. Returns (graph, total recompute elems, log)."""
+    set defines the peak. Returns (graph, total recompute elems, log).
+
+    ``overlap=True`` (the default) evaluates every candidate with the
+    overlap-aware DMO planner, so the chosen splits are the ones that
+    compose best with the diagonal relaxation — the banded O_s lets each
+    halo tuck into its band output's tail. ``overlap=False`` keeps the
+    paper's conservative route (splitting and overlap priced separately).
+    """
+    plan = ((lambda gr: plan_dmo(gr, method=method, profile=profile))
+            if overlap else plan_original)
     log: List[str] = []
     total_rc = 0
     cur = g
     for _ in range(rounds):
-        base = plan_original(cur).peak_bytes
+        base = plan(cur).peak_bytes
         scopes = cur.scopes()
         # find the op step with the largest live-byte sum
         peak_step, peak_live = 0, 0
@@ -120,15 +174,19 @@ def auto_split(g: Graph, max_parts: int = 8, rounds: int = 3
             if live > peak_live:
                 peak_step, peak_live = i, live
         best = None
-        for ia in (peak_step - 1, peak_step):
-            for parts in (2, 4, max_parts):
+        # ia >= 0: when op 0 defines the peak, probing ia = -1 would
+        # Python-wrap split_pair to the bogus (last, first) pair
+        for ia in (i for i in (peak_step - 1, peak_step) if i >= 0):
+            # dict.fromkeys: dedupe the candidate list when max_parts is 2
+            # or 4 (each duplicate re-plans the whole graph)
+            for parts in dict.fromkeys((2, 4, max_parts)):
                 if parts < 2:
                     continue
                 r = split_pair(cur, ia, parts)
                 if r is None:
                     continue
                 ng, rc = r
-                peak = plan_original(ng).peak_bytes
+                peak = plan(ng).peak_bytes
                 if peak < base and (best is None or peak < best[0]):
                     best = (peak, ng, rc, ia, parts)
         if best is None:

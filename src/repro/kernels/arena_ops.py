@@ -30,6 +30,12 @@ one):
   needed — the same program lowers under ``interpret=False`` (compiled
   mode on a real TPU).
 
+Split row bands (§II.A) need no kernels of their own: a banded conv/pool's
+spec carries its band shapes and its explicit band-local pads (a producer
+band's leading row pad is *negative* — ``iy = oy*sh - ph + fy*dh`` simply
+starts deeper in the full input), so the ordinary row kernels index exactly
+the band's rows in both the flat and the row-blocked program.
+
 Safety contract (paper §III.A): kernels read *and* write through the aliased
 output ref, and conv/pool walk output rows in ascending index order inside a
 sequential ``fori_loop``. Reads for output row ``i`` therefore happen after

@@ -138,8 +138,9 @@ def test_zoo_executor_parity(name):
         pytest.skip(f"not lowerable: {reason}")
     if sum(t.elems for t in g.arena_tensors()) > 100_000:
         pytest.skip("too large for the interpret-mode parity sweep")
-    # plan the input graph only: transform passes may pick a winner (split
-    # bands, aggregated views) that is by design not executable
+    # plan the input graph only: this sweep measures unsplit parity (split
+    # bands execute too — tests/test_splitting.py covers them — but here
+    # the winner must be the graph the reference below runs)
     cp = pipeline.compile(g, cache=False, split="off",
                           passes=("baseline", "plan", "verify"))
     inputs = X.random_inputs(cp.graph)
@@ -319,8 +320,10 @@ def test_backends_refuse_non_executable_graphs(backend):
         t.dtype_bytes = 2
     with pytest.raises(ValueError, match="unsupported arena dtype"):
         X.get_backend(backend).execute(plan)
-    # split row bands have band-local semantics no backend implements —
-    # executing them as plain convs would be silently wrong, so both refuse
+    # split row bands execute as ordinary convs over band shapes ONLY when
+    # they carry explicit band pads (band_pad); a legacy row_range without
+    # them has unrecoverable geometry — executing it as a plain conv would
+    # be silently wrong, so both backends still refuse it
     sg = Graph("banded")
     x = sg.tensor("x", (8, 8, 4), 4, "input")
     sg.op("conv2d", [x], (4, 8, 4),

@@ -1,0 +1,268 @@
+"""Overlap-aware operation splitting: banded-op O_s, executable split-band
+graphs, and the split_pair halo/padding + auto_split probe regressions."""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import exec as X
+from repro.core import pipeline, splitting, zoo
+from repro.core.arena import run_reference
+from repro.core.graph import Graph, band_range, conv_out_dim, op_pads
+from repro.core.planner import legalise_for_blocks, plan_dmo, plan_original
+from repro.core.splitting import auto_split, split_pair
+
+
+def pair_graph(ih=16, iw=12, k=3, s=1, pad="same", kind="conv2d",
+               dtype_bytes=4):
+    """input -> conv(same) -> <kind>(k, s, pad) -> relu: the canonical
+    splittable pair with a non-trivial SAME halo."""
+    g = Graph(f"pair_{kind}_{pad}")
+    x = g.tensor("x", (ih, iw, 3), dtype_bytes, "input")
+    a = g.op("conv2d", [x], (ih, iw, 8),
+             dict(kernel=(3, 3), stride=(1, 1), padding="same"))
+    oh, ow = conv_out_dim(ih, k, s, pad), conv_out_dim(iw, k, s, pad)
+    params = dict(kernel=(k, k), stride=(s, s), padding=pad)
+    if kind == "pool":
+        params["mode"] = "avg"
+    oc = 8 if kind != "conv2d" else 4
+    b = g.op(kind, [a], (oh, ow, oc), params)
+    g.op("elementwise", [b], (oh, ow, oc), dict(fn="relu"), out_kind="output")
+    g.validate()
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Bugfix regressions
+# ---------------------------------------------------------------------------
+
+
+def test_edge_bands_carry_explicit_pads_under_same_padding():
+    """Regression: split_pair used to re-label band ops ``padding="valid"``
+    while declaring edge-band output shapes as if SAME padding applied —
+    the first/last bands were ph rows short. Bands now carry explicit
+    ``band_pad`` and their declared shapes are geometrically consistent:
+    pads + input rows exactly cover the band's output taps."""
+    g = pair_graph(ih=16, k=3, s=1, pad="same")
+    sg, _ = split_pair(g, 0, 4)
+    sg.validate()
+    bands = [op for op in sg.ops if band_range(op) is not None]
+    assert len(bands) == 8
+    for op in bands:
+        r0, r1 = band_range(op)
+        ph, pw = op_pads(op)
+        assert r1 - r0 == op.output.shape[0]
+        kh = op.params["kernel"][0]
+        sh = op.params.get("stride", (1, 1))[0]
+        dh = op.params.get("dilation", (1, 1))[0]
+        in_rows = op.inputs[0].shape[0]
+        # shape consistency: every declared output row has at least one
+        # in-bounds input tap (the inconsistency the old valid re-labelling
+        # produced — edge bands declared rows whose windows fell entirely
+        # outside the declared input slice)
+        for oy in range(r1 - r0):
+            taps = [oy * sh - ph + fy * dh for fy in range(kh)]
+            assert any(0 <= t < in_rows for t in taps), \
+                f"{op.name}: output row {oy} reads pure padding"
+    # the consumer's first band carries the pair's SAME top padding, the
+    # interior bands none
+    consumers = [op for op in bands if op.name.startswith("conv2d_1")]
+    assert op_pads(consumers[0])[0] == 1     # kh=3, s=1 SAME: ph = 1
+    assert all(op_pads(c)[0] == 0 for c in consumers[1:])
+    # producer bands read *deeper* into the full input: negative ph
+    producers = [op for op in bands if op.name.startswith("conv2d_0")]
+    assert any(op_pads(p)[0] < 0 for p in producers[1:])
+
+
+def test_recompute_counts_only_recomputed_rows():
+    """Regression: the accounting subtracted the FULL intermediate, crediting
+    rows no band ever produces. A valid-padded consumer whose window never
+    reaches the last intermediate row must still charge the halo overlap."""
+    # mid is 18 rows; b (k=3, s=2, valid) reads rows [0, 17) — row 17 never
+    # used. Two bands read [0, 9) and [8, 17): exactly one row recomputed.
+    g = Graph("valid_tail")
+    x = g.tensor("x", (18, 6, 2), 4, "input")
+    a = g.op("conv2d", [x], (18, 6, 4),
+             dict(kernel=(3, 3), stride=(1, 1), padding="same"))
+    b = g.op("conv2d", [a], (8, 2, 4),
+             dict(kernel=(3, 3), stride=(2, 2), padding="valid"))
+    g.op("elementwise", [b], (8, 2, 4), dict(fn="relu"), out_kind="output")
+    sg, rc = split_pair(g, 0, 2)
+    sg.validate()
+    assert rc == 1 * 6 * 4  # one 6x4 intermediate row, not zero
+
+
+def test_auto_split_guards_peak_at_step_zero():
+    """Regression: when op 0 defines the peak, auto_split probed
+    ``ia = -1`` and split_pair Python-wrapped to the bogus (last, first)
+    pair. split_pair now rejects negative indices and auto_split skips
+    them."""
+    assert split_pair(pair_graph(), -1, 2) is None
+    # op 0's live set (input + its output) dominates: peak_step == 0
+    g = Graph("front_heavy")
+    x = g.tensor("x", (32, 8, 4), 4, "input")
+    h = g.op("conv2d", [x], (32, 8, 4),
+             dict(kernel=(3, 3), stride=(1, 1), padding="same"))
+    h = g.op("pool", [h], (4, 1, 4),
+             dict(kernel=(8, 8), stride=(8, 8), padding="valid", mode="avg"))
+    g.op("elementwise", [h], (4, 1, 4), dict(fn="relu"), out_kind="output")
+    probed = []
+    real = splitting.split_pair
+    try:
+        splitting.split_pair = lambda gr, ia, parts: probed.append(ia) or \
+            real(gr, ia, parts)
+        sg, rc, log = auto_split(g)
+    finally:
+        splitting.split_pair = real
+    assert all(ia >= 0 for ia in probed)
+    sg.validate()
+
+
+def test_auto_split_dedupes_part_candidates():
+    """Regression: ``parts in (2, 4, max_parts)`` re-planned the whole graph
+    per duplicate when max_parts is 2 or 4."""
+    g = pair_graph()
+    tried = []
+    real = splitting.split_pair
+    try:
+        splitting.split_pair = lambda gr, ia, parts: \
+            tried.append((id(gr), ia, parts)) or real(gr, ia, parts)
+        auto_split(g, max_parts=4, rounds=1)
+    finally:
+        splitting.split_pair = real
+    assert len(tried) == len(set(tried)), f"duplicate candidates: {tried}"
+    assert all(parts in (2, 4) for _, _, parts in tried)
+
+
+# ---------------------------------------------------------------------------
+# Executability + execution parity vs the unsplit reference
+# ---------------------------------------------------------------------------
+
+
+def test_band_gate_accepts_padded_bands_rejects_legacy():
+    sg, _ = split_pair(pair_graph(), 0, 2)
+    assert X.executability(sg) is None
+    # legacy band op without band_pad: geometry unrecoverable, stays refused
+    lg = Graph("legacy")
+    x = lg.tensor("x", (8, 8, 4), 4, "input")
+    lg.op("conv2d", [x], (4, 8, 4),
+          dict(kernel=(3, 3), stride=(1, 1), padding="same",
+               row_range=(0, 4)), out_kind="output")
+    assert "split row bands" in X.executability(lg)
+    # row_range on a non-row-streaming kind is meaningless
+    eg = Graph("ew_band")
+    y = eg.tensor("y", (8, 8, 4), 4, "input")
+    eg.op("elementwise", [y], (8, 8, 4),
+          dict(fn="relu", row_range=(0, 8), band_pad=(0, 0)),
+          out_kind="output")
+    assert "split row bands" in X.executability(eg)
+
+
+@pytest.mark.parametrize("dtype_bytes", [4, 1], ids=["f32", "int8"])
+def test_split_band_zoo_graph_executes_with_parity(dtype_bytes):
+    """The acceptance shape: an auto_split-produced zoo graph passes the
+    executor gate and reproduces its UNSPLIT reference on both backends —
+    bit-exact on numpy (band ops share the source op's weight draw and
+    pooled calibration), pallas at the shared tolerance."""
+    g = zoo.mobilenet_v1(0.25, 64, dtype_bytes)
+    sg, rc, log = auto_split(g)
+    assert log and rc > 0, "auto_split must fire on this build"
+    assert X.executability(sg) is None
+    plan = plan_dmo(sg, method="algorithmic")
+    plan.validate()
+    assert plan.overlaps, "banded O_s must produce real overlaps"
+    # split + overlap beats the conservative (O_s = 0 everywhere) route
+    assert plan.peak_bytes < plan_original(sg).peak_bytes
+    weights = X.synth_weights(sg)
+    quant = X.calibrate(sg, 0, weights) if dtype_bytes == 1 else None
+    inputs = (X.quant_inputs(sg, quant) if quant is not None
+              else X.random_inputs(sg))
+    w0 = X.synth_weights(g)
+    q0 = X.calibrate(g, 0, w0) if dtype_bytes == 1 else None
+    in0 = X.quant_inputs(g, q0) if q0 is not None else X.random_inputs(g)
+    ref0 = run_reference(g, in0, weights=w0, quant=q0)
+    got_np = X.get_backend("numpy").execute(plan, inputs, weights,
+                                            quant=quant)
+    for k in ref0:
+        np.testing.assert_array_equal(got_np[k], ref0[k], err_msg=k)
+    got_pl = X.get_backend("pallas").execute(plan, inputs, weights,
+                                             quant=quant)
+    X.compare_outputs(ref0, got_pl, exact=False,
+                      label=f"pallas split bands vs unsplit ref ({dtype_bytes}B)")
+
+
+def test_split_band_plan_legalises_for_blocks():
+    """Banded tensors place on the row-blocked arena grid: every band gets
+    its own (rows, rowlen) image layout and the legalised plan validates at
+    row granularity."""
+    sg, _ = split_pair(pair_graph(ih=16, iw=12), 0, 4)
+    bp = legalise_for_blocks(plan_dmo(sg, method="algorithmic"))
+    banded = [op for op in sg.ops if band_range(op) is not None]
+    for op in banded:
+        lay = bp.layout_of(op.output)
+        assert lay.rows == op.output.shape[0]
+        assert lay.rowlen == op.output.shape[1] * op.output.shape[2]
+
+
+def test_pipeline_split_winner_full_verify_chain():
+    """compile() on a graph whose winner is the split variant runs every
+    verify tier: bit-exact arena execution, the split-vs-unsplit reference
+    cross-check, and both pallas programs."""
+    cp = pipeline.compile(zoo.mobilenet_v1(0.25, 64, 4), cache=False,
+                          backend="pallas")
+    assert cp.winner == "split" and cp.recompute_elems > 0
+    assert cp.verified == "numeric+pallas"
+    assert any("split-band execution matches the unsplit reference"
+               in l for l in cp.log)
+    assert cp.peak_bytes < cp.baseline_bytes
+
+
+# ---------------------------------------------------------------------------
+# Planner property: split + overlap never loses to the conservative route
+# ---------------------------------------------------------------------------
+
+
+def test_manual_mobilenet_pair_relaxation_strictly_improves():
+    """Acceptance: on the paper's manual MobileNet pair the banded-O_s
+    relaxation beats the conservative (O_s = 0 across splits) split plan
+    strictly."""
+    g = zoo.mobilenet_v1(0.25, 128, 1, external_input=True)
+    mg, rc = split_pair(g, 2, 4)
+    mg.validate()
+    conservative = plan_original(mg).peak_bytes
+    relaxed = plan_dmo(mg, method="algorithmic")
+    relaxed.validate()
+    assert conservative <= 66 * 1024          # paper: 96 -> 66 KB
+    assert relaxed.peak_bytes < conservative  # composition wins
+    assert 0 < rc <= 6144
+
+
+split_geom = st.fixed_dictionaries({
+    "ih": st.sampled_from([8, 12, 16, 17, 24]),
+    "k": st.sampled_from([1, 3, 5]),
+    "s": st.integers(1, 2),
+    "pad": st.sampled_from(["same", "valid"]),
+    "kind": st.sampled_from(["conv2d", "depthwise_conv2d", "pool"]),
+    "parts": st.sampled_from([2, 4]),
+})
+
+
+@settings(max_examples=40, deadline=None)
+@given(split_geom)
+def test_split_plus_overlap_never_worse_than_conservative(p):
+    """Property: a split-band graph planned WITH the banded O_s relaxation
+    peaks no higher than the same graph planned conservatively."""
+    if p["pad"] == "valid" and (p["ih"] < p["k"] or 12 < p["k"]):
+        return
+    oh = conv_out_dim(p["ih"], p["k"], p["s"], p["pad"])
+    if oh < p["parts"] or oh % p["parts"]:
+        return
+    g = pair_graph(ih=p["ih"], k=p["k"], s=p["s"], pad=p["pad"],
+                   kind=p["kind"])
+    r = split_pair(g, 0, p["parts"])
+    if r is None:
+        return
+    sg, _ = r
+    sg.validate()
+    relaxed = plan_dmo(sg, method="algorithmic")
+    relaxed.validate()
+    assert relaxed.peak_bytes <= plan_original(sg).peak_bytes
