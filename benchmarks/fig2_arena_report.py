@@ -64,11 +64,14 @@ def _time_exec(be, plan, inputs, weights, quant, n=3):
 
 
 #: Executor configurations timed per tier: the numpy row interpreter and
-#: BOTH pallas arena programs (flat byte vs row-blocked/compiled-mode).
+#: ALL THREE pallas arena programs (flat byte, row-blocked/compiled-mode,
+#: and the streaming live-window route).
 _EXEC_BACKENDS = {
     "numpy": lambda: X.get_backend("numpy"),
     "pallas_flat": lambda: X.get_backend("pallas", layout="flat"),
     "pallas_blocks": lambda: X.get_backend("pallas", layout="blocks"),
+    "pallas_stream": lambda: X.get_backend("pallas", mode="streaming",
+                                           interpret=True),
 }
 
 
@@ -90,6 +93,11 @@ def run(csv_rows):
             f"{bp.padded_peak_bytes / 1024:.0f} "
             f"pad=+{bp.padding_overhead_pct:.1f}% "
             f"tile={bp.tiling[0]}x{bp.tiling[1]} {tag}"))
+        ws = bp.window_schedule()
+        csv_rows.append((
+            "fig2/arena_dmo_window_rows", us,
+            f"{ws.max_window_rows} of={ws.total_rows} "
+            f"resident={ws.max_resident_bytes}B {tag}"))
 
     # executor backends: DMO plan vs non-overlapping baseline plan, per tier
     for tier, build in _EXEC_MODELS.items():
@@ -106,8 +114,12 @@ def run(csv_rows):
             dmo_us = _time_exec(be, ecp.plan, inputs, weights, quant)
             base_us = _time_exec(be, ecp.baseline, inputs, weights, quant)
             over = 100.0 * (dmo_us / base_us - 1.0)
-            arena = (blocked.padded_peak_bytes if backend == "pallas_blocks"
-                     else ecp.peak_bytes)
+            if backend == "pallas_blocks":
+                arena = blocked.padded_peak_bytes
+            elif backend == "pallas_stream":
+                arena = blocked.window_schedule().max_resident_bytes
+            else:
+                arena = ecp.peak_bytes
             csv_rows.append((
                 f"fig2/exec_{tier}_{backend}_dmo", dmo_us,
                 f"arena={arena}B baseline_us={base_us:.0f} "

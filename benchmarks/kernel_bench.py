@@ -51,16 +51,28 @@ def run(csv_rows):
                      f"arena={arena}B two-buffer={two}B "
                      f"saving={100 * (1 - arena / two):.0f}%"))
 
-    # executor backends over the same DMO plan (one flat arena, 4 op kinds)
+    # executor backends over the same DMO plan (one flat arena, 4 op kinds),
+    # plus the streaming route (ANY-space arena, live windows in VMEM)
     g = _exec_graph()
     plan = plan_dmo(g)
     inputs = X.random_inputs(g)
     weights = X.synth_weights(g)
-    for backend in ("numpy", "pallas"):
-        be = X.get_backend(backend)
+    backends = (
+        ("numpy", lambda: X.get_backend("numpy")),
+        ("pallas", lambda: X.get_backend("pallas")),
+        ("pallas_stream", lambda: X.get_backend("pallas", mode="streaming",
+                                                interpret=True)),
+    )
+    from repro.core.planner import legalise_for_blocks
+    ws = legalise_for_blocks(plan).window_schedule()
+    for backend, mk in backends:
+        be = mk()
         us = _time(lambda: be.execute(plan, inputs, weights))
-        csv_rows.append((f"kernels/arena_exec_{backend}_32x32x8", us,
-                         f"arena={plan.peak_bytes}B ops={len(plan.order)}"))
+        detail = f"arena={plan.peak_bytes}B ops={len(plan.order)}"
+        if backend == "pallas_stream":
+            detail += (f" window={ws.max_window_rows}/{ws.total_rows}rows"
+                       f" resident={ws.max_resident_bytes}B")
+        csv_rows.append((f"kernels/arena_exec_{backend}_32x32x8", us, detail))
 
     q = jnp.asarray(r.standard_normal((256, 4, 64)), jnp.float32)
     k = jnp.asarray(r.standard_normal((256, 4, 64)), jnp.float32)

@@ -1,41 +1,147 @@
 """Benchmark harness: one module per paper table/figure + framework extras.
 Prints ``name,us_per_call,derived`` CSV rows.
 
+``--json [PATH]`` additionally writes a structured artifact (default
+``BENCH_pr6.json``): per-model plan peaks, blocked/window rows, compile
+time, and exec throughput per backend×dtype — so the perf trajectory is
+machine-readable instead of living in prose. ``--sweep off`` skips the CSV
+sweep when only the artifact is wanted.
+
 Benchmark reruns start warm: the compile plan cache persists to disk
 (content-addressed by graph signature under ``$REPRO_DMO_CACHE_DIR``,
 default ``~/.cache/repro-dmo``) — set ``REPRO_DMO_DISK_CACHE=0`` to force
-cold planning."""
+cold planning. The sweep reports the cache's memory and disk hit/miss
+counters when it finishes."""
 from __future__ import annotations
 
+import argparse
+import json
 import os
 import sys
+import time
 
 
-def main() -> None:
+def _json_payload(rows):
+    """The ``--json`` artifact: plan-level stats for every Table III model
+    (peaks, blocked rows, streaming window rows, compile time) plus exec
+    throughput per backend×dtype on reduced executable builds."""
+    from repro.core import exec as X
+    from repro.core import zoo
+    from repro.core.pipeline import cache_info, compile as compile_graph
+
+    models = {}
+    for name, (build, paper_orig, paper_opt) in zoo.TABLE3_MODELS.items():
+        t0 = time.perf_counter()
+        cp = compile_graph(build(), profile="paper", method="algorithmic",
+                           budget_s="auto")
+        wall_s = time.perf_counter() - t0
+        entry = {
+            "baseline_kb": round(cp.baseline_bytes / 1024, 1),
+            "dmo_kb": round(cp.peak_bytes / 1024, 1),
+            "paper_kb": [paper_orig, paper_opt],
+            "saving_pct": round(cp.saving_pct, 1),
+            "compile_s": round(cp.compile_s, 3),
+            "wall_s": round(wall_s, 3),
+            "cache_hit": cp.cache_hit,
+        }
+        bp = cp.legalised()
+        if bp is not None:
+            ws = bp.window_schedule()
+            entry.update({
+                "blocked_rows": bp.total_rows,
+                "blocked_kb": round(bp.padded_peak_bytes / 1024, 1),
+                "window_rows": ws.max_window_rows,
+                "window_pct": round(
+                    100.0 * ws.max_window_rows / ws.total_rows, 1),
+                "window_resident_bytes": ws.max_resident_bytes,
+            })
+        models[name] = entry
+
+    exec_us = {}
+    builds = {"f32": lambda: zoo.mobilenet_v1(0.25, 32, 4),
+              "i8": lambda: zoo.mobilenet_v1(0.25, 32, 1)}
+    backends = {
+        "numpy": lambda: X.get_backend("numpy"),
+        "pallas_flat": lambda: X.get_backend("pallas", layout="flat"),
+        "pallas_blocks": lambda: X.get_backend("pallas", layout="blocks"),
+        "pallas_stream": lambda: X.get_backend("pallas", mode="streaming",
+                                               interpret=True),
+    }
+    for tier, build in builds.items():
+        cp = compile_graph(build(), split="off")
+        g = cp.graph
+        weights = X.synth_weights(g)
+        quant = X.calibrate(g, 0, weights) if X.needs_quant(g) else None
+        inputs = (X.quant_inputs(g, quant) if quant is not None
+                  else X.random_inputs(g))
+        for bname, mk in backends.items():
+            be = mk()
+            be.execute(cp.plan, inputs, weights, quant=quant)  # warm jit
+            t0 = time.perf_counter()
+            n = 3
+            for _ in range(n):
+                be.execute(cp.plan, inputs, weights, quant=quant)
+            exec_us[f"{tier}/{bname}"] = round(
+                (time.perf_counter() - t0) / n * 1e6, 1)
+
+    return {
+        "schema": "repro-dmo-bench-v1",
+        "models": models,
+        "exec_us_per_call": exec_us,
+        "sweep_rows": [[n, round(us, 1), d] for n, us, d in rows],
+        "plan_cache": cache_info(),
+    }
+
+
+def main(argv=None) -> None:
     os.environ.setdefault("REPRO_DMO_DISK_CACHE", "1")
-    from benchmarks import (arch_activation_plans, fig2_arena_report,
-                            kernel_bench, op_removal, op_splitting,
-                            roofline_report, table2_os_precision,
-                            table3_memory_savings)
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.run", description="DMO benchmark sweep")
+    ap.add_argument("--json", nargs="?", const="BENCH_pr6.json",
+                    default=None, metavar="PATH",
+                    help="also write the structured benchmark artifact "
+                         "(default path: BENCH_pr6.json)")
+    ap.add_argument("--sweep", choices=("on", "off"), default="on",
+                    help="run the full CSV sweep ('off' keeps --json cheap "
+                         "on a warm plan cache)")
+    args = ap.parse_args(argv)
+
     rows = []
-    mods = [
-        ("table2 (O_s precision)", table2_os_precision),
-        ("table3 (memory savings)", table3_memory_savings),
-        ("fig2 (arena report)", fig2_arena_report),
-        ("op splitting (§II.A)", op_splitting),
-        ("op removal (§II.C)", op_removal),
-        ("activation plans", arch_activation_plans),
-        ("kernels", kernel_bench),
-        ("roofline", roofline_report),
-    ]
-    for name, mod in mods:
-        print(f"# --- {name}", file=sys.stderr, flush=True)
-        mod.run(rows)
-    print("name,us_per_call,derived")
-    for n, us, d in rows:
-        print(f"{n},{us:.1f},{d}")
+    if args.sweep == "on":
+        from benchmarks import (arch_activation_plans, fig2_arena_report,
+                                kernel_bench, op_removal, op_splitting,
+                                roofline_report, table2_os_precision,
+                                table3_memory_savings)
+        mods = [
+            ("table2 (O_s precision)", table2_os_precision),
+            ("table3 (memory savings)", table3_memory_savings),
+            ("fig2 (arena report)", fig2_arena_report),
+            ("op splitting (§II.A)", op_splitting),
+            ("op removal (§II.C)", op_removal),
+            ("activation plans", arch_activation_plans),
+            ("kernels", kernel_bench),
+            ("roofline", roofline_report),
+        ]
+        for name, mod in mods:
+            print(f"# --- {name}", file=sys.stderr, flush=True)
+            mod.run(rows)
+        print("name,us_per_call,derived")
+        for n, us, d in rows:
+            print(f"{n},{us:.1f},{d}")
+
+    if args.json:
+        payload = _json_payload(rows)
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {args.json}", file=sys.stderr)
+
     from repro.core.pipeline import cache_info
-    print(f"# plan cache: {cache_info()}", file=sys.stderr)
+    info = cache_info()
+    print(f"# plan cache: mem {info['hits']} hit / {info['misses']} miss, "
+          f"disk {info['disk_hits']} hit / {info['disk_misses']} miss "
+          f"({info['size']} entries in memory, dir {info['disk_dir']})",
+          file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,110 @@
+"""Export one arena execution as a chrome://tracing JSON file.
+
+Runs the compiled plan op-by-op on the numpy arena interpreter (the
+reference execution-order model) and writes:
+
+- one ``"X"`` duration span per op (name, kind, per-op wall time, the op's
+  arena byte range — and, when the plan legalises, its streaming live
+  window ``[lo, hi)`` in arena rows);
+- ``"C"`` counter tracks: ``arena_live_bytes`` (bytes of the byte arena
+  occupied by tensors live at each step — the planner's occupancy curve)
+  and ``window_rows`` (each op's streaming VMEM-resident rows from
+  :meth:`~repro.core.planner.BlockPlan.window_schedule`).
+
+Open the file at ``chrome://tracing`` (or https://ui.perfetto.dev).
+
+Usage::
+
+    PYTHONPATH=src python scripts/export_trace.py            # reduced model
+    PYTHONPATH=src python scripts/export_trace.py \
+        --model mobilenet_v1_0.25_128_8bit --out trace.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+def _build(name: str):
+    from repro.core import zoo
+    if name in zoo.TABLE3_MODELS:
+        return zoo.TABLE3_MODELS[name][0]()
+    if name == "mobilenet_v1_0.25_32_8bit":
+        return zoo.mobilenet_v1(0.25, 32, 1)
+    if name == "mobilenet_v1_0.25_32_f32":
+        return zoo.mobilenet_v1(0.25, 32, 4)
+    raise SystemExit(f"unknown model {name!r}: pick a TABLE3_MODELS name, "
+                     "'mobilenet_v1_0.25_32_8bit' or "
+                     "'mobilenet_v1_0.25_32_f32'")
+
+
+def trace_events(cp) -> list:
+    """Chrome-tracing events for one op-by-op arena execution of ``cp``
+    (a :class:`~repro.core.pipeline.CompiledPlan`)."""
+    from repro.core import exec as X
+    from repro.core.exec.numpy_backend import ArenaExec
+
+    plan, graph = cp.plan, cp.graph
+    weights = X.synth_weights(graph)
+    quant = X.calibrate(graph, 0, weights) if X.needs_quant(graph) else None
+    inputs = (X.quant_inputs(graph, quant) if quant is not None
+              else X.random_inputs(graph))
+    ex = ArenaExec(graph, plan, inputs, weights=weights, quant=quant)
+
+    scopes = graph.scopes(plan.order)
+    windows = {}
+    bp = cp.legalised()
+    if bp is not None:
+        windows = {w.op_name: w for w in bp.window_schedule().windows}
+
+    events, t0 = [], time.perf_counter()
+    for step, op in enumerate(plan.order):
+        ts = (time.perf_counter() - t0) * 1e6
+        ex.execute(op)
+        dur = (time.perf_counter() - t0) * 1e6 - ts
+        args = {"kind": op.kind, "step": step}
+        s = op.output.storage()
+        if s in plan.offsets:
+            args["arena_bytes"] = [plan.offsets[s],
+                                   plan.offsets[s] + s.nbytes]
+        w = windows.get(op.name)
+        if w is not None:
+            args["window_rows"] = [w.lo, w.hi]
+            args["resident_rows"] = w.resident_rows
+        events.append({"name": op.name, "cat": op.kind, "ph": "X",
+                       "ts": round(ts, 3), "dur": round(max(dur, 0.001), 3),
+                       "pid": 1, "tid": 1, "args": args})
+        live = sum(t.nbytes for t, (s0, e0) in scopes.items()
+                   if s0 <= step <= e0)
+        events.append({"name": "arena_live_bytes", "ph": "C",
+                       "ts": round(ts, 3), "pid": 1,
+                       "args": {"bytes": int(live)}})
+        if w is not None:
+            events.append({"name": "window_rows", "ph": "C",
+                           "ts": round(ts, 3), "pid": 1,
+                           "args": {"rows": int(w.resident_rows)}})
+    return events
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="export an arena execution as chrome://tracing JSON")
+    ap.add_argument("--model", default="mobilenet_v1_0.25_32_8bit")
+    ap.add_argument("--out", default="trace.json")
+    args = ap.parse_args(argv)
+
+    from repro.core.pipeline import compile as compile_graph
+    cp = compile_graph(_build(args.model))
+    events = trace_events(cp)
+    with open(args.out, "w") as f:
+        json.dump({"traceEvents": events, "displayTimeUnit": "ms",
+                   "otherData": {"model": args.model,
+                                 "peak_bytes": cp.peak_bytes}}, f)
+        f.write("\n")
+    print(f"wrote {args.out}: {len(events)} events over "
+          f"{len(cp.plan.order)} ops")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,12 +11,16 @@ into a pluggable runtime layer:
   (bit-exact ground truth, used by ``verify_plan``);
 - ``pallas`` — :mod:`.pallas_backend`: lowers the plan to a sequence of
   Pallas kernels over one donated arena buffer (``input_output_aliases``
-  threads the arena through the op sequence). Two programs: the
+  threads the arena through the op sequence). Three programs: the
   **row-blocked** 2-D arena (plans legalised onto per-dtype VMEM tiles by
   :func:`repro.core.planner.legalise_for_blocks` — the compiled-mode path,
-  and the default whenever the plan legalises) and the **flat** byte arena
+  and the default whenever the plan legalises), the **streaming** grid
+  program (``mode="streaming"``: arena in HBM, each op's live window
+  DMA'd into VMEM scratch per the planner's
+  :meth:`~repro.core.planner.BlockPlan.window_schedule`, VMEM-gated on
+  the window instead of the whole arena), and the **flat** byte arena
   (interpret-only fallback for mixed-dtype plans, and the cross-check
-  reference). ``mode="interpret"`` runs either on CPU CI;
+  reference). ``mode="interpret"`` runs any of them on CPU CI;
   ``mode="compiled"`` (or ``REPRO_DMO_INTERPRET=0``) lowers the blocked
   program with ``interpret=False`` — the TPU analogue of the paper's SRAM
   arena being VMEM. Select per instance via

@@ -1,6 +1,6 @@
 """Pallas arena executor: lower a plan to kernels over ONE donated buffer.
 
-Two arena programs share the backend (see :mod:`repro.kernels.arena_ops`):
+Three arena programs share the backend (see :mod:`repro.kernels.arena_ops`):
 
 - **row-blocked** (the default whenever the plan legalises): the plan is
   passed through :func:`repro.core.planner.legalise_for_blocks`, giving
@@ -9,17 +9,28 @@ Two arena programs share the backend (see :mod:`repro.kernels.arena_ops`):
   Kernels address whole arena rows via ``pl.dslice`` — no byte bitcasts —
   so the same program lowers under ``interpret=False``: this is the
   compiled-mode path, the TPU-VMEM realisation of the paper's SRAM arena.
+  The whole arena is VMEM-resident, so VMEM caps ``total_rows``.
+- **streaming** (``mode="streaming"``): the same row-blocked layouts, but
+  the arena lives in ``pltpu.ANY`` (HBM) and each op DMAs only its *live
+  window* (:meth:`repro.core.planner.BlockPlan.window_schedule`) into VMEM
+  scratch with double-buffered ``make_async_copy``. The VMEM gate becomes
+  the schedule's ``max_resident_bytes`` instead of the whole arena — the
+  refactor that turns the ~16 MB arena ceiling into a window ceiling.
 - **flat** (fallback, and the cross-check reference): the byte-granular
   program over a 1-D uint8 arena of exactly ``plan.peak_bytes``; kernels
   bitcast their windows to the tier each layout declares, so mixed-dtype
   plans execute in one buffer. Byte-granular dynamic slices fight the VMEM
   tilings, so this program is interpret-mode only.
 
-Execution mode is ``mode="interpret"`` (CPU CI) or ``mode="compiled"``
+Execution mode is ``mode="interpret"`` (CPU CI), ``mode="compiled"``
 (``interpret=False`` lowering; requires row-blocked layouts and a backend
-with a real Pallas lowering). The default follows the stack-wide
-``REPRO_DMO_INTERPRET`` switch (:mod:`repro.kernels.runtime`), so one env
-var retargets the executor and every standalone kernel together.
+with a real Pallas lowering), or ``mode="streaming"`` (whose interpret-ness
+follows the stack-wide switch unless ``interpret=`` is passed explicitly).
+The default follows the stack-wide ``REPRO_DMO_INTERPRET`` switch
+(:mod:`repro.kernels.runtime`), so one env var retargets the executor and
+every standalone kernel together. The VMEM budget the compiled and
+streaming gates check against is ``vmem_budget`` bytes (default: the
+``REPRO_DMO_VMEM_BUDGET`` env var, else 16 MiB).
 
 Split row bands lower like any conv/pool: ``_canon_meta`` takes the op's
 geometry from the band-aware :func:`repro.core.exec.ops.pads`, so a band's
@@ -104,24 +115,36 @@ def _canon_qmeta(op: Op, q: Optional[X.OpQuant]) -> Tuple:
     return ()
 
 
+#: VMEM budget assumed when neither the constructor nor the
+#: REPRO_DMO_VMEM_BUDGET env var names one (bytes; ~a TPU core's VMEM).
+DEFAULT_VMEM_BUDGET = 16 * 1024 * 1024
+
+
 class PallasExecutor:
     """The ``pallas`` :class:`~repro.core.exec.ArenaExecutor` backend.
 
-    ``mode``: ``"interpret"`` (CPU-runnable, the default) or ``"compiled"``
-    (``interpret=False`` lowering). ``None`` defers to the shared
-    ``REPRO_DMO_INTERPRET`` switch. ``layout``: ``"auto"`` runs the
-    row-blocked program whenever the plan legalises (uniform dtype, no
-    aggregated views) and falls back to the flat byte program otherwise;
-    ``"blocks"`` / ``"flat"`` force one program. Compiled mode requires the
-    row-blocked program — a flat byte arena cannot meet the VMEM tilings."""
+    ``mode``: ``"interpret"`` (CPU-runnable, the default), ``"compiled"``
+    (``interpret=False`` lowering), or ``"streaming"`` (ANY-space arena,
+    live windows DMA'd into VMEM scratch; runs interpreted or compiled —
+    pass ``interpret=`` to pin it, else the shared switch decides). ``None``
+    defers to the shared ``REPRO_DMO_INTERPRET`` switch. ``layout``:
+    ``"auto"`` runs the row-blocked program whenever the plan legalises
+    (uniform dtype, no aggregated views) and falls back to the flat byte
+    program otherwise; ``"blocks"`` / ``"flat"`` force one program.
+    Compiled and streaming modes require the row-blocked program — a flat
+    byte arena cannot meet the VMEM tilings. ``vmem_budget`` (bytes) gates
+    execution: compiled mode refuses arenas larger than it, streaming mode
+    refuses only schedules whose ``max_resident_bytes`` exceeds it."""
 
     name = "pallas"
 
     def __init__(self, interpret: Optional[bool] = None,
-                 mode: Optional[str] = None, layout: str = "auto"):
-        if mode is not None and mode not in ("interpret", "compiled"):
-            raise ValueError(f"unknown pallas mode {mode!r} "
-                             "(expected 'interpret' or 'compiled')")
+                 mode: Optional[str] = None, layout: str = "auto",
+                 vmem_budget: Optional[int] = None):
+        if mode is not None and mode not in ("interpret", "compiled",
+                                             "streaming"):
+            raise ValueError(f"unknown pallas mode {mode!r} (expected "
+                             "'interpret', 'compiled' or 'streaming')")
         if layout not in ("auto", "blocks", "flat"):
             raise ValueError(f"unknown pallas layout {layout!r} "
                              "(expected 'auto', 'blocks' or 'flat')")
@@ -131,7 +154,9 @@ class PallasExecutor:
         #: default-constructed (registry-cached) instance retargets when
         #: the switch flips mid-process
         self._mode = mode
+        self._interpret = interpret     # explicit pin (streaming mode only)
         self.layout = layout
+        self.vmem_budget = vmem_budget
         self._check_mode_layout()
 
     @property
@@ -143,14 +168,27 @@ class PallasExecutor:
 
     @property
     def interpret(self) -> bool:
-        return self.mode == "interpret"
+        mode = self.mode
+        if mode == "streaming":
+            if self._interpret is not None:
+                return self._interpret
+            from repro.kernels.runtime import default_interpret
+            return default_interpret()
+        return mode == "interpret"
 
     def _check_mode_layout(self) -> None:
-        if self.mode == "compiled" and self.layout == "flat":
+        if self.mode in ("compiled", "streaming") and self.layout == "flat":
             raise ValueError(
-                "compiled mode requires row-blocked layouts: the flat byte "
-                "arena is interpret-only (byte-granular dynamic slices "
+                f"{self.mode} mode requires row-blocked layouts: the flat "
+                "byte arena is interpret-only (byte-granular dynamic slices "
                 "cannot meet the (8, 128)/(32, 128) VMEM tilings)")
+
+    def _resolve_budget(self) -> int:
+        if self.vmem_budget is not None:
+            return int(self.vmem_budget)
+        import os
+        env = os.environ.get("REPRO_DMO_VMEM_BUDGET", "").strip()
+        return int(env) if env else DEFAULT_VMEM_BUDGET
 
     # -- lowering -----------------------------------------------------------
 
@@ -209,6 +247,23 @@ class PallasExecutor:
                 out_rows=(out.rows, out.rowlen)))
         return tuple(specs)
 
+    def lower_stream(self, bplan: BlockPlan,
+                     quant: Optional[X.QuantSpec] = None) -> Tuple:
+        """BlockPlan -> streaming OpSpec sequence: the row-blocked specs
+        with each op's live-window statics grafted on from the planner's
+        :class:`~repro.core.planner.WindowSchedule` (1:1 — both skip
+        reshape views), so ``win_rows > 0`` selects the streaming grid
+        program in :mod:`repro.kernels.arena_ops`."""
+        import dataclasses
+        specs = self.lower_blocks(bplan, quant)
+        ws = bplan.window_schedule()
+        assert len(specs) == len(ws.windows), \
+            f"spec/window mismatch: {len(specs)} vs {len(ws.windows)}"
+        return tuple(
+            dataclasses.replace(s, win_lo=w.lo, win_rows=w.win_rows,
+                                win_starts=w.starts)
+            for s, w in zip(specs, ws.windows))
+
     # -- execution ----------------------------------------------------------
 
     def _legalised(self, plan: Plan) -> Optional[BlockPlan]:
@@ -218,7 +273,8 @@ class PallasExecutor:
         so blocked-vs-flat cross-checks stay meaningful. A plan that cannot
         be row-blocked (mixed dtype, aggregated views) raises under
         ``layout="blocks"`` and falls back to flat under ``"auto"`` —
-        except in compiled mode, where flat is not lowerable."""
+        except in compiled and streaming modes, where flat is not
+        lowerable."""
         self._check_mode_layout()   # env-followed mode may have flipped
         if self.layout == "flat":
             return None
@@ -227,7 +283,8 @@ class PallasExecutor:
         try:
             return legalise_for_blocks(plan)
         except ValueError:
-            if self.layout == "blocks" or self.mode == "compiled":
+            if self.layout == "blocks" or self.mode in ("compiled",
+                                                        "streaming"):
                 raise
             return None
 
@@ -261,7 +318,28 @@ class PallasExecutor:
 
         bplan = self._legalised(plan)
         if bplan is not None:
-            specs = self.lower_blocks(bplan, quant)
+            if self.mode == "streaming":
+                budget = self._resolve_budget()
+                ws = bplan.window_schedule()
+                if ws.max_resident_bytes > budget:
+                    raise ValueError(
+                        f"streaming window of {graph.name!r} does not fit "
+                        f"VMEM: peak resident {ws.max_resident_bytes} bytes "
+                        f"({ws.max_window_rows} live rows) exceeds the "
+                        f"{budget}-byte budget")
+                specs = self.lower_stream(bplan, quant)
+            else:
+                if self.mode == "compiled":
+                    budget = self._resolve_budget()
+                    arena_bytes = bplan.total_rows * bplan.row_bytes
+                    if arena_bytes > budget:
+                        raise ValueError(
+                            f"arena of {graph.name!r} does not fit VMEM: "
+                            f"{arena_bytes} bytes ({bplan.total_rows} rows) "
+                            f"exceeds the {budget}-byte budget — "
+                            "mode='streaming' keeps only the live window "
+                            "resident")
+                specs = self.lower_blocks(bplan, quant)
             arena = self._seed_block_arena(bplan, graph, inputs)
         else:
             specs = self.lower(plan, quant)

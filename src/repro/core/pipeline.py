@@ -520,6 +520,23 @@ class VerifyPass(Pass):
                 X.compare_outputs(got_np, got_blk, exact=False,
                                   label="pallas row-blocked vs numpy")
                 tiers = "flat + row-blocked"
+                # streaming runs the same kernel bodies over DMA'd live
+                # windows, so it must agree with the VMEM-resident blocked
+                # program bit-for-bit — and with numpy to fp32 tolerance
+                try:
+                    got_st = X.get_backend(
+                        "pallas", mode="streaming", interpret=True).execute(
+                        state.plan, inputs, weights, quant=quant)
+                except ValueError as e:
+                    # live window over the VMEM budget — a real refusal,
+                    # not a verification failure
+                    state.log.append(f"verify: streaming tier skipped ({e})")
+                else:
+                    X.compare_outputs(got_blk, got_st, exact=True,
+                                      label="pallas streaming vs row-blocked")
+                    X.compare_outputs(got_np, got_st, exact=False,
+                                      label="pallas streaming vs numpy")
+                    tiers += " + streaming"
             state.verified = "numeric+pallas"
             state.log.append("verify: pallas arena execution matches "
                              f"numpy backend ({tiers})")

@@ -84,6 +84,7 @@ class Plan:
         # inflate pickled plans (disk plan cache)
         d = dict(self.__dict__)
         d.pop("_block_cache", None)
+        d.pop("_window_cache", None)
         return d
 
     @property
@@ -350,14 +351,26 @@ class BlockPlan(Plan):
                         f"row overlap beyond O_s: {inp.name}@r{xi} "
                         f"vs {outp.name}@r{xo} (need distance {dist})")
 
+    def window_schedule(self) -> "WindowSchedule":
+        """The streaming live-window schedule for this legalisation
+        (memoised — reports, the streaming backend and the benchmarks all
+        ask for the same schedule)."""
+        cached = self.__dict__.get("_window_cache")
+        if cached is None:
+            cached = window_schedule(self)
+            self.__dict__["_window_cache"] = cached
+        return cached
+
     def report(self) -> str:
         base = (self.source or self).peak_bytes
+        ws = self.window_schedule()
         lines = [super().report(),
                  f"  row-blocked: {self.total_rows} rows x "
                  f"{self.arena_rowlen} elems ({self.padded_peak_bytes} bytes,"
                  f" tile {self.tiling[0]}x{self.tiling[1]}) = "
                  f"+{self.padding_overhead_pct:.1f}% padding over "
-                 f"byte-granular peak {base}"]
+                 f"byte-granular peak {base}",
+                 "  " + ws.summary()]
         return "\n".join(lines)
 
 
@@ -519,6 +532,198 @@ def legalise_for_blocks(plan: Plan,
     if tiling is None:
         plan.__dict__["_block_cache"] = bp
     return bp
+
+
+# ---------------------------------------------------------------------------
+# Streaming live-window schedules
+# ---------------------------------------------------------------------------
+
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def staged_slots(in_rows: Sequence[int], out_rows: int, sub: int,
+                 ) -> Tuple[Tuple[int, ...], int, int]:
+    """Scratch packing for a staged (whole-tensor) streaming op: operand
+    blocks packed back-to-back, output last, total rounded up to the
+    sublane tile. Returns ``(input slot row offsets, output slot row
+    offset, total scratch rows)``. Blocks pack *tight* — the arena-side DMA
+    offsets stay tile-aligned (placement guarantees it) and that is the
+    side alignment matters on — so a staged op costs the sum of its block
+    heights, not the span between scattered placements. The kernel layer
+    and the planner both derive the packing from this one function, so the
+    scratch a kernel allocates always matches the resident rows the
+    schedule reports."""
+    offs: List[int] = []
+    cur = 0
+    for r in in_rows:
+        offs.append(cur)
+        cur += int(r)
+    out_slot = cur
+    cur += int(out_rows)
+    return tuple(offs), out_slot, _round_up(cur, sub)
+
+
+def _roll_geometry(op: Op) -> Tuple[int, int, int, int]:
+    """(kh, sh, dh, ph) of a row-streaming op, band-aware."""
+    kh = op.params["kernel"][0]
+    sh = op.params.get("stride", (1, 1))[0]
+    dh = (op.params.get("dilation", (1, 1))[0]
+          if op.kind != "pool" else 1)
+    ph = op_pads(op)[0]
+    return kh, sh, dh, ph
+
+
+def rolling_starts(op: Op, xi: int, xo: int, ih: int, oh: int, sub: int,
+                   total_rows: int,
+                   ) -> Tuple[Tuple[int, ...], int]:
+    """Per-tile input-window fetch starts for a row-streaming op.
+
+    The op walks output rows in tiles of ``sub`` rows (the dtype's sublane
+    tile). The tile covering output rows ``[a, b)`` needs the input rows
+    its taps may touch — ``iy = oy*sh - ph + fy*dh`` clamped exactly like
+    the kernels clamp it — a contiguous input band whose height is bounded
+    by ``tile*stride + kernel halo``, independent of where the placement
+    put the operands. Output rows live in their own scratch tile, so the
+    resident window is ``win_in + sub`` rows however far apart input and
+    output were placed.
+
+    Fetches are fixed-size (``win_in`` rows, sublane-rounded) starting at
+    ``starts[t]`` (arena rows, aligned), clamped so the fetch never runs
+    past the arena; over-fetched rows are never read unmasked (reads
+    outside the valid input rows are the kernels' clamped+masked taps) and
+    never written back (write-back covers exactly the computed rows).
+
+    The O_s row invariant makes split input/output staging exact: an op's
+    write to output row ``oy`` only ever clobbers arena input rows no
+    later tap re-reads (that is what the diagonal distance guarantees), so
+    no read inside the op can observe its own writes and staging the input
+    band separately from the output tile preserves blocked-mode semantics
+    row for row.
+
+    Returns ``(starts per tile, win_in)``."""
+    kh, sh, dh, ph = _roll_geometry(op)
+    tr = sub
+    need, tiles = 0, []
+    for a in range(0, oh, tr):
+        b = min(a + tr, oh)
+        iy_lo = min(max(a * sh - ph, 0), ih - 1)
+        iy_hi = min(max((b - 1) * sh - ph + (kh - 1) * dh, 0), ih - 1)
+        s_t = (iy_lo // sub) * sub
+        tiles.append(s_t)
+        need = max(need, iy_hi - s_t + 1)
+    win_in = min(_round_up(need, sub), _round_up(ih, sub))
+    starts = tuple(max(0, min(xi + s_t, total_rows - win_in))
+                   for s_t in tiles)
+    return starts, win_in
+
+
+@dataclasses.dataclass(frozen=True)
+class OpWindow:
+    """One op's live window in the streaming schedule: the contiguous
+    arena-row extent ``[lo, hi)`` it may touch, the live-window rows
+    (``win_rows``) and the scratch rows its streaming program allocates
+    (``resident_rows`` — the rolling input window is double-buffered, so
+    resident exceeds the live window by one input-window slot).
+    ``starts`` is the per-output-tile fetch start table for rolling
+    (conv / depthwise / pool) ops; empty for staged whole-tensor ops."""
+
+    op_name: str
+    kind: str
+    lo: int
+    hi: int
+    win_rows: int
+    resident_rows: int
+    starts: Tuple[int, ...] = ()
+
+    @property
+    def rolling(self) -> bool:
+        return bool(self.starts)
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowSchedule:
+    """The live-window row schedule of a :class:`BlockPlan`: per executed op
+    (reshapes excluded, same order the backends lower), the arena rows it
+    may touch and the rows its streaming program keeps resident in VMEM,
+    plus the whole-program bound ``max_window_rows`` — the quantity that
+    replaces ``total_rows`` as the streaming executor's VMEM ceiling."""
+
+    windows: Tuple[OpWindow, ...]
+    total_rows: int
+    arena_rowlen: int
+    dtype_bytes: int
+
+    @property
+    def row_bytes(self) -> int:
+        return self.arena_rowlen * self.dtype_bytes
+
+    @property
+    def max_window_rows(self) -> int:
+        return max((w.win_rows for w in self.windows), default=0)
+
+    @property
+    def max_resident_bytes(self) -> int:
+        """Peak scratch footprint of any one streaming op (all slots,
+        double-buffering included)."""
+        return max((w.resident_rows * self.row_bytes
+                    for w in self.windows), default=0)
+
+    def summary(self) -> str:
+        pct = (100.0 * self.max_window_rows / self.total_rows
+               if self.total_rows else 0.0)
+        return (f"streaming windows: max {self.max_window_rows} rows live "
+                f"of {self.total_rows} arena rows ({pct:.1f}%), "
+                f"peak scratch {self.max_resident_bytes} bytes")
+
+    def report(self) -> str:
+        lines = [f"# window schedule: {self.summary()}"]
+        for w in self.windows:
+            tag = "roll" if w.rolling else "stage"
+            lines.append(
+                f"  {w.op_name:32s} {tag:5s} [{w.lo:>5d},{w.hi:>5d}) "
+                f"live={w.win_rows:>5d} resident={w.resident_rows:>5d} rows")
+        return "\n".join(lines)
+
+
+def window_schedule(bplan: BlockPlan) -> "WindowSchedule":
+    """Derive the live-window schedule from a legalised plan.
+
+    Row-streaming ops (conv / depthwise / pool) get a rolling input window
+    plus a one-tile output slot via :func:`rolling_starts`; every other
+    kind stages whole operand blocks via :func:`staged_slots` (each block
+    is contiguous, so a scattered multi-operand extent — e.g. a
+    band-reassembling concat — costs only the sum of its block heights,
+    not the span between them)."""
+    sub = bplan.tiling[0]
+    windows: List[OpWindow] = []
+    for op in bplan.order:
+        if op.kind == "reshape":
+            continue
+        ins = [t for t in op.inputs if t.storage().kind != "weight"]
+        lays = [bplan.layout_of(t) for t in ins]
+        out = bplan.layout_of(op.output)
+        lo_e = min([l.row_offset for l in lays] + [out.row_offset])
+        hi_e = max([l.row_offset + l.rows for l in lays]
+                   + [out.row_offset + out.rows])
+        if op.kind in _ROW_STREAMING_KINDS and len(lays) == 1:
+            starts, win_in = rolling_starts(
+                op, lays[0].row_offset, out.row_offset,
+                lays[0].rows, out.rows, sub, bplan.total_rows)
+            lo = (min(min(starts), lo_e) // sub) * sub
+            hi = _round_up(max(max(s + win_in for s in starts), hi_e), sub)
+            windows.append(OpWindow(op.name, op.kind, lo, hi,
+                                    win_rows=win_in + sub,
+                                    resident_rows=2 * win_in + sub,
+                                    starts=starts))
+        else:
+            _, _, total = staged_slots([l.rows for l in lays], out.rows, sub)
+            windows.append(OpWindow(
+                op.name, op.kind, (lo_e // sub) * sub,
+                _round_up(hi_e, sub), win_rows=total, resident_rows=total))
+    return WindowSchedule(tuple(windows), bplan.total_rows,
+                          bplan.arena_rowlen, bplan.dtype_bytes)
 
 
 # ---------------------------------------------------------------------------

@@ -1,5 +1,5 @@
 """Generalised DMO arena kernels: every supported op as a Pallas call over
-ONE shared arena buffer, in either of two arena programs.
+ONE shared arena buffer, in one of three arena programs.
 
 This generalises :mod:`repro.kernels.dmo_arena_dwconv` (a single hard-coded
 depthwise conv) to the full op set a :class:`~repro.core.planner.Plan` can
@@ -10,25 +10,36 @@ fully_connected / matmul / concat / pad / mean. Each op becomes one
 in-place through the op sequence — the TPU-VMEM analogue of the paper's SRAM
 tensor arena.
 
-Two arena addressings share the same kernel bodies through a small memory
-access layer (:class:`_FlatMem` / :class:`_BlockMem`; an :class:`OpSpec`
-with ``rowlen == 0`` selects the flat program, ``rowlen > 0`` the blocked
-one):
+Three arena addressings share the same kernel bodies through a small memory
+access layer (an :class:`OpSpec` with ``rowlen == 0`` selects the flat
+program, ``rowlen > 0`` the blocked one, and ``win_rows > 0`` on top of
+that the streaming one):
 
-- **flat** — the arena is a 1-D *byte* buffer; operands live at byte
-  offsets and kernels bitcast their windows to the tier the spec declares
-  (f32 windows / int8 bytes, the quantised tier running int32 accumulation
-  plus the float32 requantisation of :mod:`repro.core.exec.ops`). Mixed-
-  dtype plans execute in one buffer, but byte-granular dynamic slices fight
-  the TPU's (8, 128)/(32, 128) VMEM tilings — this program is
-  interpret-mode only.
-- **row-blocked** — the arena is a 2-D ``(rows, rowlen)`` buffer *typed* to
-  the plan's dtype, laid out by
+- **flat** (:class:`_FlatMem`) — the arena is a 1-D *byte* buffer; operands
+  live at byte offsets and kernels bitcast their windows to the tier the
+  spec declares (f32 windows / int8 bytes, the quantised tier running int32
+  accumulation plus the float32 requantisation of
+  :mod:`repro.core.exec.ops`). Mixed-dtype plans execute in one buffer, but
+  byte-granular dynamic slices fight the TPU's (8, 128)/(32, 128) VMEM
+  tilings — this program is interpret-mode only.
+- **row-blocked** (:class:`_BlockMem`) — the arena is a 2-D
+  ``(rows, rowlen)`` buffer *typed* to the plan's dtype, laid out by
   :func:`repro.core.planner.legalise_for_blocks`: operands occupy whole
   arena rows at sublane-tile-aligned row offsets, conv/pool walk one image
   row per arena row via ``pl.dslice`` on the row axis, and no bitcasts are
-  needed — the same program lowers under ``interpret=False`` (compiled
-  mode on a real TPU).
+  needed — the same program lowers under ``interpret=False``. The whole
+  arena is VMEM-resident, so the VMEM capacity caps ``total_rows``.
+- **streaming** (:class:`_StreamRollMem` / :class:`_StreamStageMem`) — the
+  arena stays in ``pltpu.ANY`` (HBM) and each op DMAs only its *live
+  window* (:class:`repro.core.planner.WindowSchedule`) into VMEM scratch
+  with ``pltpu.make_async_copy``. Row-streaming ops (conv / depthwise /
+  pool) run a row-tile grid: a double-buffered rolling input window (the
+  tile-``t+1`` fetch is issued before the tile-``t`` wait) plus a one-tile
+  output slot whose rows DMA back as they are produced. Every other kind
+  stages whole operand blocks into packed scratch slots
+  (:func:`repro.core.planner.staged_slots`, fetches pipelined over two
+  rotating DMA semaphores), computes, and copies the output block back.
+  The VMEM ceiling becomes ``max_window_rows``, not ``total_rows``.
 
 Split row bands (§II.A) need no kernels of their own: a banded conv/pool's
 spec carries its band shapes and its explicit band-local pads (a producer
@@ -56,6 +67,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 #: jnp mirrors of repro.core.exec.ops.ELEMENTWISE (same names, same maths).
 _ELEMENTWISE = {
@@ -85,7 +97,12 @@ class OpSpec:
     row-blocked program over a typed ``(rows, rowlen)`` arena: offsets are
     arena *row* indices and ``in_rows``/``out_rows`` carry each operand's
     ``(rows, used-elements-per-row)`` block shape from its
-    :class:`~repro.core.planner.BlockLayout`."""
+    :class:`~repro.core.planner.BlockLayout`. ``win_rows > 0`` (on top of
+    ``rowlen > 0``) selects the streaming grid program: the arena lives in
+    ``pltpu.ANY`` and only ``win_rows`` rows are VMEM-resident —
+    ``win_starts`` is the planner's per-output-tile fetch start table for
+    rolling conv/pool windows (empty = staged whole-block op), ``win_lo``
+    the low edge of the op's live-window extent (reporting only)."""
 
     kind: str
     in_off: Tuple[int, ...]            # byte (flat) | arena-row (blocked)
@@ -98,6 +115,9 @@ class OpSpec:
     rowlen: int = 0                    # arena row elements (0 = flat program)
     in_rows: Tuple[Tuple[int, int], ...] = ()  # (rows, used) per input
     out_rows: Tuple[int, int] = ()             # (rows, used) of the output
+    win_lo: int = 0                    # live-window extent low edge (rows)
+    win_rows: int = 0                  # VMEM-resident rows (0 = non-streaming)
+    win_starts: Tuple[int, ...] = ()   # rolling-window fetch starts per tile
 
 
 def _elems(shape: Tuple[int, ...]) -> int:
@@ -113,6 +133,11 @@ def _isz(dtype: str) -> int:
 
 def _jnp_dtype(dtype: str):
     return jnp.int8 if dtype == "i8" else jnp.float32
+
+
+def _sub(dtype: str) -> int:
+    """Sublane tile rows for the arena dtype (mirrors planner.TPU_TILES)."""
+    return 32 if dtype == "i8" else 8
 
 
 # ---------------------------------------------------------------------------
@@ -158,6 +183,28 @@ class _FlatMem:
         row = _elems(self.spec.out_shape[-2:])
         self._write(self.spec.out_off + oy * row * self.isz, value)
 
+    def fori_rows(self, oh: int, body) -> None:
+        """Sequential walk over every output row (§III.F: keep it serial)."""
+        jax.lax.fori_loop(0, oh, body, 0)
+
+
+def _pad_cols(block, rows: int, used: int, L: int, dt):
+    """Zero-fill each row's tile-padding tail out to the arena row."""
+    if used == L:
+        return block
+    return jnp.concatenate(
+        [block, jnp.zeros((rows, L - used), dt)], axis=1)
+
+
+def _out_block(value, rows: int, used: int, L: int, dt):
+    """An output tensor as a padded (rows, L) arena block (dense tail and
+    per-row tile padding zero-filled)."""
+    flat = value.reshape(-1).astype(dt)
+    if flat.size < rows * used:
+        flat = jnp.concatenate(
+            [flat, jnp.zeros(rows * used - flat.size, dt)])
+    return _pad_cols(flat.reshape(rows, used), rows, used, L, dt)
+
 
 class _BlockMem:
     """Row-blocked accessor: whole arena rows of a typed (R, L) buffer via
@@ -180,27 +227,93 @@ class _BlockMem:
         row = self.ref[pl.dslice(self.spec.in_off[i] + iy, 1), :]
         return row.reshape(self.L)[:used]
 
-    def _pad_cols(self, block, rows: int, used: int):
-        """Zero-fill each row's tile-padding tail out to the arena row."""
-        if used == self.L:
-            return block
-        return jnp.concatenate(
-            [block, jnp.zeros((rows, self.L - used), self.dt)], axis=1)
-
     def write(self, value):
         rows, used = self.spec.out_rows
-        flat = value.reshape(-1).astype(self.dt)
-        if flat.size < rows * used:       # dense tail padding
-            flat = jnp.concatenate(
-                [flat, jnp.zeros(rows * used - flat.size, self.dt)])
-        block = self._pad_cols(flat.reshape(rows, used), rows, used)
-        self.ref[pl.dslice(self.spec.out_off, rows), :] = block
+        self.ref[pl.dslice(self.spec.out_off, rows), :] = \
+            _out_block(value, rows, used, self.L, self.dt)
 
     def write_row(self, oy, value):
         used = _elems(self.spec.out_shape[-2:])
         row = value.reshape(1, used).astype(self.dt)
         self.ref[pl.dslice(self.spec.out_off + oy, 1), :] = \
-            self._pad_cols(row, 1, used)
+            _pad_cols(row, 1, used, self.L, self.dt)
+
+    def fori_rows(self, oh: int, body) -> None:
+        jax.lax.fori_loop(0, oh, body, 0)
+
+
+class _StreamRollMem:
+    """Streaming accessor for one output-row tile of a rolling-window
+    conv/pool: reads index the double-buffered VMEM input-window slot
+    (arena row ``r`` lives at scratch row ``r - base``; reads that fall
+    outside the window are the kernels' clamped+masked taps, which the
+    dynamic slice clamps in-bounds and the mask discards), writes land in
+    the one-tile output slot and DMA straight back to the arena row they
+    belong to. ``fori_rows`` restricts the shared kernel bodies to this
+    tile's output rows — the bodies themselves stay written-once."""
+
+    def __init__(self, in_ref, out_ref, arena_ref, sem, spec: OpSpec,
+                 base, row_lo, row_hi):
+        self.in_ref, self.out_ref = in_ref, out_ref
+        self.arena_ref, self.sem, self.spec = arena_ref, sem, spec
+        self.base, self.row_lo, self.row_hi = base, row_lo, row_hi
+        self.dt = _jnp_dtype(spec.dtype)
+        self.L = spec.rowlen
+
+    def read_row(self, i: int, iy):
+        used = _elems(self.spec.in_shape[i][-2:])
+        idx = self.spec.in_off[i] + iy - self.base
+        row = self.in_ref[pl.dslice(idx, 1), :]
+        return row.reshape(self.L)[:used]
+
+    def write_row(self, oy, value):
+        used = _elems(self.spec.out_shape[-2:])
+        j = oy - self.row_lo
+        self.out_ref[pl.dslice(j, 1), :] = \
+            _pad_cols(value.reshape(1, used).astype(self.dt), 1, used,
+                      self.L, self.dt)
+        cp = pltpu.make_async_copy(
+            self.out_ref.at[pl.dslice(j, 1), :],
+            self.arena_ref.at[pl.dslice(self.spec.out_off + oy, 1), :],
+            self.sem)
+        cp.start()
+        cp.wait()
+
+    def fori_rows(self, oh: int, body) -> None:
+        jax.lax.fori_loop(self.row_lo, self.row_hi, body, 0)
+
+
+class _StreamStageMem:
+    """Streaming accessor for a staged whole-block op: operand blocks were
+    DMA'd into packed scratch slots before the body runs (read-all before
+    write-all — exactly the blocked kernels' order), the output block is
+    staged in its slot and copied back in one DMA."""
+
+    def __init__(self, ref, arena_ref, sem, spec: OpSpec,
+                 offs: Tuple[int, ...], out_slot: int):
+        self.ref, self.arena_ref, self.sem, self.spec = \
+            ref, arena_ref, sem, spec
+        self.offs, self.out_slot = offs, out_slot
+        self.dt = _jnp_dtype(spec.dtype)
+        self.L = spec.rowlen
+
+    def read_t(self, i: int):
+        rows, used = self.spec.in_rows[i]
+        shape = self.spec.in_shape[i]
+        block = self.ref[pl.dslice(self.offs[i], rows), :]
+        flat = block[:, :used].reshape(rows * used)
+        return flat[:_elems(shape)].reshape(shape)
+
+    def write(self, value):
+        rows, used = self.spec.out_rows
+        self.ref[pl.dslice(self.out_slot, rows), :] = \
+            _out_block(value, rows, used, self.L, self.dt)
+        cp = pltpu.make_async_copy(
+            self.ref.at[pl.dslice(self.out_slot, rows), :],
+            self.arena_ref.at[pl.dslice(self.spec.out_off, rows), :],
+            self.sem)
+        cp.start()
+        cp.wait()
 
 
 def _mem(ref, spec: OpSpec):
@@ -223,14 +336,14 @@ def _quant(v, scale: float, zp: int):
 
 
 # ---------------------------------------------------------------------------
-# Kernel bodies — all state lives in out_ref (the aliased arena); the input
-# operand only seeds its initial contents via the alias. Bodies are
-# addressing-agnostic: every arena touch goes through the mem layer.
+# Kernel bodies — all state lives in the aliased arena (or its staged
+# scratch window); the input operand only seeds the initial contents via
+# the alias. Bodies are addressing-agnostic: every arena touch goes through
+# the mem layer, so the flat, blocked and streaming programs share them.
 # ---------------------------------------------------------------------------
 
 
-def _conv_kernel(_a, w_ref, o_ref, *, spec: OpSpec):
-    mem = _mem(o_ref, spec)
+def _conv_kernel(mem, w_ref, *, spec: OpSpec):
     ih, iw, ic = spec.in_shape[0][-3:]
     oh, ow, oc = spec.out_shape[-3:]
     kh, kw, sh, sw, dh, dw, ph, pw, mult = spec.meta
@@ -271,11 +384,10 @@ def _conv_kernel(_a, w_ref, o_ref, *, spec: OpSpec):
         mem.write_row(oy, out)
         return 0
 
-    jax.lax.fori_loop(0, oh, body, 0)
+    mem.fori_rows(oh, body)
 
 
-def _pool_kernel(_a, o_ref, *, spec: OpSpec):
-    mem = _mem(o_ref, spec)
+def _pool_kernel(mem, *, spec: OpSpec):
     ih, iw, c = spec.in_shape[0][-3:]
     oh, ow, _ = spec.out_shape[-3:]
     kh, kw, sh, sw, ph, pw, mode = spec.meta
@@ -319,11 +431,10 @@ def _pool_kernel(_a, o_ref, *, spec: OpSpec):
         mem.write_row(oy, out)
         return 0
 
-    jax.lax.fori_loop(0, oh, body, 0)
+    mem.fori_rows(oh, body)
 
 
-def _elementwise_kernel(_a, o_ref, *, spec: OpSpec):
-    mem = _mem(o_ref, spec)
+def _elementwise_kernel(mem, *, spec: OpSpec):
     fn = _ELEMENTWISE[spec.meta[0]]
     xs = [mem.read_t(i) for i in range(len(spec.in_shape))]
     if spec.dtype == "i8":
@@ -335,8 +446,7 @@ def _elementwise_kernel(_a, o_ref, *, spec: OpSpec):
     mem.write(_quant(v, ys, yzp) if spec.dtype == "i8" else v)
 
 
-def _softmax_kernel(_a, o_ref, *, spec: OpSpec):
-    mem = _mem(o_ref, spec)
+def _softmax_kernel(mem, *, spec: OpSpec):
     x = mem.read_t(0)
     if spec.dtype == "i8":
         (xs, xzp), (ys, yzp) = spec.qmeta
@@ -346,8 +456,7 @@ def _softmax_kernel(_a, o_ref, *, spec: OpSpec):
     mem.write(_quant(y, ys, yzp) if spec.dtype == "i8" else y)
 
 
-def _fully_connected_kernel(_a, w_ref, o_ref, *, spec: OpSpec):
-    mem = _mem(o_ref, spec)
+def _fully_connected_kernel(mem, w_ref, *, spec: OpSpec):
     idim = spec.in_shape[0][-1]
     x = mem.read_t(0).reshape(-1, idim)
     if spec.dtype == "i8":
@@ -361,8 +470,7 @@ def _fully_connected_kernel(_a, w_ref, o_ref, *, spec: OpSpec):
     mem.write(y.reshape(spec.out_shape))
 
 
-def _matmul_kernel(_a, o_ref, *, spec: OpSpec):
-    mem = _mem(o_ref, spec)
+def _matmul_kernel(mem, *, spec: OpSpec):
     a = mem.read_t(0).reshape(-1, spec.in_shape[0][-1])
     b = mem.read_t(1)
     if spec.dtype == "i8":
@@ -383,8 +491,7 @@ def _rescale(x, src, dst):
     return _requant(x.astype(jnp.int32) - s_zp, mult, y_zp)
 
 
-def _concat_kernel(_a, o_ref, *, spec: OpSpec):
-    mem = _mem(o_ref, spec)
+def _concat_kernel(mem, *, spec: OpSpec):
     axis = spec.meta[0]
     xs = [mem.read_t(i) for i in range(len(spec.in_shape))]
     if spec.dtype == "i8":
@@ -393,8 +500,7 @@ def _concat_kernel(_a, o_ref, *, spec: OpSpec):
     mem.write(jnp.concatenate(xs, axis=axis))
 
 
-def _pad_kernel(_a, o_ref, *, spec: OpSpec):
-    mem = _mem(o_ref, spec)
+def _pad_kernel(mem, *, spec: OpSpec):
     x = mem.read_t(0)
     if spec.dtype == "i8":
         (x_zp, mult), (y_zp,) = spec.qmeta
@@ -404,8 +510,7 @@ def _pad_kernel(_a, o_ref, *, spec: OpSpec):
     mem.write(jnp.pad(x, spec.meta[0]))
 
 
-def _mean_kernel(_a, o_ref, *, spec: OpSpec):
-    mem = _mem(o_ref, spec)
+def _mean_kernel(mem, *, spec: OpSpec):
     x = mem.read_t(0)
     axes = spec.meta[0]
     if spec.dtype == "i8":
@@ -421,7 +526,7 @@ def _mean_kernel(_a, o_ref, *, spec: OpSpec):
     mem.write(y.reshape(spec.out_shape))
 
 
-_KERNELS = {
+_BODIES = {
     "conv2d": _conv_kernel,
     "depthwise_conv2d": _conv_kernel,
     "pool": _pool_kernel,
@@ -435,12 +540,148 @@ _KERNELS = {
 }
 
 
+def _plain_kernel(*refs, spec: OpSpec):
+    """Flat/row-blocked kernel: refs are (arena_in, *weights, arena_out);
+    the body reads and writes through the aliased output ref."""
+    _BODIES[spec.kind](_mem(refs[-1], spec), *refs[1:-1], spec=spec)
+
+
+# ---------------------------------------------------------------------------
+# Streaming grid programs: arena in pltpu.ANY (HBM), live window in VMEM.
+# ---------------------------------------------------------------------------
+
+
+def _stream_roll_kernel(a_ref, *rest, spec: OpSpec):
+    """One output-row tile of a rolling-window conv/dw-conv/pool. Grid step
+    ``t`` computes output rows ``[t*sub, min((t+1)*sub, oh))`` out of a
+    double-buffered VMEM input window whose arena fetch start is the
+    planner's static ``win_starts[t]`` (the single source of truth — the
+    kernel just indexes the table). The tile-``t+1`` fetch is issued before
+    the tile-``t`` wait; that prefetch may race rows the current tile is
+    writing back, but those raced rows are never read except through
+    clamped+masked taps (the O_s row invariant keeps every *live* read at
+    arena rows >= the write frontier), so the overlap is benign. Fetches
+    source the aliased *output* ref so the window observes all previous
+    write-backs."""
+    nw = 1 if spec.kind in WEIGHTED_KINDS else 0
+    w_refs, o_ref = rest[:nw], rest[nw]
+    in_win, out_tile, in_sems, out_sem = rest[nw + 1:]
+
+    sub = _sub(spec.dtype)
+    oh = spec.out_shape[-3]
+    T = len(spec.win_starts)
+    win_in = spec.win_rows - sub
+    t = pl.program_id(0)
+
+    def start_of(tt):
+        # static select chain over the planner's table (a captured jnp
+        # constant is not a legal kernel operand; T is small)
+        s = jnp.int32(spec.win_starts[0])
+        for i in range(1, T):
+            s = jnp.where(tt >= i, jnp.int32(spec.win_starts[i]), s)
+        return s
+
+    def fetch(tt):
+        slot = jax.lax.rem(tt, 2)
+        return pltpu.make_async_copy(
+            o_ref.at[pl.dslice(start_of(tt), win_in), :],
+            in_win.at[slot],
+            in_sems.at[slot])
+
+    @pl.when(t == 0)
+    def _():
+        fetch(t).start()
+
+    @pl.when(t + 1 < T)
+    def _():
+        fetch(t + 1).start()
+
+    fetch(t).wait()
+
+    row_lo = t * sub
+    row_hi = jnp.minimum(row_lo + sub, oh)
+    mem = _StreamRollMem(in_win.at[jax.lax.rem(t, 2)], out_tile, o_ref,
+                         out_sem, spec, start_of(t), row_lo, row_hi)
+    _BODIES[spec.kind](mem, *w_refs, spec=spec)
+
+
+def _stream_stage_kernel(a_ref, *rest, spec: OpSpec, offs, out_slot):
+    """Staged whole-block op: DMA every operand block from the ANY arena
+    into its packed VMEM slot (fetches pipelined over two rotating
+    semaphores), run the written-once body against the staged window, then
+    copy the output block back in one DMA. Read-all-before-write-all — the
+    exact element order of the blocked program, so in-place overlaps are
+    handled identically."""
+    nw = 1 if spec.kind in WEIGHTED_KINDS else 0
+    w_refs, o_ref = rest[:nw], rest[nw]
+    buf, in_sems, out_sem = rest[nw + 1:]
+
+    cps = [pltpu.make_async_copy(
+        o_ref.at[pl.dslice(spec.in_off[i], rows), :],
+        buf.at[pl.dslice(offs[i], rows), :],
+        in_sems.at[i % 2])
+        for i, (rows, _) in enumerate(spec.in_rows)]
+    for cp in cps[:2]:
+        cp.start()
+    for i, cp in enumerate(cps):
+        cp.wait()
+        if i + 2 < len(cps):
+            cps[i + 2].start()
+
+    mem = _StreamStageMem(buf, o_ref, out_sem, spec, offs, out_slot)
+    _BODIES[spec.kind](mem, *w_refs, spec=spec)
+
+
+def _apply_stream(arena: jax.Array, spec: OpSpec,
+                  weights: Tuple[jax.Array, ...], interpret: bool):
+    dt = _jnp_dtype(spec.dtype)
+    L = spec.rowlen
+    sub = _sub(spec.dtype)
+    io_specs = dict(
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)]
+        + [pl.BlockSpec(memory_space=pltpu.VMEM)] * len(weights),
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+        out_shape=jax.ShapeDtypeStruct(arena.shape, arena.dtype),
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )
+    if spec.win_starts:                        # rolling conv/dw/pool window
+        fn = pl.pallas_call(
+            functools.partial(_stream_roll_kernel, spec=spec),
+            grid=(len(spec.win_starts),),
+            scratch_shapes=[
+                pltpu.VMEM((2, spec.win_rows - sub, L), dt),
+                pltpu.VMEM((sub, L), dt),
+                pltpu.SemaphoreType.DMA((2,)),
+                pltpu.SemaphoreType.DMA(()),
+            ],
+            **io_specs,
+        )
+    else:                                      # staged whole-block op
+        from repro.core.planner import staged_slots  # no import cycle
+        offs, out_slot, total = staged_slots(
+            [r for r, _ in spec.in_rows], spec.out_rows[0], sub)
+        fn = pl.pallas_call(
+            functools.partial(_stream_stage_kernel, spec=spec,
+                              offs=offs, out_slot=out_slot),
+            scratch_shapes=[
+                pltpu.VMEM((max(total, spec.win_rows), L), dt),
+                pltpu.SemaphoreType.DMA((2,)),
+                pltpu.SemaphoreType.DMA(()),
+            ],
+            **io_specs,
+        )
+    return fn(arena, *weights)
+
+
 def apply_op(arena: jax.Array, spec: OpSpec, weights: Tuple[jax.Array, ...],
              interpret: bool = True) -> jax.Array:
-    """Run one op in-place on the shared arena (flat 1-D byte buffer or
-    row-blocked 2-D typed buffer, per the spec); returns the (aliased)
-    arena."""
-    kernel = functools.partial(_KERNELS[spec.kind], spec=spec)
+    """Run one op in-place on the shared arena (flat 1-D byte buffer,
+    row-blocked 2-D typed buffer, or ANY-space streamed buffer, per the
+    spec); returns the (aliased) arena."""
+    if spec.win_rows:
+        return _apply_stream(arena, spec, weights, interpret)
+    kernel = functools.partial(_plain_kernel, spec=spec)
     fn = pl.pallas_call(
         kernel,
         out_shape=jax.ShapeDtypeStruct(arena.shape, arena.dtype),

@@ -1,0 +1,266 @@
+"""Streaming grid execution: live-window schedules + the streaming pallas
+route (PR 6).
+
+Three layers under test:
+
+- planner: :meth:`BlockPlan.window_schedule` — zoo-wide containment (every
+  row an op's streaming program touches stays inside its ``[lo, hi)``
+  window and inside the arena; every *valid* kernel tap lands inside the
+  fetched rolling window) and the flagship bound ``max_window_rows <
+  total_rows`` (the acceptance: the VMEM ceiling is the window, not the
+  arena);
+- kernels/backend: ``mode="streaming"`` parity — bit-exact vs the
+  row-blocked program (same kernel bodies, f32 AND int8) and vs the numpy
+  backend (f32 tolerance / int8 <= 1 LSB);
+- plumbing: mode validation, the flat-layout refusal, the interpret pin,
+  and the VMEM-budget refusals (streaming gates on the window, compiled
+  mode on the whole arena).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import exec as X
+from repro.core import planner as P
+from repro.core import zoo
+from repro.core.graph import Graph, op_pads
+from repro.core.pipeline import compile as compile_graph
+
+
+def allops_graph() -> Graph:
+    """Every streamable op kind once: rolling (conv/dw/pool) AND staged
+    (elementwise, pad, concat, softmax, matmul, fully_connected, mean)."""
+    g = Graph("stream_allops")
+    x = g.tensor("x", (16, 16, 8), 4, "input")
+    c = g.op("conv2d", [x], (16, 16, 8),
+             dict(kernel=(3, 3), stride=(1, 1), padding="same"))
+    d = g.op("depthwise_conv2d", [c], (16, 16, 8),
+             dict(kernel=(3, 3), stride=(1, 1), padding="same"))
+    e = g.op("elementwise", [d, c], (16, 16, 8), dict(fn="add"))
+    p = g.op("pool", [e], (8, 8, 8),
+             dict(kernel=(2, 2), stride=(2, 2), padding="valid", mode="max"))
+    pd = g.op("pad", [p], (10, 10, 8),
+              dict(paddings=((1, 1), (1, 1), (0, 0))))
+    cc = g.op("concat", [pd, pd], (10, 10, 16), dict(axis=-1))
+    m = g.op("mean", [cc], (16,), dict(axes=(0, 1)))
+    f = g.op("fully_connected", [m], (12,))
+    g.op("softmax", [f], (12,), out_kind="output")
+    g.validate()
+    return g
+
+
+#: Executable models spanning both dtype tiers, reduced + flagship.
+_MODELS = {
+    "mobilenet_v1_0.25_32_f32": lambda: zoo.mobilenet_v1(0.25, 32, 4),
+    "mobilenet_v2_0.35_32_f32": lambda: zoo.mobilenet_v2(0.35, 32, 4),
+    "mobilenet_v1_0.25_32_8bit": lambda: zoo.mobilenet_v1(0.25, 32, 1),
+    "mobilenet_v1_0.25_128_8bit":
+        zoo.TABLE3_MODELS["mobilenet_v1_0.25_128_8bit"][0],
+    "stream_allops": allops_graph,
+}
+
+
+def _bplan(build):
+    cp = compile_graph(build())
+    bp = cp.legalised()
+    assert bp is not None, "model must legalise for the streaming tests"
+    return cp, bp
+
+
+# ---------------------------------------------------------------------------
+# Planner layer: window schedule properties
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", list(_MODELS))
+def test_window_containment(name):
+    """Every row the streaming program touches stays inside the op's
+    declared ``[lo, hi)`` window and inside the arena — and every tap the
+    kernel reads on a *valid* input row lands inside the rolling window
+    fetched for that tile (the property that makes streaming reads exact,
+    not just by-construction extents)."""
+    _, bp = _bplan(_MODELS[name])
+    ws = bp.window_schedule()
+    sub = bp.tiling[0]
+    by_name = {op.name: op for op in bp.order}
+    assert len(ws.windows) == sum(
+        1 for op in bp.order if op.kind != "reshape")
+    for w in ws.windows:
+        op = by_name[w.op_name]
+        ins = [t for t in op.inputs if t.storage().kind != "weight"]
+        lays = [bp.layout_of(t) for t in ins]
+        out = bp.layout_of(op.output)
+        assert 0 <= w.lo < w.hi <= bp.total_rows
+        assert w.lo % sub == 0 and w.hi % sub == 0
+        # operand/output block extents stay inside the window
+        for lay in lays + [out]:
+            assert w.lo <= lay.row_offset
+            assert lay.row_offset + lay.rows <= w.hi
+        if not w.rolling:
+            continue
+        # rolling: fixed-size fetches inside window and arena ...
+        xi, ih = lays[0].row_offset, lays[0].rows
+        oh = out.rows
+        win_in = w.win_rows - sub
+        assert len(w.starts) == -(-oh // sub)
+        for s in w.starts:
+            assert w.lo <= s and s + win_in <= w.hi
+            assert 0 <= s and s + win_in <= bp.total_rows
+        # ... and every valid tap of every output row of tile t is
+        # resident in tile t's fetched window
+        kh, sh, dh, ph = P._roll_geometry(op)
+        for t, s in enumerate(w.starts):
+            for oy in range(t * sub, min((t + 1) * sub, oh)):
+                for fy in range(kh):
+                    iy = oy * sh - ph + fy * dh
+                    if 0 <= iy < ih:
+                        assert s <= xi + iy < s + win_in, \
+                            f"{op.name}: tap row {xi + iy} outside " \
+                            f"fetch [{s}, {s + win_in}) at tile {t}"
+
+
+@pytest.mark.parametrize("name", list(_MODELS))
+def test_staged_slots_match_schedule(name):
+    """Staged ops: the packed scratch slots are disjoint, ordered, and the
+    total the kernel allocates equals the schedule's resident rows."""
+    _, bp = _bplan(_MODELS[name])
+    ws = bp.window_schedule()
+    by_name = {op.name: op for op in bp.order}
+    sub = bp.tiling[0]
+    for w in ws.windows:
+        if w.rolling:
+            assert w.resident_rows == 2 * (w.win_rows - sub) + sub
+            continue
+        op = by_name[w.op_name]
+        ins = [t for t in op.inputs if t.storage().kind != "weight"]
+        rows = [bp.layout_of(t).rows for t in ins]
+        out_rows = bp.layout_of(op.output).rows
+        offs, out_slot, total = P.staged_slots(rows, out_rows, sub)
+        assert total == w.win_rows == w.resident_rows
+        cur = 0
+        for o, r in zip(offs, rows):
+            assert o == cur
+            cur += r
+        assert out_slot == cur and cur + out_rows <= total
+
+
+def test_flagship_window_strictly_below_arena():
+    """Acceptance: on the paper's flagship 8-bit rows the streaming VMEM
+    ceiling (max_window_rows) is strictly smaller than the arena —
+    streaming buys headroom the VMEM-resident blocked program cannot."""
+    for name in zoo.TABLE3_8BIT_MODELS:
+        _, bp = _bplan(zoo.TABLE3_MODELS[name][0])
+        ws = bp.window_schedule()
+        assert ws.max_window_rows < ws.total_rows, name
+        assert ws.max_resident_bytes < bp.padded_peak_bytes, name
+        assert bp.report().count("streaming windows:") == 1
+
+
+def test_window_schedule_memoised():
+    _, bp = _bplan(_MODELS["mobilenet_v1_0.25_32_f32"])
+    assert bp.window_schedule() is bp.window_schedule()
+
+
+# ---------------------------------------------------------------------------
+# Kernel + backend layer: streaming parity
+# ---------------------------------------------------------------------------
+
+
+_PARITY = ("mobilenet_v1_0.25_32_f32", "mobilenet_v1_0.25_32_8bit",
+           "mobilenet_v1_0.25_128_8bit", "stream_allops")
+
+
+@pytest.mark.parametrize("name", _PARITY)
+def test_streaming_parity(name):
+    """mode="streaming" executes the zoo: bit-exact vs the row-blocked
+    program (identical kernel bodies, DMA'd operands) and within tolerance
+    vs the numpy arena backend (int8 <= 1 LSB via compare_outputs)."""
+    cp, _ = _bplan(_MODELS[name])
+    got_blk = X.get_backend("pallas", layout="blocks").execute(cp)
+    got_st = X.get_backend("pallas", mode="streaming",
+                           interpret=True).execute(cp)
+    got_np = X.get_backend("numpy").execute(cp)
+    X.compare_outputs(got_blk, got_st, exact=True,
+                      label=f"{name} streaming vs blocked")
+    X.compare_outputs(got_np, got_st, exact=False,
+                      label=f"{name} streaming vs numpy")
+
+
+def test_lower_stream_grafts_window_statics():
+    from repro.core.exec.pallas_backend import PallasExecutor
+    _, bp = _bplan(_MODELS["mobilenet_v1_0.25_32_8bit"])
+    be = PallasExecutor(mode="streaming", interpret=True)
+    specs = be.lower_stream(bp)
+    ws = bp.window_schedule()
+    assert len(specs) == len(ws.windows)
+    for s, w in zip(specs, ws.windows):
+        assert s.win_rows == w.win_rows > 0
+        assert s.win_lo == w.lo
+        assert s.win_starts == w.starts
+        if s.kind in ("conv2d", "depthwise_conv2d", "pool"):
+            assert s.win_starts, f"{s.kind} should roll"
+    # the blocked lowering stays streaming-free
+    assert all(s.win_rows == 0 for s in be.lower_blocks(bp))
+
+
+# ---------------------------------------------------------------------------
+# Plumbing: modes, layouts, budgets
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_mode_plumbing(monkeypatch):
+    from repro.core.exec.pallas_backend import PallasExecutor
+    with pytest.raises(ValueError, match="unknown pallas mode"):
+        PallasExecutor(mode="stream")
+    with pytest.raises(ValueError, match="row-blocked"):
+        PallasExecutor(mode="streaming", layout="flat")
+    # interpret-ness: pinned beats the env switch, else the switch decides
+    assert PallasExecutor(mode="streaming", interpret=True).interpret
+    monkeypatch.setenv("REPRO_DMO_INTERPRET", "0")
+    assert not PallasExecutor(mode="streaming").interpret
+    assert not PallasExecutor(mode="streaming", interpret=False).interpret
+    monkeypatch.setenv("REPRO_DMO_INTERPRET", "1")
+    assert PallasExecutor(mode="streaming").interpret
+
+
+def test_streaming_refuses_over_budget_window():
+    """The streaming gate is the *window*, not the arena: a budget between
+    the two refuses compiled-style whole-arena residency but admits
+    streaming; a budget below the window refuses streaming too."""
+    from repro.core.exec.pallas_backend import PallasExecutor
+    # 64px build: big enough that the double-buffered resident scratch is
+    # strictly below the arena (the 32px one ties them)
+    cp, bp = _bplan(lambda: zoo.mobilenet_v1(0.25, 64, 1))
+    ws = bp.window_schedule()
+    arena_bytes = bp.total_rows * bp.row_bytes
+    assert ws.max_resident_bytes < arena_bytes
+    with pytest.raises(ValueError, match="does not fit VMEM"):
+        PallasExecutor(mode="streaming", interpret=True,
+                       vmem_budget=ws.max_resident_bytes - 1).execute(cp)
+    with pytest.raises(ValueError, match="streaming"):
+        PallasExecutor(mode="compiled",
+                       vmem_budget=arena_bytes - 1).execute(cp)
+    # between window and arena: streaming executes where compiled refuses
+    out = PallasExecutor(mode="streaming", interpret=True,
+                         vmem_budget=arena_bytes - 1).execute(cp)
+    ref = X.get_backend("numpy").execute(cp)
+    X.compare_outputs(ref, out, exact=False, label="budget-admitted stream")
+
+
+def test_budget_env_knob(monkeypatch):
+    from repro.core.exec import pallas_backend as PB
+    be = PB.PallasExecutor(mode="streaming", interpret=True)
+    assert be._resolve_budget() == PB.DEFAULT_VMEM_BUDGET
+    monkeypatch.setenv("REPRO_DMO_VMEM_BUDGET", "4096")
+    assert be._resolve_budget() == 4096
+    assert PB.PallasExecutor(vmem_budget=99)._resolve_budget() == 99
+
+
+def test_verify_pass_covers_streaming_tier():
+    """Compiling for backend="pallas" now cross-checks the streaming tier
+    too (the acceptance path CPU CI runs)."""
+    cp = compile_graph(_MODELS["mobilenet_v1_0.25_32_8bit"](),
+                      backend="pallas", verify="numeric")
+    assert any("streaming" in line for line in cp.log), cp.log
+    assert cp.verified == "numeric+pallas"
