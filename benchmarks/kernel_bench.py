@@ -74,6 +74,24 @@ def run(csv_rows):
                        f" resident={ws.max_resident_bytes}B")
         csv_rows.append((f"kernels/arena_exec_{backend}_32x32x8", us, detail))
 
+    # flagship fused band chain: the split-band region (one pallas_call per
+    # band op at PR 5) collapses to ONE launch, halos resident in VMEM
+    from repro.core import zoo
+    from repro.core.exec.pallas_backend import PallasExecutor
+    from repro.core.pipeline import compile as compile_graph
+    cp = compile_graph(zoo.TABLE3_MODELS["mobilenet_v1_0.25_128_8bit"][0]())
+    bp = cp.legalised()
+    specs = PallasExecutor(layout="blocks", interpret=True).lower_blocks(bp)
+    fused = [s for s in specs if s.kind == "fused"]
+    region_ops = sum(len(s.stages) for s in fused)
+    be = X.get_backend("pallas", layout="blocks")
+    us = _time(lambda: be.execute(cp))
+    csv_rows.append((
+        "kernels/fused_chain_mobilenet_v1_0.25_128_8bit", us,
+        f"launches={len(specs)} region={region_ops}->{len(fused)} "
+        f"peak={cp.peak_bytes}B scratch_rows="
+        f"{max((s.scratch_rows for s in fused), default=0)}"))
+
     q = jnp.asarray(r.standard_normal((256, 4, 64)), jnp.float32)
     k = jnp.asarray(r.standard_normal((256, 4, 64)), jnp.float32)
     us = _time(lambda a, b: ops.flash_attention(a, b, b), q, k)

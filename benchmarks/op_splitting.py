@@ -38,7 +38,7 @@ def _exec_parity_row(csv_rows):
     g = zoo.mobilenet_v1(0.25, 64, 1)
     cp = compile_graph(g, method="algorithmic", split="on")
     reason = X.executability(cp.graph)
-    if cp.winner != "split" or reason is not None:
+    if cp.winner not in ("split", "fuse") or reason is not None:
         us = (time.perf_counter() - t0) * 1e6
         csv_rows.append(("split/exec_parity", us,
                          f"skipped (winner={cp.winner} reason={reason})"))

@@ -2,10 +2,12 @@
 Prints ``name,us_per_call,derived`` CSV rows.
 
 ``--json [PATH]`` additionally writes a structured artifact (default
-``BENCH_pr6.json``): per-model plan peaks, blocked/window rows, compile
-time, and exec throughput per backend×dtype — so the perf trajectory is
-machine-readable instead of living in prose. ``--sweep off`` skips the CSV
-sweep when only the artifact is wanted.
+``BENCH_pr7.json``): per-model plan peaks, blocked/window rows, pallas
+launch counts (fused band chains collapse to one), compile time, and exec
+throughput per backend×dtype — so the perf trajectory is machine-readable
+instead of living in prose. ``--sweep off`` skips the CSV sweep when only
+the artifact is wanted. ``scripts/bench_diff.py`` diffs two artifacts and
+fails on regressions (the CI perf gate).
 
 Benchmark reruns start warm: the compile plan cache persists to disk
 (content-addressed by graph signature under ``$REPRO_DMO_CACHE_DIR``,
@@ -44,6 +46,7 @@ def _json_payload(rows):
             "wall_s": round(wall_s, 3),
             "cache_hit": cp.cache_hit,
         }
+        entry["winner"] = cp.winner
         bp = cp.legalised()
         if bp is not None:
             ws = bp.window_schedule()
@@ -55,6 +58,20 @@ def _json_payload(rows):
                     100.0 * ws.max_window_rows / ws.total_rows, 1),
                 "window_resident_bytes": ws.max_resident_bytes,
             })
+            if X.executability(cp.graph) is None:
+                from repro.core.exec.pallas_backend import PallasExecutor
+                specs = PallasExecutor(layout="blocks",
+                                       interpret=True).lower_blocks(bp)
+                fused = [s for s in specs if s.kind == "fused"]
+                entry.update({
+                    "launches": len(specs),
+                    "graph_ops": sum(1 for op in bp.order
+                                     if op.kind != "reshape"),
+                    "fused_chains": len(fused),
+                    "fused_region_ops": sum(len(s.stages) for s in fused),
+                    "fused_scratch_rows": max(
+                        (s.scratch_rows for s in fused), default=0),
+                })
         models[name] = entry
 
     exec_us = {}
@@ -85,7 +102,7 @@ def _json_payload(rows):
                 (time.perf_counter() - t0) / n * 1e6, 1)
 
     return {
-        "schema": "repro-dmo-bench-v1",
+        "schema": "repro-dmo-bench-v2",
         "models": models,
         "exec_us_per_call": exec_us,
         "sweep_rows": [[n, round(us, 1), d] for n, us, d in rows],
@@ -97,10 +114,10 @@ def main(argv=None) -> None:
     os.environ.setdefault("REPRO_DMO_DISK_CACHE", "1")
     ap = argparse.ArgumentParser(
         prog="benchmarks.run", description="DMO benchmark sweep")
-    ap.add_argument("--json", nargs="?", const="BENCH_pr6.json",
+    ap.add_argument("--json", nargs="?", const="BENCH_pr7.json",
                     default=None, metavar="PATH",
                     help="also write the structured benchmark artifact "
-                         "(default path: BENCH_pr6.json)")
+                         "(default path: BENCH_pr7.json)")
     ap.add_argument("--sweep", choices=("on", "off"), default="on",
                     help="run the full CSV sweep ('off' keeps --json cheap "
                          "on a warm plan cache)")

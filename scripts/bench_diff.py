@@ -1,0 +1,126 @@
+"""Diff two ``BENCH_*.json`` artifacts and fail on perf regressions.
+
+Compares the structural per-model metrics (arena peaks, blocked rows,
+streaming window rows/bytes, pallas launch counts) of two
+``benchmarks.run --json`` artifacts over their *common* keys and exits
+non-zero when any metric regresses by more than the threshold (default 5%).
+Structural metrics are machine-independent, so the gate is deterministic;
+wall-clock metrics (``exec_us_per_call``, ``compile_s``, ``wall_s``) are
+noisy across runners and only checked when ``--timing`` is passed.
+
+Usage::
+
+    PYTHONPATH=src python scripts/bench_diff.py BENCH_pr6.json BENCH_pr7.json
+    PYTHONPATH=src python scripts/bench_diff.py old.json new.json \
+        --threshold 2 --timing
+
+Exit status: 0 = no regressions, 1 = at least one metric regressed.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+#: Structural per-model metrics: (metric, better) where ``better`` is the
+#: direction of improvement. Keys absent from either artifact are skipped,
+#: so new fields never break diffs against older artifacts.
+MODEL_METRICS = {
+    "dmo_kb": "lower",                 # planned arena peak
+    "blocked_kb": "lower",             # legalised padded arena
+    "blocked_rows": "lower",
+    "window_rows": "lower",            # streaming VMEM-resident rows
+    "window_resident_bytes": "lower",
+    "launches": "lower",               # pallas_call count (fused chains = 1)
+    "saving_pct": "higher",
+    "baseline_kb": "equal",            # graph-derived: any drift is a bug
+}
+
+#: Wall-clock metrics, compared only under ``--timing``.
+TIMING_MODEL_METRICS = {"compile_s": "lower", "wall_s": "lower"}
+
+
+def _pct(old: float, new: float) -> float:
+    return 100.0 * (new - old) / old if old else 0.0
+
+
+def _judge(better: str, old: float, new: float, threshold: float):
+    """-> (is_regression, is_improvement) for one metric pair."""
+    delta = _pct(old, new)
+    if better == "equal":
+        return abs(delta) > threshold, False
+    if better == "higher":
+        delta = -delta
+    return delta > threshold, delta < 0
+
+
+def diff(old: dict, new: dict, threshold: float = 5.0,
+         timing: bool = False, skip: tuple = ()) -> tuple:
+    """-> (regressions, improvements): lists of printable lines."""
+    regressions, improvements = [], []
+
+    def compare(scope: str, metrics: dict, olds: dict, news: dict) -> None:
+        for metric, better in sorted(metrics.items()):
+            if metric in skip or metric not in olds or metric not in news:
+                continue
+            o, n = olds[metric], news[metric]
+            if not isinstance(o, (int, float)) or isinstance(o, bool):
+                continue
+            bad, good = _judge(better, float(o), float(n), threshold)
+            line = f"{scope}.{metric}: {o} -> {n} ({_pct(o, n):+.1f}%)"
+            if bad:
+                regressions.append(line)
+            elif good:
+                improvements.append(line)
+
+    model_metrics = dict(MODEL_METRICS)
+    if timing:
+        model_metrics.update(TIMING_MODEL_METRICS)
+    for name in sorted(set(old.get("models", {})) & set(new.get("models", {}))):
+        compare(f"models.{name}", model_metrics,
+                old["models"][name], new["models"][name])
+
+    if timing:
+        o_us, n_us = old.get("exec_us_per_call", {}), \
+            new.get("exec_us_per_call", {})
+        compare("exec_us_per_call", {k: "lower" for k in o_us},
+                o_us, n_us)
+
+    return regressions, improvements
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff two BENCH_*.json artifacts, fail on regressions")
+    ap.add_argument("old", help="baseline artifact (e.g. BENCH_pr6.json)")
+    ap.add_argument("new", help="candidate artifact (e.g. BENCH_pr7.json)")
+    ap.add_argument("--threshold", type=float, default=5.0,
+                    help="regression tolerance in percent (default 5)")
+    ap.add_argument("--timing", action="store_true",
+                    help="also gate wall-clock metrics (noisy across "
+                         "machines; off by default)")
+    ap.add_argument("--skip", action="append", default=[], metavar="METRIC",
+                    help="metric name to exclude (repeatable) — for "
+                         "intentional, documented trade-offs")
+    args = ap.parse_args(argv)
+
+    with open(args.old) as f:
+        old = json.load(f)
+    with open(args.new) as f:
+        new = json.load(f)
+
+    regressions, improvements = diff(old, new, args.threshold, args.timing,
+                                     tuple(args.skip))
+
+    for line in improvements:
+        print(f"improved   {line}")
+    for line in regressions:
+        print(f"REGRESSED  {line}")
+    common = len(set(old.get("models", {})) & set(new.get("models", {})))
+    print(f"# {common} common models, {len(improvements)} improved, "
+          f"{len(regressions)} regressed (threshold {args.threshold}%)")
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,66 @@
+"""CI smoke: the flagship fused band-chain program traces with
+``interpret=False``.
+
+CPU runners cannot MLIR-lower a TPU ``pallas_call`` (Mosaic refuses off-TPU),
+but abstract tracing still validates everything the interpreter does not:
+grid/block specs, scratch shapes, operand dtypes and the donated-arena
+aliasing of every launch. This catches fused-kernel regressions that only
+bite under real compilation — without needing a TPU in CI.
+
+Asserts the acceptance shape on the way: exactly one fused spec covering the
+whole 16-band + concat chain, one ``pallas_call`` equation per lowered spec
+(the 17-launch region collapsed to 1).
+
+Usage::
+
+    PYTHONPATH=src python scripts/fused_smoke.py
+"""
+from __future__ import annotations
+
+
+def main() -> None:
+    import jax
+    import jax.numpy as jnp
+    from repro.core import exec as X
+    from repro.core import zoo
+    from repro.core.exec.pallas_backend import PallasExecutor
+    from repro.core.pipeline import compile as compile_graph
+    from repro.kernels import arena_ops
+
+    cp = compile_graph(zoo.TABLE3_MODELS["mobilenet_v1_0.25_128_8bit"][0]())
+    graph, plan = cp.graph, cp.plan
+    bp = cp.legalised()
+    assert bp is not None, "flagship must legalise for blocks"
+
+    weights = X.synth_weights(graph)
+    quant = X.calibrate(graph, 0, weights) if X.needs_quant(graph) else None
+    specs = PallasExecutor(layout="blocks",
+                           interpret=True).lower_blocks(bp, quant)
+    fused = [s for s in specs if s.kind == "fused"]
+    assert len(fused) == 1, f"expected 1 fused chain, got {len(fused)}"
+    assert len(fused[0].stages) >= 16, \
+        f"flagship chain too short: {len(fused[0].stages)} stages"
+
+    wflat = []
+    for op in plan.order:
+        if op.kind in arena_ops.WEIGHTED_KINDS:
+            if quant is not None and id(op) in quant.weights_q:
+                wflat.append(jnp.asarray(
+                    quant.weights_q[id(op)]["filter"], jnp.int8))
+            else:
+                wflat.append(jnp.asarray(
+                    weights[id(op)]["filter"], jnp.float32))
+
+    arena = jnp.zeros((bp.total_rows, bp.arena_rowlen),
+                      jnp.int8 if bp.dtype_bytes == 1 else jnp.float32)
+    fn = arena_ops.lower_program(specs, interpret=False)
+    jaxpr = jax.make_jaxpr(fn)(arena, *wflat)
+    n_calls = str(jaxpr).count("pallas_call")
+    assert n_calls == len(specs), (n_calls, len(specs))
+    print(f"fused compiled-lowering smoke OK: {n_calls} pallas_call "
+          f"launches for {len(specs)} specs "
+          f"(chain of {len(fused[0].stages)} ops -> 1), interpret=False")
+
+
+if __name__ == "__main__":
+    main()

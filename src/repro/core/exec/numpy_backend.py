@@ -136,13 +136,24 @@ class ArenaExec(_Exec):
                 "requires a QuantSpec (see repro.core.exec.ops.calibrate)")
         self.plan = plan
         self.arena = np.zeros(plan.peak_bytes, np.uint8)
+        #: Fused-chain scratch tensors have no arena placement: the numpy
+        #: reference keeps them in private side buffers (the VMEM-scratch
+        #: analogue), so fused graphs execute with identical op semantics.
+        self.scratch: Dict[Tensor, np.ndarray] = {}
         for t in graph.tensors:
             if t.kind == "input":
                 self.store(t, np.asarray(inputs[t.name]))
 
     def _view(self, t: Tensor) -> np.ndarray:
-        """Typed view of the tensor's storage bytes inside the arena."""
+        """Typed view of the tensor's storage bytes inside the arena (or of
+        its private side buffer for fused-chain scratch tensors)."""
         s = t.storage()
+        if s.kind == "scratch":
+            buf = self.scratch.get(s)
+            if buf is None:
+                buf = self.scratch[s] = np.zeros(
+                    s.elems, X.arena_dtype(s.dtype_bytes))
+            return buf
         off = self.plan.offsets[s]
         assert off % s.dtype_bytes == 0, \
             f"{s.name}: byte offset {off} not {s.dtype_bytes}-byte aligned"

@@ -164,9 +164,9 @@ class OpQuant:
 
 
 def needs_quant(graph: Graph) -> bool:
-    """True when any arena tensor is int8 — execution then requires a
-    :class:`QuantSpec`."""
-    return any(t.dtype_bytes == 1 for t in graph.arena_tensors())
+    """True when any data tensor (arena or fused-chain scratch) is int8 —
+    execution then requires a :class:`QuantSpec`."""
+    return any(t.dtype_bytes == 1 for t in graph.data_tensors())
 
 
 def quantise(x: np.ndarray, qp: QParams) -> np.ndarray:
@@ -242,7 +242,10 @@ def calibrate(graph: Graph, seed: int = 0,
         if src is not None:
             group_of[op.output.storage()] = src
     ranges: Dict[str, Tuple[float, float]] = {}
-    for t in graph.arena_tensors():
+    # data_tensors, not arena_tensors: fused-chain scratch tensors never
+    # occupy the arena but still need activation params (the fused kernel
+    # requantises every stage exactly like the unfused execution)
+    for t in graph.data_tensors():
         v = ex.vals.get(t)
         lo = float(min(0.0, v.min())) if v is not None and v.size else -1.0
         hi = float(max(0.0, v.max())) if v is not None and v.size else 1.0
@@ -251,7 +254,7 @@ def calibrate(graph: Graph, seed: int = 0,
             lo, hi = min(lo, ranges[key][0]), max(hi, ranges[key][1])
         ranges[key] = (lo, hi)
     tensors: Dict[str, QParams] = {}
-    for t in graph.arena_tensors():
+    for t in graph.data_tensors():
         lo, hi = ranges[group_of.get(t, t.name)]
         scale = (hi - lo) / 255.0 or 1.0
         zp = int(np.clip(round(-128.0 - lo / scale), -128, 127))
@@ -513,7 +516,7 @@ def executability(graph: Graph) -> Optional[str]:
             if len(widths) > 1:
                 add(f"op {op.name} mixes arena dtypes "
                     f"{sorted(widths)} (no cast ops)")
-    for t in graph.arena_tensors():
+    for t in graph.data_tensors():
         if t.dtype_bytes not in SUPPORTED_DTYPES:
             add(f"unsupported arena dtype ({t.dtype_bytes}-byte tensor "
                 f"{t.name})")

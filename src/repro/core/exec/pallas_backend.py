@@ -48,15 +48,37 @@ runtime footprint, overlaps included. Row loops are sequential
 """
 from __future__ import annotations
 
+import collections
 import warnings
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.exec import ops as X
 from repro.core.exec import unwrap_plan
 from repro.core.graph import Op
-from repro.core.planner import BlockPlan, Plan, legalise_for_blocks
+from repro.core.planner import (BlockPlan, Plan, fused_slots,
+                                legalise_for_blocks)
+
+
+def _fused_chains(order: Sequence[Op]) -> Dict[str, List[Op]]:
+    """Chain-name -> members (in order) for a fused graph's execution order,
+    with the contiguity check the weight flattening relies on: a chain's
+    members must be consecutive in the order so the fused spec (emitted at
+    the first member's position) consumes consecutive stage weights from the
+    flattened weight list."""
+    chains: Dict[str, List[Op]] = {}
+    pos: Dict[str, int] = {}
+    for i, op in enumerate(order):
+        cname = op.params.get("fuse_chain")
+        if cname is None:
+            continue
+        if cname in pos:
+            assert pos[cname] == i - 1, \
+                f"fused chain {cname!r} is not contiguous in execution order"
+        pos[cname] = i
+        chains.setdefault(cname, []).append(op)
+    return chains
 
 
 def _canon_meta(op: Op) -> Tuple:
@@ -157,7 +179,24 @@ class PallasExecutor:
         self._interpret = interpret     # explicit pin (streaming mode only)
         self.layout = layout
         self.vmem_budget = vmem_budget
+        #: Lowered-spec cache across execute() calls: (plan identity, route,
+        #: quant identity) -> spec tuple. Values pin the plan/quant objects
+        #: so the id() keys stay valid; bounded FIFO. Together with the
+        #: content-addressed jit cache in arena_ops.lower_program this makes
+        #: repeated executions of one compiled plan re-trace nothing.
+        self._lowered: "collections.OrderedDict" = collections.OrderedDict()
+        #: synth_weights/calibrate results per (plan identity, seed) — both
+        #: are deterministic, so repeat executions skip calibration too.
+        self._autoparams: "collections.OrderedDict" = collections.OrderedDict()
+        self._cache_hits = 0
+        self._cache_misses = 0
         self._check_mode_layout()
+
+    def lowering_cache_info(self) -> Dict[str, int]:
+        """Hit/miss counters of the per-executor lowering cache (tests and
+        the trace exporter read this)."""
+        return {"hits": self._cache_hits, "misses": self._cache_misses,
+                "size": len(self._lowered)}
 
     @property
     def mode(self) -> str:
@@ -195,37 +234,130 @@ class PallasExecutor:
     def lower(self, plan: Plan,
               quant: Optional[X.QuantSpec] = None) -> Tuple:
         """Plan -> flat-program OpSpec sequence (static lowering, no weights
-        bound): *byte* offsets from :meth:`Plan.op_layouts`. ``quant`` must
-        be supplied for plans with int8 ops — its per-op contexts become the
-        kernels' static ``qmeta``."""
+        bound): *byte* offsets per operand. ``quant`` must be supplied for
+        plans with int8 ops — its per-op contexts become the kernels' static
+        ``qmeta``. A fused band chain lowers to ONE spec (at its first
+        member's position) whose stages carry byte offsets into the arena or
+        — for scratch-flagged operands — into the chain's scratch buffer."""
         from repro.kernels.arena_ops import OpSpec
+        chains = _fused_chains(plan.order)
+        emitted: set = set()
         specs: List[OpSpec] = []
-        for lay in plan.op_layouts():
-            op = lay.op
-            assert all(l is not None for l in lay.inputs), \
+        for op in plan.order:
+            if op.kind == "reshape":
+                continue
+            cname = op.params.get("fuse_chain")
+            if cname is not None:
+                if cname not in emitted:
+                    emitted.add(cname)
+                    specs.append(self._fused_flat_spec(
+                        plan, chains[cname], quant))
+                continue
+            assert all(t.storage().kind != "weight" for t in op.inputs), \
                 f"{op.name}: non-arena input cannot be lowered"
+            lays = [plan._layout(t) for t in op.inputs]
+            out = plan._layout(op.output)
             q = X.op_quant(op, quant)
             specs.append(OpSpec(
                 kind=op.kind,
-                in_off=tuple(l.byte_offset for l in lay.inputs),
-                in_shape=tuple(l.shape for l in lay.inputs),
-                out_off=lay.output.byte_offset,
-                out_shape=lay.output.shape,
-                dtype="i8" if lay.output.dtype_bytes == 1 else "f32",
+                in_off=tuple(l.byte_offset for l in lays),
+                in_shape=tuple(l.shape for l in lays),
+                out_off=out.byte_offset,
+                out_shape=out.shape,
+                dtype="i8" if out.dtype_bytes == 1 else "f32",
                 meta=_canon_meta(op),
                 qmeta=_canon_qmeta(op, q)))
         return tuple(specs)
+
+    def _fused_flat_spec(self, plan: Plan, members: List[Op],
+                         quant: Optional[X.QuantSpec]):
+        """One flat-program spec for a fused band chain: stage offsets are
+        *byte* offsets — arena placements for external operands, packed
+        scratch-byte slots (:func:`repro.core.planner.fused_slots` over
+        ``nbytes``) for chain-internal ones."""
+        from repro.kernels.arena_ops import OpSpec
+        cat = members[-1]
+        internal = {op.output.storage() for op in members[:-1]}
+        align = max(s.dtype_bytes for s in internal)
+        slots, total = fused_slots(members, lambda s: s.nbytes, align=align)
+        stages: List[OpSpec] = []
+        for op in members:
+            in_off, in_scr = [], []
+            for t in op.inputs:
+                s = t.storage()
+                if s in internal:
+                    in_off.append(slots[s])
+                    in_scr.append(1)
+                else:
+                    in_off.append(plan._layout(t).byte_offset)
+                    in_scr.append(0)
+            s_out = op.output.storage()
+            if s_out in internal:
+                out_off, out_scr = slots[s_out], 1
+            else:
+                out_off, out_scr = plan._layout(op.output).byte_offset, 0
+            q = X.op_quant(op, quant)
+            stages.append(OpSpec(
+                kind=op.kind,
+                in_off=tuple(in_off),
+                in_shape=tuple(tuple(t.shape) for t in op.inputs),
+                out_off=out_off,
+                out_shape=tuple(op.output.shape),
+                dtype="i8" if op.output.storage().dtype_bytes == 1
+                else "f32",
+                meta=_canon_meta(op),
+                qmeta=_canon_qmeta(op, q),
+                in_scratch=tuple(in_scr),
+                out_scratch=out_scr))
+        ext = self._chain_ext_inputs(members, internal)
+        out_lay = plan._layout(cat.output)
+        return OpSpec(
+            kind="fused",
+            in_off=tuple(plan._layout(t).byte_offset for t in ext),
+            in_shape=tuple(tuple(t.shape) for t in ext),
+            out_off=out_lay.byte_offset,
+            out_shape=out_lay.shape,
+            dtype="i8" if out_lay.dtype_bytes == 1 else "f32",
+            meta=(cat.params["fuse_chain"],),
+            stages=tuple(stages),
+            scratch_rows=total)          # bytes in the flat program
+
+    @staticmethod
+    def _chain_ext_inputs(members: List[Op], internal) -> List:
+        """The chain's external data inputs, deduped in first-read order —
+        the DMA order of the streaming fused kernel."""
+        ext, seen = [], set()
+        for op in members:
+            for t in op.inputs:
+                s = t.storage()
+                if s.kind == "weight" or s in internal or s in seen:
+                    continue
+                seen.add(s)
+                ext.append(t)
+        return ext
 
     def lower_blocks(self, bplan: BlockPlan,
                      quant: Optional[X.QuantSpec] = None) -> Tuple:
         """BlockPlan -> row-blocked OpSpec sequence: arena *row* offsets and
         ``(rows, used)`` block shapes from the legalised
-        :class:`~repro.core.planner.BlockLayout` records."""
+        :class:`~repro.core.planner.BlockLayout` records. A fused band
+        chain lowers to ONE spec at its first member's position (stage
+        offsets are arena rows, or scratch-slot rows for chain-internal
+        operands)."""
         from repro.kernels.arena_ops import OpSpec
         dtype = "i8" if bplan.dtype_bytes == 1 else "f32"
+        chains = _fused_chains(bplan.order)
+        emitted: set = set()
         specs: List[OpSpec] = []
         for op in bplan.order:
             if op.kind == "reshape":
+                continue
+            cname = op.params.get("fuse_chain")
+            if cname is not None:
+                if cname not in emitted:
+                    emitted.add(cname)
+                    specs.append(self._fused_block_spec(
+                        bplan, chains[cname], quant))
                 continue
             ins = [t for t in op.inputs if t.storage().kind != "weight"]
             assert len(ins) == len(op.inputs), \
@@ -247,22 +379,113 @@ class PallasExecutor:
                 out_rows=(out.rows, out.rowlen)))
         return tuple(specs)
 
+    def _fused_block_spec(self, bplan: BlockPlan, members: List[Op],
+                          quant: Optional[X.QuantSpec], window=None):
+        """One row-blocked spec for a fused band chain — or, given the
+        chain's staged :class:`~repro.core.planner.OpWindow`, the streaming
+        variant, whose stages run entirely inside the VMEM scratch buffer
+        (every operand gets an ``include_io`` scratch slot; external inputs
+        are DMA'd in up front, the terminal output DMA'd back once)."""
+        from repro.kernels.arena_ops import OpSpec
+        dtype = "i8" if bplan.dtype_bytes == 1 else "f32"
+        L = bplan.arena_rowlen
+        sub = bplan.tiling[0]
+        cat = members[-1]
+        internal = {op.output.storage() for op in members[:-1]}
+        streaming = window is not None
+
+        def rows_of(s):
+            lay = bplan.layouts.get(s)
+            return lay.rows if lay is not None else int(s.shape[-3])
+
+        def used_of(s):
+            lay = bplan.layouts.get(s)
+            return lay.rowlen if lay is not None \
+                else int(s.shape[-2]) * int(s.shape[-1])
+
+        slots, total = fused_slots(members, rows_of, round_to=sub,
+                                   include_io=streaming)
+        for s in internal:
+            assert used_of(s) <= L, \
+                f"scratch row of {s.name} wider than the arena row"
+
+        def place(t):
+            """(offset, (rows, used), scratch?) of one stage operand."""
+            s = t.storage()
+            if s in internal or streaming:
+                return slots[s], (rows_of(s), used_of(s)), 1
+            lay = bplan.layouts[s]
+            return lay.row_offset, (lay.rows, lay.rowlen), 0
+
+        stages: List[OpSpec] = []
+        for op in members:
+            placed = [place(t) for t in op.inputs]
+            o_off, o_rows, o_scr = place(op.output)
+            q = X.op_quant(op, quant)
+            stages.append(OpSpec(
+                kind=op.kind,
+                in_off=tuple(p[0] for p in placed),
+                in_shape=tuple(tuple(t.shape) for t in op.inputs),
+                out_off=o_off,
+                out_shape=tuple(op.output.shape),
+                dtype=dtype,
+                meta=_canon_meta(op),
+                qmeta=_canon_qmeta(op, q),
+                rowlen=L,
+                in_rows=tuple(p[1] for p in placed),
+                out_rows=o_rows,
+                in_scratch=tuple(p[2] for p in placed),
+                out_scratch=o_scr))
+        ext = self._chain_ext_inputs(members, internal)
+        out_lay = bplan.layout_of(cat.output)
+        spec = OpSpec(
+            kind="fused",
+            in_off=tuple(bplan.layout_of(t).row_offset for t in ext),
+            in_shape=tuple(tuple(t.shape) for t in ext),
+            out_off=out_lay.row_offset,
+            out_shape=tuple(cat.output.shape),
+            dtype=dtype,
+            meta=(cat.params["fuse_chain"],),
+            rowlen=L,
+            in_rows=tuple((bplan.layout_of(t).rows, bplan.layout_of(t).rowlen)
+                          for t in ext),
+            out_rows=(out_lay.rows, out_lay.rowlen),
+            stages=tuple(stages),
+            scratch_rows=total)
+        if streaming:
+            import dataclasses
+            assert window.win_rows == total, \
+                f"fused window/slot mismatch: {window.win_rows} vs {total}"
+            spec = dataclasses.replace(
+                spec, win_lo=window.lo, win_rows=window.win_rows,
+                in_slots=tuple(slots[t.storage()] for t in ext),
+                out_slot=slots[cat.output.storage()])
+        return spec
+
     def lower_stream(self, bplan: BlockPlan,
                      quant: Optional[X.QuantSpec] = None) -> Tuple:
         """BlockPlan -> streaming OpSpec sequence: the row-blocked specs
         with each op's live-window statics grafted on from the planner's
         :class:`~repro.core.planner.WindowSchedule` (1:1 — both skip
-        reshape views), so ``win_rows > 0`` selects the streaming grid
-        program in :mod:`repro.kernels.arena_ops`."""
+        reshape views and both emit one entry per fused chain), so
+        ``win_rows > 0`` selects the streaming grid program in
+        :mod:`repro.kernels.arena_ops`. Fused chains are re-lowered in
+        their streaming form (all stage operands scratch-resident)."""
         import dataclasses
         specs = self.lower_blocks(bplan, quant)
         ws = bplan.window_schedule()
+        chains = _fused_chains(bplan.order)
         assert len(specs) == len(ws.windows), \
             f"spec/window mismatch: {len(specs)} vs {len(ws.windows)}"
-        return tuple(
-            dataclasses.replace(s, win_lo=w.lo, win_rows=w.win_rows,
-                                win_starts=w.starts)
-            for s, w in zip(specs, ws.windows))
+        out: List = []
+        for s, w in zip(specs, ws.windows):
+            if s.kind == "fused":
+                out.append(self._fused_block_spec(
+                    bplan, chains[w.op_name], quant, window=w))
+            else:
+                out.append(dataclasses.replace(
+                    s, win_lo=w.lo, win_rows=w.win_rows, win_starts=w.starts))
+        return tuple(out)
 
     # -- execution ----------------------------------------------------------
 
@@ -298,6 +521,17 @@ class PallasExecutor:
         if reason is not None:
             raise ValueError(
                 f"pallas backend cannot lower {graph.name!r}: {reason}")
+        if weights is None and quant is None:
+            cached = self._autoparams.get((id(plan), seed))
+            if cached is not None and cached[0] is plan:
+                weights, quant = cached[1], cached[2]
+            else:
+                weights = X.synth_weights(graph, seed)
+                if X.needs_quant(graph):
+                    quant = X.calibrate(graph, seed, weights)
+                self._autoparams[(id(plan), seed)] = (plan, weights, quant)
+                while len(self._autoparams) > 32:
+                    self._autoparams.popitem(last=False)
         if weights is None:
             weights = X.synth_weights(graph, seed)
         if quant is None and X.needs_quant(graph):
@@ -317,6 +551,25 @@ class PallasExecutor:
                                              jnp.float32))
 
         bplan = self._legalised(plan)
+        route = (("stream" if self.mode == "streaming" else "blocks")
+                 if bplan is not None else "flat")
+        key = (id(plan), route, id(quant) if quant is not None else None)
+        cached = self._lowered.get(key)
+        if cached is not None and cached[0] is plan and cached[1] is quant:
+            specs = cached[2]
+            self._cache_hits += 1
+        else:
+            self._cache_misses += 1
+            if route == "stream":
+                specs = self.lower_stream(bplan, quant)
+            elif route == "blocks":
+                specs = self.lower_blocks(bplan, quant)
+            else:
+                specs = self.lower(plan, quant)
+            self._lowered[key] = (plan, quant, specs)
+            while len(self._lowered) > 32:
+                self._lowered.popitem(last=False)
+
         if bplan is not None:
             if self.mode == "streaming":
                 budget = self._resolve_budget()
@@ -327,22 +580,24 @@ class PallasExecutor:
                         f"VMEM: peak resident {ws.max_resident_bytes} bytes "
                         f"({ws.max_window_rows} live rows) exceeds the "
                         f"{budget}-byte budget")
-                specs = self.lower_stream(bplan, quant)
-            else:
-                if self.mode == "compiled":
-                    budget = self._resolve_budget()
-                    arena_bytes = bplan.total_rows * bplan.row_bytes
-                    if arena_bytes > budget:
-                        raise ValueError(
-                            f"arena of {graph.name!r} does not fit VMEM: "
-                            f"{arena_bytes} bytes ({bplan.total_rows} rows) "
-                            f"exceeds the {budget}-byte budget — "
-                            "mode='streaming' keeps only the live window "
-                            "resident")
-                specs = self.lower_blocks(bplan, quant)
+            elif self.mode == "compiled":
+                budget = self._resolve_budget()
+                # a fused chain's scratch is VMEM-resident alongside the
+                # whole arena while its super-kernel runs
+                scratch = max((s.scratch_rows for s in specs
+                               if s.kind == "fused"), default=0)
+                arena_bytes = (bplan.total_rows + scratch) * bplan.row_bytes
+                if arena_bytes > budget:
+                    raise ValueError(
+                        f"arena of {graph.name!r} does not fit VMEM: "
+                        f"{arena_bytes} bytes ({bplan.total_rows} rows"
+                        + (f" + {scratch} fused-scratch rows" if scratch
+                           else "")
+                        + f") exceeds the {budget}-byte budget — "
+                        "mode='streaming' keeps only the live window "
+                        "resident")
             arena = self._seed_block_arena(bplan, graph, inputs)
         else:
-            specs = self.lower(plan, quant)
             arena = np.zeros(plan.peak_bytes, np.uint8)
             for t in graph.tensors:
                 if t.kind == "input":

@@ -25,7 +25,10 @@ class Tensor:
     """A tensor value flowing through the graph.
 
     ``kind`` is one of ``input`` (model input), ``intermediate``, ``output``
-    (model output) or ``weight`` (excluded from the arena).
+    (model output), ``weight`` (excluded from the arena) or ``scratch``
+    (chain-internal value of a fused band chain: materialised only inside
+    the fused kernel's VMEM scratch, never placed in the arena — see
+    :mod:`repro.core.pipeline` FusePass).
     """
 
     name: str
@@ -162,8 +165,20 @@ class Graph:
         return list(self._tensors.values())
 
     def arena_tensors(self) -> List[Tensor]:
-        """Tensors that occupy the arena: everything except weights, with
-        aliases resolved to their storage owner."""
+        """Tensors that occupy the arena: everything except weights and
+        fused-chain scratch, with aliases resolved to their storage owner."""
+        seen: List[Tensor] = []
+        for t in self._tensors.values():
+            s = t.storage()
+            if s.kind not in ("weight", "scratch") and s not in seen:
+                seen.append(s)
+        return seen
+
+    def data_tensors(self) -> List[Tensor]:
+        """All value-carrying storage tensors — arena tensors *plus* fused-
+        chain scratch (everything except weights). Calibration iterates
+        these: scratch tensors still need activation ranges even though
+        they never occupy the arena."""
         seen: List[Tensor] = []
         for t in self._tensors.values():
             s = t.storage()
@@ -184,12 +199,14 @@ class Graph:
         for i, op in enumerate(order):
             for t in op.inputs:
                 s = t.storage()
-                if s.kind == "weight":
+                if s.kind in ("weight", "scratch"):
                     continue
                 first.setdefault(s, 0 if s.kind == "input" else i)
                 last[s] = i
             for t in op.outputs:
                 s = t.storage()
+                if s.kind == "scratch":
+                    continue
                 first.setdefault(s, i)
                 last.setdefault(s, i)
                 if s.kind == "output":

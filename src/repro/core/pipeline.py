@@ -101,6 +101,11 @@ class CompileOptions:
     split: str = "auto"           # "auto" (size-gated) | "on" | "off"
     split_max_parts: int = 8
     split_ops_limit: int = 150    # "auto": skip auto_split on larger graphs
+    fuse: str = "auto"            # band-chain fusion: "auto" | "on" | "off"
+    #: VMEM budget (bytes) the FusePass gates per-chain scratch estimates
+    #: against; None = the REPRO_DMO_VMEM_BUDGET env var, else the pallas
+    #: backend default (16 MiB).
+    fuse_vmem_budget: Optional[int] = None
     verify: str = "auto"          # "auto" | "constraints" | "numeric" | "off"
     backend: str = "numpy"        # executor backend a plan is compiled for
 
@@ -354,6 +359,95 @@ def _has_aliases(g: Graph) -> bool:
     return any(t.alias_of is not None for t in g.tensors)
 
 
+def _chain_scratch_bytes(g: Graph, members: List[Op]) -> int:
+    """Conservative VMEM-scratch estimate for one candidate fused chain:
+    the blocked program's packing (chain-internal scratch rows times the
+    chain's widest tile-rounded image row) when the chain is dtype-uniform,
+    else the flat byte packing. An estimate only — the backend derives the
+    exact packing from the legalised layouts at lowering time — but close
+    enough to refuse chains no executor could ever launch."""
+    internal = {op.output.storage() for op in members[:-1]}
+    dbs = {s.dtype_bytes
+           for op in members
+           for s in [op.output.storage()]
+           + [t.storage() for t in op.inputs]
+           if s.kind != "weight"}
+    if len(dbs) == 1:
+        db = next(iter(dbs))
+        sub, lanes = P.TPU_TILES.get(db, (8, 128))
+        _, total = P.fused_slots(members, lambda s: int(s.shape[-3]),
+                                 round_to=sub)
+        width = max(int(s.shape[-2]) * int(s.shape[-1]) for s in internal)
+        return total * P._round_up(width, lanes) * db
+    _, total = P.fused_slots(members, lambda s: s.nbytes,
+                             align=max(s.dtype_bytes for s in internal))
+    return total
+
+
+@register_pass
+class FusePass(Pass):
+    """Fused band-chain super-kernels: group each split region's band chain
+    (producer bands → consumer bands → the reassembling concat, recovered
+    from the ``split_src``/``band_pad`` provenance SplitPass stamps) into a
+    fused unit the Pallas layer lowers to ONE kernel whose chain-internal
+    tensors live in VMEM scratch. The fused variant re-kinds those tensors
+    to ``scratch`` so they drop out of arena placement entirely — the
+    planned banded peak falls below the O_s-only split peak. Chains whose
+    estimated scratch exceeds the VMEM budget are left unfused (no executor
+    could launch them); the plain split variant always remains a planning
+    candidate."""
+    name = "fuse"
+
+    def run(self, state: PipelineState) -> None:
+        opt = state.options
+        if opt.fuse == "off":
+            state.log.append("fuse: disabled")
+            return
+        from repro.core.splitting import find_band_chains, fuse_chains
+        for label, g in list(state.variants):
+            if label != "split":
+                continue
+            chains = find_band_chains(g)
+            if not chains:
+                state.log.append("fuse: no fusable band chains")
+                continue
+            budget = self._budget(opt)
+            keep: List[List[Op]] = []
+            skipped = 0
+            for ch in chains:
+                est = _chain_scratch_bytes(g, ch)
+                if est <= budget:
+                    keep.append(ch)
+                else:
+                    skipped += 1
+                    state.log.append(
+                        f"fuse: chain {ch[-1].name!r} refused — estimated "
+                        f"scratch {est} bytes exceeds the {budget}-byte "
+                        "VMEM budget (left unfused)")
+            if not keep:
+                continue
+            fg = fuse_chains(g, keep)
+            if fg is None:
+                continue
+            n_members = sum(len(ch) for ch in keep)
+            state.variants.append(("fuse", fg))
+            state.log.append(
+                f"fuse: {len(keep)} chain(s), {n_members} band ops -> "
+                f"{len(keep)} fused kernel(s)"
+                + (f"; {skipped} over-budget chain(s) left unfused"
+                   if skipped else ""))
+
+    @staticmethod
+    def _budget(opt: CompileOptions) -> int:
+        if opt.fuse_vmem_budget is not None:
+            return int(opt.fuse_vmem_budget)
+        env = os.environ.get("REPRO_DMO_VMEM_BUDGET", "").strip()
+        if env:
+            return int(env)
+        from repro.core.exec.pallas_backend import DEFAULT_VMEM_BUDGET
+        return DEFAULT_VMEM_BUDGET
+
+
 @register_pass
 class SerialisePass(Pass):
     """§II.B: candidate execution orders (eager / lazy / memory-greedy) per
@@ -365,6 +459,13 @@ class SerialisePass(Pass):
 
     def run(self, state: PipelineState) -> None:
         for i, (label, g) in enumerate(state.variants):
+            if any("fuse_chain" in op.params for op in g.ops):
+                # a fused chain's members must stay contiguous in execution
+                # order (one kernel per chain, stage weights consecutive) —
+                # fused variants keep construction order
+                state.log.append(f"serialise[{label}]: skipped "
+                                 "(fused chains pin the order)")
+                continue
             orders = candidate_orders(g)
             if len(orders) > 1:
                 state.orders[i] = orders
@@ -479,15 +580,17 @@ class VerifyPass(Pass):
         state.verified = "numeric"
         state.log.append("verify: arena execution bit-exact"
                          + (" (int8 quantised tier)" if quant else ""))
-        if state.winner == "split" and g is not state.original \
+        if state.winner in ("split", "fuse") and g is not state.original \
                 and _numeric_verifiable(state.original):
-            # split graphs compute the same network as their unsplit
-            # reference (band ops share the source op's weight draw, and
-            # calibration pools band ranges), so the arena execution must
-            # reproduce the *original* graph's outputs too: f32 bit-exact
-            # (band arithmetic replays the reference loop order), int8 to
-            # <= 1 LSB (a valid-padded pair can leave intermediate rows no
-            # band recomputes, nudging the pooled calibration range)
+            # split (and fused-split) graphs compute the same network as
+            # their unsplit reference (band ops share the source op's
+            # weight draw, and calibration pools band ranges — fusion only
+            # re-kinds chain internals to scratch, same op sequence), so
+            # the arena execution must reproduce the *original* graph's
+            # outputs too: f32 bit-exact (band arithmetic replays the
+            # reference loop order), int8 to <= 1 LSB (a valid-padded pair
+            # can leave intermediate rows no band recomputes, nudging the
+            # pooled calibration range)
             w0 = X.synth_weights(state.original, opt.seed)
             q0 = (X.calibrate(state.original, opt.seed, w0)
                   if X.needs_quant(state.original) else None)
@@ -654,7 +757,8 @@ def compile(graph: Graph, *, profile: str = "paper",
             method: str = "algorithmic", budget_s: Union[float, str] = 0.0,
             seed: int = 0, passes: Optional[Sequence[str]] = None,
             split: str = "auto", split_max_parts: int = 8,
-            split_ops_limit: int = 150, verify: str = "auto",
+            split_ops_limit: int = 150, fuse: str = "auto",
+            fuse_vmem_budget: Optional[int] = None, verify: str = "auto",
             backend: str = "numpy", cache: bool = True,
             disk_cache: Optional[bool] = None) -> CompiledPlan:
     """Compile ``graph`` to an arena plan through the registered pass chain.
@@ -671,6 +775,12 @@ def compile(graph: Graph, *, profile: str = "paper",
             :func:`default_passes`). Unknown names raise.
         split: operation-splitting mode (``auto``/``on``/``off``);
             ``split_ops_limit`` is the op-count gate for ``auto``.
+        fuse: band-chain fusion mode (``auto``/``on``/``off``): group each
+            split region's band chain into one fused super-kernel whose
+            intermediates live in VMEM scratch instead of the arena.
+            ``fuse_vmem_budget`` (bytes) overrides the per-chain scratch
+            gate (default: ``REPRO_DMO_VMEM_BUDGET`` env, else 16 MiB);
+            over-budget chains are left unfused.
         verify: verification mode (``auto``/``constraints``/``numeric``/``off``).
         backend: executor backend the plan is compiled for (``"numpy"`` or
             ``"pallas"``); ``"pallas"`` adds a verify tier cross-checking
@@ -701,6 +811,8 @@ def compile(graph: Graph, *, profile: str = "paper",
         raise ValueError(f"unknown O_s method {method!r}")
     if split not in ("auto", "on", "off"):
         raise ValueError(f"unknown split mode {split!r}")
+    if fuse not in ("auto", "on", "off"):
+        raise ValueError(f"unknown fuse mode {fuse!r}")
     if verify not in ("auto", "constraints", "numeric", "off"):
         raise ValueError(f"unknown verify mode {verify!r}")
     if backend not in X.available_backends():
@@ -716,7 +828,8 @@ def compile(graph: Graph, *, profile: str = "paper",
     opts = CompileOptions(profile=profile, method=method, budget_s=budget_s,
                           seed=seed, split=split,
                           split_max_parts=split_max_parts,
-                          split_ops_limit=split_ops_limit, verify=verify,
+                          split_ops_limit=split_ops_limit, fuse=fuse,
+                          fuse_vmem_budget=fuse_vmem_budget, verify=verify,
                           backend=backend)
     names = tuple(passes) if passes is not None else default_passes()
     unknown = [n for n in names if n not in _PASSES]
@@ -763,7 +876,7 @@ def compile(graph: Graph, *, profile: str = "paper",
         baseline=state.baseline, passes=names, log=state.log, key=key[0],
         winner=state.winner, verified=state.verified,
         recompute_elems=(state.recompute_elems
-                         if state.winner == "split" else 0),
+                         if state.winner in ("split", "fuse") else 0),
         compile_s=time.perf_counter() - t0, backend=backend)
     if cache:
         _PLAN_CACHE[key] = result

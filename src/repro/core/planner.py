@@ -565,6 +565,67 @@ def staged_slots(in_rows: Sequence[int], out_rows: int, sub: int,
     return tuple(offs), out_slot, _round_up(cur, sub)
 
 
+def fused_slots(members: Sequence[Op], size_of, align: int = 1,
+                round_to: int = 1, include_io: bool = False,
+                ) -> Tuple[Dict[Tensor, int], int]:
+    """Scratch-slot packing for one fused band chain.
+
+    The chain's internal tensors (every member output except the last
+    member's — the terminal, arena-written concat) live only inside the
+    fused kernel's VMEM scratch. This runs the lowest-feasible-offset
+    allocator over *member-local* liveness scopes (units are whatever
+    ``size_of`` returns — rows for the blocked/streaming programs, bytes
+    for the flat one), so a mid band's slot is reused as soon as its
+    consumer band has read it, while the per-band outputs accumulate until
+    the concat. ``include_io=True`` additionally packs the chain's external
+    inputs and its terminal output into the scratch (the streaming program
+    stages *everything* in VMEM: inputs are DMA'd up front, the output is
+    DMA'd back at the end) — and since an external input dies at its last
+    in-chain read, the output slot can reuse its space.
+
+    Slots pack tight (like :func:`staged_slots` — the arena-side DMA
+    offsets are the aligned side); only the total is rounded up to
+    ``round_to``. Returns ``(slot offset per tensor, total scratch
+    units)``. The kernel layer, the window schedule and the FusePass budget
+    estimate all derive the packing from this one function."""
+    n = len(members)
+    internal = {op.output.storage() for op in members[:-1]}
+    first: Dict[Tensor, int] = {}
+    last: Dict[Tensor, int] = {}
+    tensors: List[Tensor] = []
+
+    def touch(s: Tensor, i: int) -> None:
+        if s not in first:
+            first[s] = i
+            tensors.append(s)
+        last[s] = max(last.get(s, i), i)
+
+    for i, op in enumerate(members):
+        for t in op.inputs:
+            s = t.storage()
+            if s.kind == "weight":
+                continue
+            if s in internal:
+                touch(s, i)
+            elif include_io:
+                touch(s, 0)        # resident from the up-front DMA
+                last[s] = max(last[s], i)
+        s = op.output.storage()
+        if s in internal:
+            touch(s, i)
+        elif include_io:
+            touch(s, i)
+            last[s] = n - 1        # held until the write-back DMA
+    scopes = {s: (first[s], last[s]) for s in tensors}
+    sizes = {s: int(size_of(s)) for s in tensors}
+    placed: Dict[Tensor, int] = {}
+    for s in tensors:              # first-touch (production) order
+        placed[s] = _lowest_feasible(s, placed, scopes, list(members), {},
+                                     sizes=sizes, align=align)
+    total = max((placed[s] + sizes[s] for s in tensors), default=0)
+    return placed, _round_up(total, max(1, round_to))
+
+
 def _roll_geometry(op: Op) -> Tuple[int, int, int, int]:
     """(kh, sh, dh, ph) of a row-streaming op, band-aware."""
     kh = op.params["kernel"][0]
@@ -687,6 +748,37 @@ class WindowSchedule:
         return "\n".join(lines)
 
 
+def _fused_window(bplan: BlockPlan, members: Sequence[Op],
+                  sub: int) -> OpWindow:
+    """One staged window for a whole fused band chain. The streaming fused
+    kernel DMAs every external-input block into VMEM up front, runs all
+    chain stages inside the scratch buffer and writes only the terminal
+    block back — so the resident rows are the ``include_io``
+    :func:`fused_slots` packing (chain scratch plus the staged I/O blocks),
+    and the row extent spans the external operands' arena placements.
+    Chain-internal tensors have no layouts; their scratch rows are one
+    arena row per image row."""
+    internal = {op.output.storage() for op in members[:-1]}
+
+    def rows_of(s: Tensor) -> int:
+        lay = bplan.layouts.get(s)
+        return lay.rows if lay is not None else int(s.shape[-3])
+
+    _, total = fused_slots(members, rows_of, round_to=sub, include_io=True)
+    ext: List[BlockLayout] = []
+    for op in members:
+        for t in op.inputs:
+            s = t.storage()
+            if s.kind != "weight" and s not in internal:
+                ext.append(bplan.layouts[s])
+    ext.append(bplan.layouts[members[-1].output.storage()])
+    lo = min(l.row_offset for l in ext)
+    hi = max(l.row_offset + l.rows for l in ext)
+    return OpWindow(members[-1].params["fuse_chain"], "fused",
+                    (lo // sub) * sub, _round_up(hi, sub),
+                    win_rows=total, resident_rows=total)
+
+
 def window_schedule(bplan: BlockPlan) -> "WindowSchedule":
     """Derive the live-window schedule from a legalised plan.
 
@@ -695,11 +787,25 @@ def window_schedule(bplan: BlockPlan) -> "WindowSchedule":
     kind stages whole operand blocks via :func:`staged_slots` (each block
     is contiguous, so a scattered multi-operand extent — e.g. a
     band-reassembling concat — costs only the sum of its block heights,
-    not the span between them)."""
+    not the span between them). A fused band chain contributes ONE staged
+    window (at the first member's position, named after the chain) sized by
+    :func:`_fused_window`."""
     sub = bplan.tiling[0]
     windows: List[OpWindow] = []
+    chains: Dict[str, List[Op]] = {}
+    for op in bplan.order:
+        cname = op.params.get("fuse_chain")
+        if cname is not None:
+            chains.setdefault(cname, []).append(op)
+    emitted: set = set()
     for op in bplan.order:
         if op.kind == "reshape":
+            continue
+        cname = op.params.get("fuse_chain")
+        if cname is not None:
+            if cname not in emitted:
+                emitted.add(cname)
+                windows.append(_fused_window(bplan, chains[cname], sub))
             continue
         ins = [t for t in op.inputs if t.storage().kind != "weight"]
         lays = [bplan.layout_of(t) for t in ins]
@@ -741,6 +847,10 @@ def _compute_overlaps(order: List[Op], overlap_fn: Optional[OverlapFn],
     for oi, op in enumerate(order):
         if not op.outputs:
             continue
+        if op.output.storage().kind == "scratch":
+            # fused-chain internal write: the tensor has no arena placement
+            # (and no scope entry) — there is nothing to relax
+            continue
         if op.output.alias_of is not None:
             # §II.C removal: this op writes into an aggregated view — its
             # write offsets shift, so the overlap relaxation is dropped
@@ -748,7 +858,7 @@ def _compute_overlaps(order: List[Op], overlap_fn: Optional[OverlapFn],
             continue
         for ii, t in enumerate(op.inputs):
             s = t.storage()
-            if s.kind == "weight" or s.kind == "output":
+            if s.kind in ("weight", "output", "scratch"):
                 continue
             if t.alias_of is not None:
                 continue

@@ -36,12 +36,17 @@ diagonal overlap compose (the paper's §II.A + §III future-work item), and
 """
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.graph import Graph, Op, Tensor, op_pads
 from repro.core.planner import plan_dmo, plan_original
 
 _SPLITTABLE = ("conv2d", "depthwise_conv2d", "pool")
+
+#: Op kinds a fused band-chain super-kernel can run as an in-VMEM stage
+#: (the kinds `_BODIES` implements over the routed memory layer).
+FUSABLE_KINDS = ("conv2d", "depthwise_conv2d", "pool", "elementwise",
+                 "concat")
 
 
 def _rows_needed(op: Op, o0: int, o1: int) -> Tuple[int, int]:
@@ -145,6 +150,148 @@ def split_pair(g: Graph, ia: int, parts: int
     # bottom leftover rows)
     recompute = (halo_rows - covered) * a.output.shape[1] * a.output.shape[2]
     return ng, max(0, recompute)
+
+
+def _is_band(op: Op) -> bool:
+    """A row band produced by :func:`split_pair`: conv-family op carrying
+    the explicit band provenance params."""
+    return (op.kind in _SPLITTABLE and "row_range" in op.params
+            and "band_pad" in op.params and "split_src" in op.params)
+
+
+def find_band_chains(g: Graph) -> List[List[Op]]:
+    """Discover fusable band chains in a split graph.
+
+    A chain is the whole split region of :func:`split_pair`: every producer
+    band, every consumer band, and the axis-0 concat that reassembles them —
+    discovered backwards from each concat through band provenance. A chain
+    qualifies for fusion only when its internal tensors (every member output
+    except the concat's) are consumed exclusively inside the chain (so they
+    can become VMEM scratch, invisible to the arena) and the members sit
+    contiguously in graph order ending at the concat (so the fused kernel
+    replaces a contiguous run of ops and the surrounding execution order is
+    untouched). Returns chains as member-op lists in graph order, concat
+    last.
+    """
+    producers: Dict[Tensor, Op] = {}
+    consumers: Dict[Tensor, List[Op]] = {}
+    index: Dict[int, int] = {}
+    for i, op in enumerate(g.ops):
+        index[id(op)] = i
+        for t in op.outputs:
+            producers[t.storage()] = op
+        for t in op.inputs:
+            s = t.storage()
+            if s.kind != "weight":
+                consumers.setdefault(s, []).append(op)
+    aliased = {t.alias_of.storage() for t in g.tensors
+               if t.alias_of is not None}
+    chains: List[List[Op]] = []
+    for cat in g.ops:
+        if cat.kind != "concat" or cat.params.get("axis", -1) != 0:
+            continue
+        # transitive closure of band producers behind the concat
+        members: Dict[int, Op] = {id(cat): cat}
+        frontier = [t.storage() for t in cat.inputs]
+        while frontier:
+            s = frontier.pop()
+            p = producers.get(s)
+            if p is None or not _is_band(p) or id(p) in members:
+                continue  # external chain input: stays in the arena
+            members[id(p)] = p
+            frontier.extend(t.storage() for t in p.inputs
+                            if t.storage().kind != "weight")
+        if len(members) < 3:  # at least one producer/consumer band pair
+            continue
+        internal = {t.storage() for op in members.values() if op is not cat
+                    for t in op.outputs}
+        idxs = sorted(index[id(op)] for op in members.values())
+        if not (
+            # contiguous run ending at the concat
+            idxs == list(range(idxs[0], idxs[-1] + 1))
+            and idxs[-1] == index[id(cat)]
+            and all(op.kind in FUSABLE_KINDS for op in members.values())
+            # internal tensors: chain-private, unaliased plain intermediates
+            and all(s.kind == "intermediate" and s.alias_of is None
+                    and s not in aliased
+                    and all(id(c) in members for c in consumers.get(s, []))
+                    for s in internal)
+            # in-VMEM stages need batch-1 HWC geometry (the scratch buffer
+            # is a rows x rowlen 2-D block, one image row per scratch row)
+            and all(len(s.shape) == 3 for s in internal)
+        ):
+            continue
+        chains.append([g.ops[i] for i in idxs])
+    return chains
+
+
+def fuse_chains(g: Graph, chains: Optional[List[List[Op]]] = None
+                ) -> Optional[Graph]:
+    """Rebuild ``g`` with each band chain marked for fused execution.
+
+    Chain-internal tensors are re-kinded ``"scratch"`` — they drop out of
+    :meth:`Graph.arena_tensors`/:meth:`Graph.scopes` and therefore out of
+    arena placement entirely — and every member op gains
+    ``fuse_chain=<concat name>`` / ``fuse_stage=<k>`` params, which the
+    Pallas layer uses to emit ONE kernel per chain (stage order = graph
+    order). Op sequence, kinds, names and numeric semantics are unchanged,
+    so weight synthesis and calibration stay position-for-position aligned
+    with the unfused graph. Returns ``None`` when there is nothing to fuse.
+    """
+    if chains is None:
+        chains = find_band_chains(g)
+    if not chains:
+        return None
+    chain_of: Dict[int, Tuple[str, int]] = {}
+    internal: set = set()
+    for ch in chains:
+        cat = ch[-1]
+        for j, op in enumerate(ch):
+            chain_of[id(op)] = (cat.name, j)
+            if op is not cat:
+                internal.update(t.storage() for t in op.outputs)
+
+    ng = Graph(g.name + "_fused")
+    mapping: Dict[Tensor, Tensor] = {}
+
+    def map_t(t: Tensor) -> Tensor:
+        if t in mapping:
+            return mapping[t]
+        if t.alias_of is not None:
+            base = map_t(t.alias_of)
+            nt = ng.tensor(t.name, t.shape, t.dtype_bytes, t.kind,
+                           alias_of=base)
+        else:
+            kind = "scratch" if t in internal else t.kind
+            nt = ng.tensor(t.name, t.shape, t.dtype_bytes, kind)
+        mapping[t] = nt
+        return nt
+
+    for op in g.ops:
+        params = dict(op.params)
+        if id(op) in chain_of:
+            cname, stage = chain_of[id(op)]
+            params.update(fuse_chain=cname, fuse_stage=stage)
+        ng.add(Op(op.kind, [map_t(t) for t in op.inputs],
+                  [map_t(t) for t in op.outputs], params, op.name))
+    ng.validate()
+    return ng
+
+
+def chain_members(g: Graph) -> Dict[str, List[Op]]:
+    """Fused chains of a graph, keyed by chain name, members in graph order
+    (``fuse_stage`` ascending — asserted, since the Pallas layer relies on
+    graph order matching stage order)."""
+    out: Dict[str, List[Op]] = {}
+    for op in g.ops:
+        c = op.params.get("fuse_chain")
+        if c is not None:
+            out.setdefault(c, []).append(op)
+    for name, ops in out.items():
+        stages = [op.params["fuse_stage"] for op in ops]
+        assert stages == list(range(len(ops))), \
+            f"chain {name!r}: graph order disagrees with stage order"
+    return out
 
 
 def auto_split(g: Graph, max_parts: int = 8, rounds: int = 3,

@@ -118,6 +118,20 @@ class OpSpec:
     win_lo: int = 0                    # live-window extent low edge (rows)
     win_rows: int = 0                  # VMEM-resident rows (0 = non-streaming)
     win_starts: Tuple[int, ...] = ()   # rolling-window fetch starts per tile
+    #: Fused band-chain super-kernel (``kind == "fused"``): the chain's
+    #: member ops in graph order as nested stage specs. Stage offsets whose
+    #: ``in_scratch``/``out_scratch`` flag is set are *scratch-local* slot
+    #: offsets (rows blocked / bytes flat, packed by
+    #: :func:`repro.core.planner.fused_slots`); chain-internal tensors
+    #: therefore never touch the arena — one ``pallas_call`` runs the whole
+    #: chain with its halos resident in VMEM and only the terminal stage
+    #: (the reassembling concat) writes back at the planned offset.
+    stages: Tuple["OpSpec", ...] = ()
+    scratch_rows: int = 0              # chain scratch: rows (blocked) | bytes (flat)
+    in_scratch: Tuple[int, ...] = ()   # stage flag: input i reads the scratch ref
+    out_scratch: int = 0               # stage flag: output writes the scratch ref
+    in_slots: Tuple[int, ...] = ()     # fused streaming: ext-input scratch slots
+    out_slot: int = 0                  # fused streaming: terminal-output slot
 
 
 def _elems(shape: Tuple[int, ...]) -> int:
@@ -147,41 +161,54 @@ def _sub(dtype: str) -> int:
 
 
 class _FlatMem:
-    """Flat byte-arena accessor: bitcast typed windows at byte offsets."""
+    """Flat byte-arena accessor: bitcast typed windows at byte offsets.
+
+    Per-operand refs resolve through ``_in_ref``/``_out_ref`` (the arena ref
+    for plain ops); the fused-chain subclasses override them to route
+    scratch-flagged operands to the chain's VMEM scratch buffer."""
 
     def __init__(self, ref, spec: OpSpec):
         self.ref, self.spec = ref, spec
         self.isz = _isz(spec.dtype)
 
-    def _read(self, byte_off, elems: int):
+    def _in_ref(self, i: int):
+        return self.ref
+
+    def _out_ref(self):
+        return self.ref
+
+    def _read(self, ref, byte_off, elems: int):
         if self.spec.dtype == "i8":
-            raw = self.ref[pl.dslice(byte_off, elems)]
+            raw = ref[pl.dslice(byte_off, elems)]
             return jax.lax.bitcast_convert_type(raw, jnp.int8)
-        raw = self.ref[pl.dslice(byte_off, 4 * elems)].reshape(elems, 4)
+        raw = ref[pl.dslice(byte_off, 4 * elems)].reshape(elems, 4)
         return jax.lax.bitcast_convert_type(raw, jnp.float32)
 
     def read_t(self, i: int):
         """Input ``i`` as a typed tensor in its view shape."""
         shape = self.spec.in_shape[i]
-        return self._read(self.spec.in_off[i], _elems(shape)).reshape(shape)
+        return self._read(self._in_ref(i), self.spec.in_off[i],
+                          _elems(shape)).reshape(shape)
 
     def read_row(self, i: int, iy):
         """One image row (W*C elements) of input ``i`` at a traced row
         index."""
         row = _elems(self.spec.in_shape[i][-2:])
-        return self._read(self.spec.in_off[i] + iy * row * self.isz, row)
+        return self._read(self._in_ref(i),
+                          self.spec.in_off[i] + iy * row * self.isz, row)
 
-    def _write(self, byte_off, value):
+    def _write(self, ref, byte_off, value):
         flat = value.reshape(-1)
         raw = jax.lax.bitcast_convert_type(flat, jnp.uint8).reshape(-1)
-        self.ref[pl.dslice(byte_off, raw.size)] = raw
+        ref[pl.dslice(byte_off, raw.size)] = raw
 
     def write(self, value):
-        self._write(self.spec.out_off, value)
+        self._write(self._out_ref(), self.spec.out_off, value)
 
     def write_row(self, oy, value):
         row = _elems(self.spec.out_shape[-2:])
-        self._write(self.spec.out_off + oy * row * self.isz, value)
+        self._write(self._out_ref(),
+                    self.spec.out_off + oy * row * self.isz, value)
 
     def fori_rows(self, oh: int, body) -> None:
         """Sequential walk over every output row (§III.F: keep it serial)."""
@@ -215,31 +242,65 @@ class _BlockMem:
         self.dt = _jnp_dtype(spec.dtype)
         self.L = spec.rowlen
 
+    def _in_ref(self, i: int):
+        return self.ref
+
+    def _out_ref(self):
+        return self.ref
+
     def read_t(self, i: int):
         rows, used = self.spec.in_rows[i]
         shape = self.spec.in_shape[i]
-        block = self.ref[pl.dslice(self.spec.in_off[i], rows), :]
+        block = self._in_ref(i)[pl.dslice(self.spec.in_off[i], rows), :]
         flat = block[:, :used].reshape(rows * used)
         return flat[:_elems(shape)].reshape(shape)
 
     def read_row(self, i: int, iy):
         used = _elems(self.spec.in_shape[i][-2:])
-        row = self.ref[pl.dslice(self.spec.in_off[i] + iy, 1), :]
+        row = self._in_ref(i)[pl.dslice(self.spec.in_off[i] + iy, 1), :]
         return row.reshape(self.L)[:used]
 
     def write(self, value):
         rows, used = self.spec.out_rows
-        self.ref[pl.dslice(self.spec.out_off, rows), :] = \
+        self._out_ref()[pl.dslice(self.spec.out_off, rows), :] = \
             _out_block(value, rows, used, self.L, self.dt)
 
     def write_row(self, oy, value):
         used = _elems(self.spec.out_shape[-2:])
         row = value.reshape(1, used).astype(self.dt)
-        self.ref[pl.dslice(self.spec.out_off + oy, 1), :] = \
+        self._out_ref()[pl.dslice(self.spec.out_off + oy, 1), :] = \
             _pad_cols(row, 1, used, self.L, self.dt)
 
     def fori_rows(self, oh: int, body) -> None:
         jax.lax.fori_loop(0, oh, body, 0)
+
+
+class _RoutedMem:
+    """Mixin for fused-chain stages: each operand resolves to the arena ref
+    or to the chain's VMEM scratch ref per the stage spec's
+    ``in_scratch``/``out_scratch`` flags. Scratch-flagged offsets are
+    scratch-local slot positions; arena-flagged ones the plan's placements —
+    so the written-once bodies run unmodified while chain-internal values
+    stay VMEM-resident."""
+
+    def __init__(self, arena_ref, scratch_ref, spec: OpSpec):
+        super().__init__(arena_ref, spec)
+        self.scratch_ref = scratch_ref
+
+    def _in_ref(self, i: int):
+        flags = self.spec.in_scratch
+        return self.scratch_ref if flags and flags[i] else self.ref
+
+    def _out_ref(self):
+        return self.scratch_ref if self.spec.out_scratch else self.ref
+
+
+class _RoutedFlatMem(_RoutedMem, _FlatMem):
+    pass
+
+
+class _RoutedBlockMem(_RoutedMem, _BlockMem):
+    pass
 
 
 class _StreamRollMem:
@@ -546,6 +607,35 @@ def _plain_kernel(*refs, spec: OpSpec):
     _BODIES[spec.kind](_mem(refs[-1], spec), *refs[1:-1], spec=spec)
 
 
+def spec_weight_count(spec: OpSpec) -> int:
+    """Weight operands a lowered spec consumes (a fused chain consumes all
+    of its stages' weights, in stage order)."""
+    if spec.kind == "fused":
+        return sum(1 for st in spec.stages if st.kind in WEIGHTED_KINDS)
+    return 1 if spec.kind in WEIGHTED_KINDS else 0
+
+
+def _fused_kernel(*refs, spec: OpSpec):
+    """Fused band-chain super-kernel (flat or row-blocked program): refs are
+    (arena_in, *stage_weights, arena_out, scratch). Stages run in graph
+    order against the aliased arena-out ref; chain-internal operands route
+    to the VMEM scratch ref per their stage flags, so intermediate bands and
+    their halo rows never touch the arena — only the terminal stage (the
+    reassembling concat) writes back at the planned offset. Stage order is
+    the graph order, so every read of the chain input precedes the terminal
+    write: the planner may overlap the chain's input and output via plain
+    disjoint liveness."""
+    o_ref, scratch = refs[-2], refs[-1]
+    w_refs = refs[1:-2]
+    wi = 0
+    for st in spec.stages:
+        nw = 1 if st.kind in WEIGHTED_KINDS else 0
+        cls = _RoutedBlockMem if st.rowlen else _RoutedFlatMem
+        _BODIES[st.kind](cls(o_ref, scratch, st), *w_refs[wi:wi + nw],
+                         spec=st)
+        wi += nw
+
+
 # ---------------------------------------------------------------------------
 # Streaming grid programs: arena in pltpu.ANY (HBM), live window in VMEM.
 # ---------------------------------------------------------------------------
@@ -632,6 +722,46 @@ def _stream_stage_kernel(a_ref, *rest, spec: OpSpec, offs, out_slot):
     _BODIES[spec.kind](mem, *w_refs, spec=spec)
 
 
+def _stream_fused_kernel(a_ref, *rest, spec: OpSpec):
+    """Streaming fused band chain: stage every *external* input block from
+    the ANY arena into its packed VMEM slot (fetches pipelined over two
+    rotating semaphores, exactly the staged program), run ALL chain stages
+    entirely inside the scratch buffer (stage specs carry scratch-local slot
+    offsets for every operand — internals, externals and the terminal
+    output alike), then copy the terminal output block back in one DMA. The
+    chain's VMEM residency is the :func:`repro.core.planner.fused_slots`
+    ``include_io`` packing = the window schedule's ``win_rows``."""
+    nw = spec_weight_count(spec)
+    w_refs, o_ref = rest[:nw], rest[nw]
+    buf, in_sems, out_sem = rest[nw + 1:]
+
+    cps = [pltpu.make_async_copy(
+        o_ref.at[pl.dslice(spec.in_off[i], rows), :],
+        buf.at[pl.dslice(spec.in_slots[i], rows), :],
+        in_sems.at[i % 2])
+        for i, (rows, _) in enumerate(spec.in_rows)]
+    for cp in cps[:2]:
+        cp.start()
+    for i, cp in enumerate(cps):
+        cp.wait()
+        if i + 2 < len(cps):
+            cps[i + 2].start()
+
+    wi = 0
+    for st in spec.stages:
+        snw = 1 if st.kind in WEIGHTED_KINDS else 0
+        _BODIES[st.kind](_BlockMem(buf, st), *w_refs[wi:wi + snw], spec=st)
+        wi += snw
+
+    rows, _ = spec.out_rows
+    cp = pltpu.make_async_copy(
+        buf.at[pl.dslice(spec.out_slot, rows), :],
+        o_ref.at[pl.dslice(spec.out_off, rows), :],
+        out_sem)
+    cp.start()
+    cp.wait()
+
+
 def _apply_stream(arena: jax.Array, spec: OpSpec,
                   weights: Tuple[jax.Array, ...], interpret: bool):
     dt = _jnp_dtype(spec.dtype)
@@ -645,7 +775,17 @@ def _apply_stream(arena: jax.Array, spec: OpSpec,
         input_output_aliases={0: 0},
         interpret=interpret,
     )
-    if spec.win_starts:                        # rolling conv/dw/pool window
+    if spec.kind == "fused":                   # band-chain super-kernel
+        fn = pl.pallas_call(
+            functools.partial(_stream_fused_kernel, spec=spec),
+            scratch_shapes=[
+                pltpu.VMEM((max(spec.scratch_rows, spec.win_rows), L), dt),
+                pltpu.SemaphoreType.DMA((2,)),
+                pltpu.SemaphoreType.DMA(()),
+            ],
+            **io_specs,
+        )
+    elif spec.win_starts:                      # rolling conv/dw/pool window
         fn = pl.pallas_call(
             functools.partial(_stream_roll_kernel, spec=spec),
             grid=(len(spec.win_starts),),
@@ -681,11 +821,21 @@ def apply_op(arena: jax.Array, spec: OpSpec, weights: Tuple[jax.Array, ...],
     spec); returns the (aliased) arena."""
     if spec.win_rows:
         return _apply_stream(arena, spec, weights, interpret)
-    kernel = functools.partial(_plain_kernel, spec=spec)
+    if spec.kind == "fused":
+        # one launch for the whole chain; intermediates live in the VMEM
+        # scratch (typed rows for the blocked program, raw bytes for flat)
+        scratch = [pltpu.VMEM((spec.scratch_rows, spec.rowlen),
+                              _jnp_dtype(spec.dtype)) if spec.rowlen
+                   else pltpu.VMEM((spec.scratch_rows,), jnp.uint8)]
+        kernel = functools.partial(_fused_kernel, spec=spec)
+    else:
+        scratch = []
+        kernel = functools.partial(_plain_kernel, spec=spec)
     fn = pl.pallas_call(
         kernel,
         out_shape=jax.ShapeDtypeStruct(arena.shape, arena.dtype),
         input_output_aliases={0: 0},            # the arena is donated through
+        scratch_shapes=scratch,
         interpret=interpret,
     )
     return fn(arena, *weights)
@@ -701,7 +851,7 @@ def lower_program(specs: Tuple[OpSpec, ...], interpret: bool = True):
 
 @functools.lru_cache(maxsize=128)
 def _lower_program_cached(specs: Tuple[OpSpec, ...], interpret: bool):
-    weight_counts = tuple(1 if s.kind in WEIGHTED_KINDS else 0 for s in specs)
+    weight_counts = tuple(spec_weight_count(s) for s in specs)
 
     def run(arena, *wflat):
         i = 0

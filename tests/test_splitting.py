@@ -204,12 +204,13 @@ def test_split_band_plan_legalises_for_blocks():
 
 
 def test_pipeline_split_winner_full_verify_chain():
-    """compile() on a graph whose winner is the split variant runs every
-    verify tier: bit-exact arena execution, the split-vs-unsplit reference
-    cross-check, and both pallas programs."""
+    """compile() on a graph whose winner is a split-derived variant runs
+    every verify tier: bit-exact arena execution, the split-vs-unsplit
+    reference cross-check, and both pallas programs. Since the fuse pass the
+    winner is normally the fused variant (same bands, lower peak)."""
     cp = pipeline.compile(zoo.mobilenet_v1(0.25, 64, 4), cache=False,
                           backend="pallas")
-    assert cp.winner == "split" and cp.recompute_elems > 0
+    assert cp.winner in ("split", "fuse") and cp.recompute_elems > 0
     assert cp.verified == "numeric+pallas"
     assert any("split-band execution matches the unsplit reference"
                in l for l in cp.log)

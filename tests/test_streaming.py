@@ -84,9 +84,35 @@ def test_window_containment(name):
     ws = bp.window_schedule()
     sub = bp.tiling[0]
     by_name = {op.name: op for op in bp.order}
+    chains = {}
+    for op in bp.order:
+        cname = op.params.get("fuse_chain")
+        if cname is not None:
+            chains.setdefault(cname, []).append(op)
+    # one window per fused chain, one per remaining non-reshape op
     assert len(ws.windows) == sum(
-        1 for op in bp.order if op.kind != "reshape")
+        1 for op in bp.order if op.kind != "reshape") - sum(
+        len(m) - 1 for m in chains.values())
     for w in ws.windows:
+        if w.kind == "fused":
+            # fused chain: every arena-resident operand (ext inputs + the
+            # terminal output) stays inside the declared window
+            members = chains[w.op_name]
+            internal = {op.output.storage() for op in members[:-1]}
+            assert 0 <= w.lo < w.hi <= bp.total_rows
+            assert w.lo % sub == 0 and w.hi % sub == 0
+            for op in members:
+                for t in op.inputs:
+                    s = t.storage()
+                    if s.kind == "weight" or s in internal:
+                        continue
+                    lay = bp.layout_of(t)
+                    assert w.lo <= lay.row_offset
+                    assert lay.row_offset + lay.rows <= w.hi
+            out = bp.layout_of(members[-1].output)
+            assert w.lo <= out.row_offset
+            assert out.row_offset + out.rows <= w.hi
+            continue
         op = by_name[w.op_name]
         ins = [t for t in op.inputs if t.storage().kind != "weight"]
         lays = [bp.layout_of(t) for t in ins]
@@ -128,9 +154,27 @@ def test_staged_slots_match_schedule(name):
     ws = bp.window_schedule()
     by_name = {op.name: op for op in bp.order}
     sub = bp.tiling[0]
+    chains = {}
+    for op in bp.order:
+        cname = op.params.get("fuse_chain")
+        if cname is not None:
+            chains.setdefault(cname, []).append(op)
     for w in ws.windows:
         if w.rolling:
             assert w.resident_rows == 2 * (w.win_rows - sub) + sub
+            continue
+        if w.kind == "fused":
+            # fused chains stage the ext inputs + terminal output alongside
+            # the chain scratch: the window is the include_io slot total
+            members = chains[w.op_name]
+
+            def rows_of(s):
+                lay = bp.layouts.get(s)
+                return lay.rows if lay is not None else int(s.shape[-3])
+
+            _, total = P.fused_slots(members, rows_of, round_to=sub,
+                                     include_io=True)
+            assert total == w.win_rows == w.resident_rows
             continue
         op = by_name[w.op_name]
         ins = [t for t in op.inputs if t.storage().kind != "weight"]
@@ -147,13 +191,20 @@ def test_staged_slots_match_schedule(name):
 
 def test_flagship_window_strictly_below_arena():
     """Acceptance: on the paper's flagship 8-bit rows the streaming VMEM
-    ceiling (max_window_rows) is strictly smaller than the arena —
-    streaming buys headroom the VMEM-resident blocked program cannot."""
+    ceiling (max_resident_bytes) is strictly smaller than what the
+    VMEM-resident blocked program needs — the whole arena plus any fused
+    chain scratch — so streaming buys headroom compiled mode cannot."""
+    from repro.core.exec.pallas_backend import PallasExecutor
     for name in zoo.TABLE3_8BIT_MODELS:
         _, bp = _bplan(zoo.TABLE3_MODELS[name][0])
         ws = bp.window_schedule()
         assert ws.max_window_rows < ws.total_rows, name
-        assert ws.max_resident_bytes < bp.padded_peak_bytes, name
+        specs = PallasExecutor(layout="blocks",
+                               interpret=True).lower_blocks(bp)
+        scratch = max((s.scratch_rows for s in specs if s.kind == "fused"),
+                      default=0)
+        compiled_need = (bp.total_rows + scratch) * bp.row_bytes
+        assert ws.max_resident_bytes < compiled_need, name
         assert bp.report().count("streaming windows:") == 1
 
 
@@ -229,21 +280,27 @@ def test_streaming_refuses_over_budget_window():
     the two refuses compiled-style whole-arena residency but admits
     streaming; a budget below the window refuses streaming too."""
     from repro.core.exec.pallas_backend import PallasExecutor
-    # 64px build: big enough that the double-buffered resident scratch is
-    # strictly below the arena (the 32px one ties them)
-    cp, bp = _bplan(lambda: zoo.mobilenet_v1(0.25, 64, 1))
+    # 128px build: big enough that the double-buffered resident scratch is
+    # strictly below the compiled-mode need (smaller builds tie them)
+    cp, bp = _bplan(lambda: zoo.mobilenet_v1(0.25, 128, 1))
     ws = bp.window_schedule()
-    arena_bytes = bp.total_rows * bp.row_bytes
-    assert ws.max_resident_bytes < arena_bytes
+    # compiled mode must keep the whole arena plus any fused chain scratch
+    # resident; streaming only the largest window
+    specs = PallasExecutor(layout="blocks", interpret=True).lower_blocks(bp)
+    scratch = max((s.scratch_rows for s in specs if s.kind == "fused"),
+                  default=0)
+    compiled_need = (bp.total_rows + scratch) * bp.row_bytes
+    assert ws.max_resident_bytes < compiled_need
     with pytest.raises(ValueError, match="does not fit VMEM"):
         PallasExecutor(mode="streaming", interpret=True,
                        vmem_budget=ws.max_resident_bytes - 1).execute(cp)
     with pytest.raises(ValueError, match="streaming"):
         PallasExecutor(mode="compiled",
-                       vmem_budget=arena_bytes - 1).execute(cp)
-    # between window and arena: streaming executes where compiled refuses
+                       vmem_budget=compiled_need - 1).execute(cp)
+    # between window and compiled need: streaming executes where compiled
+    # refuses
     out = PallasExecutor(mode="streaming", interpret=True,
-                         vmem_budget=arena_bytes - 1).execute(cp)
+                         vmem_budget=compiled_need - 1).execute(cp)
     ref = X.get_backend("numpy").execute(cp)
     X.compare_outputs(ref, out, exact=False, label="budget-admitted stream")
 
