@@ -2,9 +2,10 @@
 Prints ``name,us_per_call,derived`` CSV rows.
 
 ``--json [PATH]`` additionally writes a structured artifact (default
-``BENCH_pr7.json``): per-model plan peaks, blocked/window rows, pallas
-launch counts (fused band chains collapse to one), compile time, and exec
-throughput per backend×dtype — so the perf trajectory is machine-readable
+``BENCH_pr8.json``): per-model plan peaks (fixed-order vs joint
+execution-order x overlap search, plus the order-search wall time),
+blocked/window rows, pallas launch counts (fused band chains collapse to
+one), compile time, and exec throughput per backend×dtype — so the perf trajectory is machine-readable
 instead of living in prose. ``--sweep off`` skips the CSV sweep when only
 the artifact is wanted. ``scripts/bench_diff.py`` diffs two artifacts and
 fails on regressions (the CI perf gate).
@@ -47,6 +48,11 @@ def _json_payload(rows):
             "cache_hit": cp.cache_hit,
         }
         entry["winner"] = cp.winner
+        if cp.order_stats:
+            entry["fixed_dmo_kb"] = round(
+                cp.order_stats["fixed_peak"] / 1024, 1)
+            entry["order_search_s"] = round(cp.order_stats["wall_s"], 3)
+            entry["order_changed"] = bool(cp.order_stats["order_changed"])
         bp = cp.legalised()
         if bp is not None:
             ws = bp.window_schedule()
@@ -114,10 +120,10 @@ def main(argv=None) -> None:
     os.environ.setdefault("REPRO_DMO_DISK_CACHE", "1")
     ap = argparse.ArgumentParser(
         prog="benchmarks.run", description="DMO benchmark sweep")
-    ap.add_argument("--json", nargs="?", const="BENCH_pr7.json",
+    ap.add_argument("--json", nargs="?", const="BENCH_pr8.json",
                     default=None, metavar="PATH",
                     help="also write the structured benchmark artifact "
-                         "(default path: BENCH_pr7.json)")
+                         "(default path: BENCH_pr8.json)")
     ap.add_argument("--sweep", choices=("on", "off"), default="on",
                     help="run the full CSV sweep ('off' keeps --json cheap "
                          "on a warm plan cache)")

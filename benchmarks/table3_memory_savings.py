@@ -22,6 +22,12 @@ compiled-mode (tiled VMEM) execution actually allocates, with the tiling
 padding overhead made explicit against the report's stated per-model bound
 (:func:`padding_bound_pct`; rows exceeding it print OVER-BOUND).
 
+Since the joint execution-order x overlap search, each row also carries an
+``order=`` column: the joint-search peak and its delta vs the best
+fixed-order DMO plan (rows where the shipped peak exceeds the fixed peak —
+impossible unless the never-regress fallback breaks — print
+ORDER-REGRESSED).
+
 Paper numbers are cited inline; structural deltas for the complex connected
 models (whose exact TFLite graph serialisations the paper does not specify)
 are discussed in EXPERIMENTS.md.
@@ -85,6 +91,23 @@ def _blocked_status(name: str, cp, g) -> str:
     return (f"blocked={bp.padded_peak_bytes / 1024:.0f}KB "
             f"pad=+{bp.padding_overhead_pct:.1f}%"
             f"(bound {bound:.0f}%){flag}")
+
+
+def _order_status(cp) -> str:
+    """Joint execution-order x overlap search column: the joint peak and its
+    delta vs the best *fixed-order* DMO plan. The never-regress fallback in
+    the plan pass guarantees the shipped peak is <= the fixed peak; a row
+    violating that prints ORDER-REGRESSED (loud, OVER-BOUND style), because
+    it can only mean the fallback broke."""
+    st = cp.order_stats
+    if not st:
+        return "order=off"
+    fixed, joint = st["fixed_peak"], st["peak"]
+    dpct = 100.0 * (joint - fixed) / fixed if fixed else 0.0
+    flag = "" if cp.peak_bytes <= fixed else " ORDER-REGRESSED"
+    reord = ",reordered" if st.get("order_changed") else ""
+    return (f"order={joint / 1024:.0f}KB({dpct:+.1f}% vs fixed "
+            f"{fixed / 1024:.0f}KB{reord}){flag}")
 
 
 def _execute_status(name, build) -> str:
@@ -158,6 +181,7 @@ def run(csv_rows, search: bool = True):
             f"dmo={opt_kb:.0f}KB(paper {paper_opt}) "
             f"saving={cp.saving_pct:.1f}%(paper {psav:.1f}%) "
             f"beyond={ext / 1024:.0f}KB "
+            f"{_order_status(cp)} "
             f"dtypes={cp.plan.dtype_peaks_report()} "
             f"{blocked} "
             f"exec={status} "

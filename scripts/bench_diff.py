@@ -8,18 +8,29 @@ Structural metrics are machine-independent, so the gate is deterministic;
 wall-clock metrics (``exec_us_per_call``, ``compile_s``, ``wall_s``) are
 noisy across runners and only checked when ``--timing`` is passed.
 
+``--series`` instead tabulates one metric's trajectory across *all* the
+committed artifacts (default: every ``BENCH_*.json`` next to the newest
+one, sorted by PR number) — the per-model peak history of the whole PR
+stack in one table.
+
 Usage::
 
     PYTHONPATH=src python scripts/bench_diff.py BENCH_pr6.json BENCH_pr7.json
     PYTHONPATH=src python scripts/bench_diff.py old.json new.json \
         --threshold 2 --timing
+    PYTHONPATH=src python scripts/bench_diff.py --series
+    PYTHONPATH=src python scripts/bench_diff.py --series --metric blocked_kb
 
-Exit status: 0 = no regressions, 1 = at least one metric regressed.
+Exit status: 0 = no regressions, 1 = at least one metric regressed
+(``--series`` is informational and always exits 0).
 """
 from __future__ import annotations
 
 import argparse
+import glob
 import json
+import os
+import re
 import sys
 
 #: Structural per-model metrics: (metric, better) where ``better`` is the
@@ -34,10 +45,12 @@ MODEL_METRICS = {
     "launches": "lower",               # pallas_call count (fused chains = 1)
     "saving_pct": "higher",
     "baseline_kb": "equal",            # graph-derived: any drift is a bug
+    "fixed_dmo_kb": "lower",           # best fixed-order plan (pre order-search)
 }
 
 #: Wall-clock metrics, compared only under ``--timing``.
-TIMING_MODEL_METRICS = {"compile_s": "lower", "wall_s": "lower"}
+TIMING_MODEL_METRICS = {"compile_s": "lower", "wall_s": "lower",
+                        "order_search_s": "lower"}
 
 
 def _pct(old: float, new: float) -> float:
@@ -89,11 +102,45 @@ def diff(old: dict, new: dict, threshold: float = 5.0,
     return regressions, improvements
 
 
+def _series_key(path: str):
+    """Sort artifacts by embedded PR number (BENCH_pr7.json -> 7), falling
+    back to lexical order for non-conforming names."""
+    m = re.search(r"pr(\d+)", os.path.basename(path))
+    return (0, int(m.group(1))) if m else (1, os.path.basename(path))
+
+
+def series(paths, metric: str = "dmo_kb") -> list:
+    """-> printable table lines: ``metric`` per model across artifacts."""
+    arts = []
+    for p in sorted(paths, key=_series_key):
+        with open(p) as f:
+            data = json.load(f)
+        label = re.sub(r"^BENCH_|\.json$", "", os.path.basename(p))
+        arts.append((label, data.get("models", {})))
+    names = sorted({n for _, models in arts for n in models})
+    widths = [max([len("model")] + [len(n) for n in names])] + [
+        max(len(label), 8) for label, _ in arts]
+    rows = [["model"] + [label for label, _ in arts]]
+    for n in names:
+        row = [n]
+        for _, models in arts:
+            v = models.get(n, {}).get(metric)
+            row.append("-" if v is None else f"{v:g}")
+        rows.append(row)
+    lines = ["  ".join(c.ljust(w) if i == 0 else c.rjust(w)
+                       for i, (c, w) in enumerate(zip(row, widths)))
+             for row in rows]
+    lines.append(f"# metric: {metric}, {len(arts)} artifacts, "
+                 f"{len(names)} models")
+    return lines
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="diff two BENCH_*.json artifacts, fail on regressions")
-    ap.add_argument("old", help="baseline artifact (e.g. BENCH_pr6.json)")
-    ap.add_argument("new", help="candidate artifact (e.g. BENCH_pr7.json)")
+    ap.add_argument("paths", nargs="*", metavar="ARTIFACT",
+                    help="two artifacts (old new) to diff, or any number "
+                         "under --series (default: ./BENCH_*.json)")
     ap.add_argument("--threshold", type=float, default=5.0,
                     help="regression tolerance in percent (default 5)")
     ap.add_argument("--timing", action="store_true",
@@ -102,11 +149,26 @@ def main(argv=None) -> int:
     ap.add_argument("--skip", action="append", default=[], metavar="METRIC",
                     help="metric name to exclude (repeatable) — for "
                          "intentional, documented trade-offs")
+    ap.add_argument("--series", action="store_true",
+                    help="tabulate --metric across all given artifacts "
+                         "(or ./BENCH_*.json) instead of diffing two")
+    ap.add_argument("--metric", default="dmo_kb",
+                    help="per-model metric for --series (default dmo_kb)")
     args = ap.parse_args(argv)
 
-    with open(args.old) as f:
+    if args.series:
+        paths = args.paths or sorted(glob.glob("BENCH_*.json"))
+        if not paths:
+            ap.error("--series: no BENCH_*.json artifacts found")
+        for line in series(paths, args.metric):
+            print(line)
+        return 0
+
+    if len(args.paths) != 2:
+        ap.error("expected exactly two artifacts: OLD NEW (or use --series)")
+    with open(args.paths[0]) as f:
         old = json.load(f)
-    with open(args.new) as f:
+    with open(args.paths[1]) as f:
         new = json.load(f)
 
     regressions, improvements = diff(old, new, args.threshold, args.timing,

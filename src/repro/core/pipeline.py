@@ -38,7 +38,7 @@ from repro.core.arena import run_reference
 from repro.core.graph import Graph, Op, Tensor
 from repro.core.removal import removable, remove_concats
 from repro.core.serialise import candidate_orders
-from repro.core.splitting import auto_split
+from repro.core.splitting import auto_split, order_pinned
 
 __all__ = [
     "CompileOptions", "CompiledPlan", "Pass", "auto_budget_s",
@@ -94,10 +94,15 @@ def graph_signature(graph: Graph) -> str:
 class CompileOptions:
     profile: str = "paper"        # overlap profile: "paper" | "extended"
     method: str = "algorithmic"   # O_s method: analytic/algorithmic/trace/auto
-    #: ILS plan_search budget: seconds (>0 enables), or "auto" to derive the
+    #: ILS search budget: seconds (>0 enables), or "auto" to derive the
     #: budget from the graph's op/tensor count (see :func:`auto_budget_s`).
     budget_s: Union[float, str] = 0.0
     seed: int = 0
+    #: Joint execution-order x overlap search: "auto" (runs whenever a search
+    #: budget is set), "on" (forced, with a 1 s floor budget), "off" (the
+    #: placement-only plan_search refinement of the fixed serialised order).
+    #: Folded into the plan-cache key via :meth:`key` like every option.
+    order_search: str = "auto"
     split: str = "auto"           # "auto" (size-gated) | "on" | "off"
     split_max_parts: int = 8
     split_ops_limit: int = 150    # "auto": skip auto_split on larger graphs
@@ -140,6 +145,14 @@ class PipelineState:
     #: candidate execution orders per variant index (serialise pass).
     orders: Dict[int, List[List[Op]]] = dataclasses.field(default_factory=dict)
     baseline: Optional[P.Plan] = None
+    #: fixed-order plan_dmo candidates per (variant, order) — computed by
+    #: OrderSearchPass when it runs (PlanPass reuses them instead of
+    #: re-planning the grid), else by PlanPass itself.
+    fixed_plans: Optional[List[Tuple[str, P.Plan]]] = None
+    #: the joint order x overlap search's winner (label, plan), competing
+    #: against the fixed-order candidates in PlanPass.
+    joint: Optional[Tuple[str, P.Plan]] = None
+    order_stats: Optional[Dict[str, Any]] = None
     plan: Optional[P.Plan] = None
     winner: str = "input"
     verified: str = "none"
@@ -171,6 +184,10 @@ class CompiledPlan:
     cache_hit: bool = False
     compile_s: float = 0.0
     backend: str = "numpy"      # executor backend this plan was compiled for
+    #: telemetry from the joint execution-order x overlap search (None when
+    #: the order_search pass was off / skipped): fixed vs joint peaks, move
+    #: and promotion counts, wall time, whether the winning order changed.
+    order_stats: Optional[Dict[str, Any]] = None
 
     @property
     def peak_bytes(self) -> int:
@@ -236,6 +253,16 @@ class CompiledPlan:
                 "byte-granular peak")
         if self.recompute_elems:
             lines.append(f"  recompute: {self.recompute_elems} elements")
+        if self.order_stats:
+            st = self.order_stats
+            lines.append(
+                f"  order-search: fixed={st.get('fixed_peak')} -> "
+                f"joint={st.get('peak')} "
+                f"({st.get('order_accepts', 0)} order moves, "
+                f"{st.get('placement_moves', 0)} placement moves, "
+                f"{st.get('wall_s', 0.0):.1f}s"
+                + (", order changed" if st.get("order_changed") else "")
+                + ")")
         lines += [f"  | {entry}" for entry in self.log]
         lines.append(self.plan.report())
         return "\n".join(lines)
@@ -459,7 +486,7 @@ class SerialisePass(Pass):
 
     def run(self, state: PipelineState) -> None:
         for i, (label, g) in enumerate(state.variants):
-            if any("fuse_chain" in op.params for op in g.ops):
+            if order_pinned(g):
                 # a fused chain's members must stay contiguous in execution
                 # order (one kernel per chain, stage weights consecutive) —
                 # fused variants keep construction order
@@ -471,6 +498,77 @@ class SerialisePass(Pass):
                 state.orders[i] = orders
                 state.log.append(f"serialise[{label}]: {len(orders)} "
                                  "candidate orders")
+
+
+def _fixed_plan_grid(state: PipelineState) -> List[Tuple[str, P.Plan]]:
+    """plan_dmo over every (variant, order) pair — the fixed-order candidate
+    grid both OrderSearchPass and PlanPass rank. The non-overlapping
+    baseline of the input graph is itself a candidate, so the eventual
+    winner is never worse than it."""
+    opt = state.options
+    cands: List[Tuple[str, P.Plan]] = []
+    if state.baseline is not None:
+        cands.append(("input", state.baseline))
+    for i, (label, g) in enumerate(state.variants):
+        # construction order is always a candidate (None); serialise orders
+        # augment it, minus exact duplicates
+        orders = [None] + [o for o in state.orders.get(i, [])
+                           if list(o) != list(g.ops)]
+        for order in orders:
+            cands.append((label, P.plan_dmo(
+                g, order, method=opt.method, profile=opt.profile)))
+    return cands
+
+
+@register_pass
+class OrderSearchPass(Pass):
+    """Joint execution-order x overlap search (beyond-paper): ILS over the
+    product of dependency-respecting linearisations (``serialise.OrderMoves``
+    legality, seeded from the serialise heuristics) and insertion-order
+    placement, under the same wall budget the placement-only refinement used
+    to get. Runs on the *winning* variant of the fixed-order grid — so split
+    variants re-enter the joint search whenever splitting wins, while fused
+    variants search placement only (chains pin their order). The fixed-order
+    candidates stay in ``state.fixed_plans`` as PlanPass's guaranteed
+    fallback: order search can never regress a model."""
+    name = "order_search"
+
+    def run(self, state: PipelineState) -> None:
+        opt = state.options
+        if opt.order_search == "off":
+            state.log.append("order_search: disabled")
+            return
+        budget = (auto_budget_s(state.original)
+                  if opt.budget_s == "auto" else float(opt.budget_s))
+        if budget <= 0 and opt.order_search == "on":
+            budget = 1.0  # forced on: minimal search budget
+        if budget <= 0:
+            state.log.append("order_search: skipped (no search budget)")
+            return
+        state.fixed_plans = _fixed_plan_grid(state)
+        label, fixed = min(state.fixed_plans, key=lambda c: c[1].peak_bytes)
+        g = fixed.graph
+        vi = next((i for i, (_, vg) in enumerate(state.variants)
+                   if vg is g), 0)
+        pinned = order_pinned(g)
+        seeds = [list(fixed.order), list(g.ops)] + \
+            [list(o) for o in state.orders.get(vi, [])]
+        plan, stats = P.plan_joint(
+            g, seeds, method=opt.method, profile=opt.profile,
+            budget_s=budget, seed=opt.seed,
+            allow_order_moves=not pinned)
+        stats["fixed_peak"] = fixed.peak_bytes
+        stats["budget_s"] = budget
+        state.joint = (label, plan)
+        state.order_stats = stats
+        state.log.append(
+            f"order_search: joint ILS ({budget:.1f}s"
+            f"{', autoscaled' if opt.budget_s == 'auto' else ''}) on "
+            f"{label}: fixed={fixed.peak_bytes} -> joint={plan.peak_bytes}"
+            + (" [order pinned: placement moves only]" if pinned else
+               f" [{stats['order_accepts']} order moves accepted"
+               + (", winning order changed" if stats["order_changed"]
+                  else "") + "]"))
 
 
 @register_pass
@@ -486,22 +584,21 @@ class PlanPass(Pass):
 
     def run(self, state: PipelineState) -> None:
         opt = state.options
-        cands: List[Tuple[str, P.Plan]] = []
-        if state.baseline is not None:
-            cands.append(("input", state.baseline))
-        for i, (label, g) in enumerate(state.variants):
-            # construction order is always a candidate (None); serialise
-            # orders augment it, minus exact duplicates
-            orders = [None] + [o for o in state.orders.get(i, [])
-                               if list(o) != list(g.ops)]
-            for order in orders:
-                cands.append((label, P.plan_dmo(
-                    g, order, method=opt.method, profile=opt.profile)))
+        # fixed-order grid: reuse OrderSearchPass's if it ran (nothing is
+        # planned twice), else compute it here
+        cands = (list(state.fixed_plans) if state.fixed_plans is not None
+                 else _fixed_plan_grid(state))
+        if state.joint is not None:
+            # the joint search's winner competes as one more candidate; on a
+            # tie min() keeps the earlier fixed-order plan, which is exactly
+            # the never-regress fallback to the serialised order
+            cands.append(state.joint)
         label, best = min(cands, key=lambda c: c[1].peak_bytes)
         budget = (auto_budget_s(state.original)
                   if opt.budget_s == "auto" else opt.budget_s)
-        if budget > 0:
-            # refine the best candidate's insertion order by ILS
+        if budget > 0 and state.joint is None:
+            # order_search off/skipped: the historical placement-only ILS
+            # refinement of the winning fixed order
             sp = P.plan_search(best.graph, best.order,
                                method=opt.method, budget_s=budget,
                                seed=opt.seed, profile=opt.profile)
@@ -755,7 +852,8 @@ def cache_clear(disk: bool = False) -> None:
 
 def compile(graph: Graph, *, profile: str = "paper",
             method: str = "algorithmic", budget_s: Union[float, str] = 0.0,
-            seed: int = 0, passes: Optional[Sequence[str]] = None,
+            seed: int = 0, order_search: str = "auto",
+            passes: Optional[Sequence[str]] = None,
             split: str = "auto", split_max_parts: int = 8,
             split_ops_limit: int = 150, fuse: str = "auto",
             fuse_vmem_budget: Optional[int] = None, verify: str = "auto",
@@ -771,6 +869,14 @@ def compile(graph: Graph, *, profile: str = "paper",
         budget_s: wall-clock budget for the ILS search refinement (0 = off,
             fully deterministic pipeline), or ``"auto"`` to derive the budget
             from the graph's op/tensor count (:func:`auto_budget_s`).
+        seed: RNG seed for every stochastic search stage (the joint order
+            search and plan_search). Part of the plan-cache key: a cached
+            plan is never returned for different search settings.
+        order_search: joint execution-order x overlap search mode —
+            ``"auto"`` runs the joint ILS over (linearisation, placement)
+            whenever a search budget is set, ``"on"`` forces it (1 s floor
+            budget), ``"off"`` restores the placement-only ILS refinement
+            of the fixed serialised order.
         passes: pass names to run, in order (default:
             :func:`default_passes`). Unknown names raise.
         split: operation-splitting mode (``auto``/``on``/``off``);
@@ -815,6 +921,8 @@ def compile(graph: Graph, *, profile: str = "paper",
         raise ValueError(f"unknown fuse mode {fuse!r}")
     if verify not in ("auto", "constraints", "numeric", "off"):
         raise ValueError(f"unknown verify mode {verify!r}")
+    if order_search not in ("auto", "on", "off"):
+        raise ValueError(f"unknown order_search mode {order_search!r}")
     if backend not in X.available_backends():
         raise ValueError(f"unknown executor backend {backend!r}; "
                          f"available: {X.available_backends()}")
@@ -826,7 +934,7 @@ def compile(graph: Graph, *, profile: str = "paper",
         raise ValueError("disk_cache=True requires cache=True "
                          "(cache=False disables all caching)")
     opts = CompileOptions(profile=profile, method=method, budget_s=budget_s,
-                          seed=seed, split=split,
+                          seed=seed, order_search=order_search, split=split,
                           split_max_parts=split_max_parts,
                           split_ops_limit=split_ops_limit, fuse=fuse,
                           fuse_vmem_budget=fuse_vmem_budget, verify=verify,
@@ -877,7 +985,8 @@ def compile(graph: Graph, *, profile: str = "paper",
         winner=state.winner, verified=state.verified,
         recompute_elems=(state.recompute_elems
                          if state.winner in ("split", "fuse") else 0),
-        compile_s=time.perf_counter() - t0, backend=backend)
+        compile_s=time.perf_counter() - t0, backend=backend,
+        order_stats=state.order_stats)
     if cache:
         _PLAN_CACHE[key] = result
         if use_disk:

@@ -294,6 +294,19 @@ def chain_members(g: Graph) -> Dict[str, List[Op]]:
     return out
 
 
+def order_pinned(g: Graph) -> bool:
+    """Does this graph refuse re-serialisation and order-search moves?
+
+    Fused band chains pin execution order: each chain lowers to ONE Pallas
+    kernel whose members must stay contiguous with ``fuse_stage`` ascending
+    (see :func:`chain_members`), so both :class:`pipeline.SerialisePass` and
+    the joint execution-order search leave fused variants in construction
+    order. Plain *split* variants are NOT pinned — band ops are ordinary
+    graph ops with explicit pads, so split variants re-enter the joint
+    search like any other graph."""
+    return any("fuse_chain" in op.params for op in g.ops)
+
+
 def auto_split(g: Graph, max_parts: int = 8, rounds: int = 3,
                overlap: bool = True, method: str = "algorithmic",
                profile: str = "paper") -> Tuple[Graph, int, List[str]]:

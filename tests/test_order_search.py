@@ -1,0 +1,421 @@
+"""Joint execution-order x overlap search (linearisation-aware DMO).
+
+Covers: the Kahn ready-queue serialisation rewrites (bit-identical to the
+historical quadratic rescans), the ``OrderMoves`` legality oracle, the
+incremental ``LivePeakEstimator``, ``plan_joint`` (the product-space ILS —
+including a trap graph where order moves strictly beat every serialise
+heuristic), the ``order_search`` pipeline pass with its never-regress
+fallback, search-parameter cache-key correctness, and the hypothesis
+property that ANY dependency-respecting linearisation plans safely at byte
+and row granularity.
+"""
+import random
+
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import pipeline, zoo
+from repro.core.graph import Graph
+from repro.core.planner import (LivePeakEstimator, legalise_for_blocks,
+                                live_bytes_profile, plan_dmo, plan_joint)
+from repro.core.serialise import (OrderMoves, _deps, candidate_orders,
+                                  eager_order, lazy_order,
+                                  memory_greedy_order)
+from repro.core.splitting import order_pinned
+
+
+# ---------------------------------------------------------------------------
+# Reference copies of the historical O(V^2 * E) serialisation loops — the
+# Kahn rewrites must stay bit-identical to these
+# ---------------------------------------------------------------------------
+
+
+def _eager_reference(graph):
+    deps = _deps(graph)
+    done, order, pending = set(), [], list(graph.ops)
+    while pending:
+        for op in pending:
+            if deps[op] <= done:
+                order.append(op)
+                done.add(op)
+                pending.remove(op)
+                break
+        else:
+            raise ValueError("cycle")
+    return order
+
+
+def _greedy_reference(graph):
+    deps = _deps(graph)
+    remaining = {}
+    for op in graph.ops:
+        for t in op.inputs:
+            s = t.storage()
+            if s.kind != "weight":
+                remaining[s] = remaining.get(s, 0) + 1
+    live = {t.storage() for t in graph.tensors if t.kind == "input"}
+    done, order, pending = set(), [], list(graph.ops)
+    while pending:
+        ready = [op for op in pending if deps[op] <= done]
+
+        def after(op):
+            uses, nxt = dict(remaining), set(live)
+            for t in op.outputs:
+                s = t.storage()
+                if s.kind != "weight":
+                    nxt.add(s)
+            for t in op.inputs:
+                s = t.storage()
+                if s in uses:
+                    uses[s] -= 1
+                    if uses[s] == 0 and s.kind not in ("input", "output"):
+                        nxt.discard(s)
+            return sum(t.nbytes for t in nxt)
+
+        best = min(ready, key=lambda op: (after(op), pending.index(op)))
+        order.append(best)
+        done.add(best)
+        pending.remove(best)
+        for t in best.outputs:
+            s = t.storage()
+            if s.kind != "weight":
+                live.add(s)
+        for t in best.inputs:
+            s = t.storage()
+            if s in remaining:
+                remaining[s] -= 1
+                if remaining[s] == 0 and s.kind not in ("input", "output"):
+                    live.discard(s)
+    return order
+
+
+@pytest.mark.parametrize("build", [
+    zoo.squeezenet, zoo.inception_v4,
+    lambda: zoo.mobilenet_v2(0.35, 96, 1),
+])
+def test_kahn_orders_bit_identical_to_quadratic_rescan(build):
+    g = build()
+    assert eager_order(g) == _eager_reference(g)
+    assert memory_greedy_order(g) == _greedy_reference(g)
+
+
+def test_kahn_orders_bit_identical_on_removal_views():
+    """Aggregated-view writer graphs (§II.C removal) are where _deps is
+    subtle — the rewrites must agree there too."""
+    from repro.core.removal import remove_concats
+    rg = remove_concats(zoo.squeezenet())
+    assert eager_order(rg) == _eager_reference(rg)
+    assert memory_greedy_order(rg) == _greedy_reference(rg)
+
+
+# ---------------------------------------------------------------------------
+# Move legality oracle
+# ---------------------------------------------------------------------------
+
+
+def _trap_graph():
+    """Asymmetric diamond where every serialise heuristic (construction /
+    eager / lazy / memory-greedy) picks a strictly suboptimal order for
+    plan_dmo: the best linearisation interleaves the fat branch inside the
+    thin one, which no myopic heuristic does."""
+    conv = lambda k: dict(kernel=(k, k), stride=(1, 1), padding="same")
+    g = Graph("order_trap")
+    x = g.tensor("x", (8, 8, 8), 4, "input")
+    a1 = g.op("conv2d", [x], (8, 8, 48), conv(3), name="a1")
+    a2 = g.op("conv2d", [a1], (8, 8, 8), conv(1), name="a2")
+    b1 = g.op("conv2d", [x], (8, 8, 2), conv(3), name="b1")
+    b2 = g.op("conv2d", [b1], (8, 8, 40), conv(3), name="b2")
+    b3 = g.op("conv2d", [b2], (8, 8, 8), conv(1), name="b3")
+    c = g.op("concat", [a2, b3], (8, 8, 16), dict(axis=-1), name="cat")
+    g.op("elementwise", [c], (8, 8, 16), dict(fn="relu"), name="out",
+         out_kind="output")
+    g.validate()
+    return g
+
+
+def test_order_moves_legality_oracle():
+    g = _trap_graph()
+    m = OrderMoves(g)
+    order = list(g.ops)  # a1 a2 b1 b2 b3 cat out
+    assert m.is_topological(order)
+    # a2 and b1 are independent: swapping them is legal and stays topological
+    assert m.legal_swap(order, 1)
+    assert m.is_topological(m.swap(order, 1))
+    # a1 -> a2 is a producer edge: the swap is illegal
+    assert not m.legal_swap(order, 0)
+    assert not m.is_topological(m.swap(order, 0))
+    # block move: a1 may not hop past its consumer a2
+    assert not m.legal_block_move(order, 0, 1)
+    # b1 may move to the front (depends only on x)
+    assert m.legal_block_move(order, 2, 0)
+    assert m.is_topological(m.block_move(order, 2, 0))
+    # cat may not move before its producers
+    assert not m.legal_block_move(order, 5, 3)
+
+
+def test_block_move_legality_matches_is_topological_exhaustively():
+    g = _trap_graph()
+    m = OrderMoves(g)
+    order = list(g.ops)
+    n = len(order)
+    for i in range(n):
+        for j in range(n):
+            if i == j:
+                continue
+            assert m.legal_block_move(order, i, j) == \
+                m.is_topological(m.block_move(order, i, j)), (i, j)
+
+
+def test_adjacent_swap_legality_matches_is_topological():
+    g = zoo.squeezenet()
+    m = OrderMoves(g)
+    order = eager_order(g)
+    for i in range(len(order) - 1):
+        assert m.legal_swap(order, i) == m.is_topological(m.swap(order, i))
+
+
+def test_random_topological_respects_deps():
+    g = zoo.squeezenet()
+    m = OrderMoves(g)
+    rng = random.Random(7)
+    sigs = set()
+    for _ in range(10):
+        o = m.random_topological(rng)
+        assert m.is_topological(o)
+        sigs.add(m.signature(o))
+    assert len(sigs) > 1, "sampler collapsed to one order"
+
+
+# ---------------------------------------------------------------------------
+# Incremental live-peak estimator
+# ---------------------------------------------------------------------------
+
+
+def test_estimator_incremental_matches_full_recompute():
+    g = zoo.squeezenet()
+    m = OrderMoves(g)
+    order = eager_order(g)
+    est = LivePeakEstimator(g, order)
+    assert est._bytes_at == live_bytes_profile(g, order)
+    rng = random.Random(3)
+    for step in range(300):
+        legal = m.legal_swaps(order)
+        if not legal:
+            break
+        i = legal[rng.randrange(len(legal))]
+        order = m.swap(order, i)
+        est.swap(i)
+    ref = live_bytes_profile(g, order)
+    assert est._bytes_at == ref
+    assert est.peak == max(ref)
+
+
+def test_estimator_swap_is_its_own_inverse():
+    g = _trap_graph()
+    m = OrderMoves(g)
+    order = list(g.ops)
+    est = LivePeakEstimator(g, order)
+    before = list(est._bytes_at)
+    i = m.legal_swaps(order)[0]
+    est.swap(i)
+    est.swap(i)
+    assert est._bytes_at == before
+
+
+# ---------------------------------------------------------------------------
+# plan_joint: the product-space ILS
+# ---------------------------------------------------------------------------
+
+
+def _fixed_best(g):
+    return min(plan_dmo(g, o, method="algorithmic").peak_bytes
+               for o in [list(g.ops)] + candidate_orders(g))
+
+
+def test_joint_beats_every_heuristic_order_on_trap_graph():
+    """The order axis is real: on the trap graph the joint search finds a
+    linearisation whose planned peak is strictly below the best fixed-order
+    plan_dmo over construction + eager + lazy + memory-greedy orders."""
+    g = _trap_graph()
+    fixed = _fixed_best(g)
+    plan, stats = plan_joint(g, method="algorithmic", budget_s=2.0, seed=0,
+                             max_rounds=400)
+    plan.validate()
+    assert plan.peak_bytes < fixed
+    assert stats["order_changed"]
+    assert stats["order_accepts"] > 0
+
+
+def test_joint_degenerates_to_placement_ils_on_sequential_graph():
+    """No legal swap -> the loop must spend its whole budget on placement
+    moves (exactly plan_search's neighbourhood)."""
+    g = zoo.mobilenet_v1(0.25, 96)
+    assert not OrderMoves(g).legal_swaps(eager_order(g))
+    plan, stats = plan_joint(g, method="algorithmic", budget_s=0.5, seed=0,
+                             max_rounds=150)
+    plan.validate()
+    assert stats["order_moves"] == 0
+    assert stats["placement_moves"] == stats["rounds"]
+    assert not stats["order_changed"]
+
+
+def test_joint_is_deterministic_under_fixed_rounds():
+    g = _trap_graph()
+    runs = [plan_joint(g, method="algorithmic", budget_s=30.0, seed=5,
+                       max_rounds=200) for _ in range(2)]
+    (p1, s1), (p2, s2) = runs
+    assert [op.name for op in p1.order] == [op.name for op in p2.order]
+    assert {t.name: x for t, x in p1.offsets.items()} == \
+        {t.name: x for t, x in p2.offsets.items()}
+    assert s1["evals"] == s2["evals"]
+
+
+def test_joint_winner_legalises_at_row_granularity():
+    g = _trap_graph()
+    plan, _ = plan_joint(g, method="algorithmic", budget_s=1.0, seed=0,
+                         max_rounds=300)
+    plan.validate()
+    bp = legalise_for_blocks(plan)
+    bp.validate()
+
+
+# ---------------------------------------------------------------------------
+# Pipeline wiring: the order_search pass
+# ---------------------------------------------------------------------------
+
+
+def test_order_search_pass_runs_and_never_regresses():
+    g = _trap_graph()
+    # with the full pipeline the search may not beat the split variant, but
+    # it must never regress past the fixed-order winner
+    cp = pipeline.compile(g, budget_s=1.5, cache=False)
+    assert cp.order_stats is not None
+    assert any("order_search: joint ILS" in line for line in cp.log)
+    assert cp.peak_bytes <= cp.order_stats["fixed_peak"]
+    # split disabled: the trap is live and the order-axis win is strict
+    cp = pipeline.compile(g, budget_s=1.5, split="off", cache=False)
+    assert cp.peak_bytes < cp.order_stats["fixed_peak"]
+    assert cp.plan.strategy.startswith("joint")
+    assert cp.order_stats["order_changed"]
+
+
+def test_order_search_off_restores_placement_only_pipeline():
+    g = _trap_graph()
+    cp = pipeline.compile(g, budget_s=0.5, order_search="off", cache=False)
+    assert cp.order_stats is None
+    assert any("order_search: disabled" in line for line in cp.log)
+    assert any("plan: ILS search" in line for line in cp.log)
+
+
+def test_order_search_skipped_without_budget():
+    cp = pipeline.compile(_trap_graph(), budget_s=0.0, cache=False)
+    assert cp.order_stats is None
+    assert any("order_search: skipped" in line for line in cp.log)
+
+
+def test_order_search_forced_on_gets_floor_budget():
+    cp = pipeline.compile(_trap_graph(), budget_s=0.0, order_search="on",
+                          cache=False)
+    assert cp.order_stats is not None
+    assert cp.order_stats["budget_s"] == 1.0
+
+
+def test_order_search_tie_falls_back_to_fixed_order_plan():
+    """A sequential 8-bit model where search finds nothing better: the
+    winner must be the fixed-order plan (not a joint re-plan of equal
+    peak), keeping plans stable when the search contributes nothing."""
+    g = zoo.mobilenet_v1(0.25, 128, dtype_bytes=1)
+    cp = pipeline.compile(g, budget_s=0.3, split="off", cache=False)
+    assert cp.order_stats is not None
+    if cp.peak_bytes == cp.order_stats["fixed_peak"]:
+        assert not cp.plan.strategy.startswith("joint")
+
+
+def test_order_pinned_detection():
+    g = _trap_graph()
+    assert not order_pinned(g)
+    g.ops[0].params["fuse_chain"] = "c0"
+    assert order_pinned(g)
+
+
+def test_unknown_order_search_mode_rejected():
+    with pytest.raises(ValueError, match="order_search"):
+        pipeline.compile(_trap_graph(), order_search="maybe")
+
+
+# ---------------------------------------------------------------------------
+# Cache-key correctness: search parameters are part of the plan-cache key
+# ---------------------------------------------------------------------------
+
+
+def test_search_parameters_are_cache_keyed():
+    g = _trap_graph
+    pipeline.cache_clear()
+    base = dict(budget_s=0.2)
+    assert not pipeline.compile(g(), **base).cache_hit  # cold
+    assert pipeline.compile(g(), **base).cache_hit      # warm repeat
+    # different seed: a different stochastic search -> cold compile
+    assert not pipeline.compile(g(), budget_s=0.2, seed=1).cache_hit
+    # different budget tier: cold
+    assert not pipeline.compile(g(), budget_s=0.3).cache_hit
+    # order search toggled off: cold
+    assert not pipeline.compile(g(), budget_s=0.2,
+                                order_search="off").cache_hit
+    # and each of those is itself cached on repeat
+    assert pipeline.compile(g(), budget_s=0.2, seed=1).cache_hit
+    assert pipeline.compile(g(), budget_s=0.2, order_search="off").cache_hit
+
+
+# ---------------------------------------------------------------------------
+# Parity: the joint-search winner executes identically on both backends
+# ---------------------------------------------------------------------------
+
+
+def test_joint_winner_executes_with_parity_on_both_backends():
+    """f32: numpy arena vs pallas flat/blocked must match bit-for-bit /
+    within fp32 tolerance on the joint-search winner (order changed!) —
+    VerifyPass's pallas tier asserts exactly that during compile, and we
+    re-execute on both backends to compare outputs directly."""
+    import numpy as np
+
+    g = _trap_graph()
+    cp = pipeline.compile(g, budget_s=1.5, split="off", backend="pallas",
+                          verify="numeric", cache=False)
+    assert cp.verified == "numeric+pallas"
+    assert cp.plan.strategy.startswith("joint")  # the searched plan won
+    assert cp.order_stats["order_changed"]  # with a genuinely new order
+    out_np = cp.execute(backend="numpy")
+    out_pl = cp.execute(backend="pallas")
+    assert set(out_np) == set(out_pl)
+    for k in out_np:
+        np.testing.assert_allclose(out_np[k], out_pl[k], rtol=1e-5,
+                                   atol=1e-5)
+
+
+def test_joint_search_int8_winner_parity():
+    """int8 tier: the searched plan of an 8-bit graph still verifies on the
+    numpy arena (bit-exact vs reference) through the same pipeline."""
+    g = zoo.mobilenet_v1(0.25, 96, dtype_bytes=1)
+    cp = pipeline.compile(g, budget_s=0.5, split="off", verify="numeric",
+                          cache=False)
+    assert cp.verified == "numeric"
+    assert cp.order_stats is not None
+
+
+# ---------------------------------------------------------------------------
+# Property: ANY dependency-respecting linearisation plans safely
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_any_linearisation_plans_safely_at_byte_and_row_granularity(seed):
+    """The §II.D safety argument is order-independent: whatever
+    dependency-respecting linearisation the search visits, the planned
+    overlaps must survive Plan.validate() at byte granularity AND the
+    row-blocked legaliser's exact row-extent check."""
+    g = zoo.squeezenet()
+    order = OrderMoves(g).random_topological(random.Random(seed))
+    plan = plan_dmo(g, order, method="algorithmic")
+    plan.validate()
+    legalise_for_blocks(plan).validate()
