@@ -2,10 +2,12 @@
 Prints ``name,us_per_call,derived`` CSV rows.
 
 ``--json [PATH]`` additionally writes a structured artifact (default
-``BENCH_pr8.json``): per-model plan peaks (fixed-order vs joint
+``BENCH_pr9.json``): per-model plan peaks (fixed-order vs joint
 execution-order x overlap search, plus the order-search wall time),
-blocked/window rows, pallas launch counts (fused band chains collapse to
-one), compile time, and exec throughput per backend×dtype — so the perf trajectory is machine-readable
+blocked/window rows, the shipped layout's packing (packed peak, padding
+overhead, the legacy layout's cost for comparison), pallas launch counts
+(fused band chains collapse to one), compile time, and exec throughput
+per backend×dtype — so the perf trajectory is machine-readable
 instead of living in prose. ``--sweep off`` skips the CSV sweep when only
 the artifact is wanted. ``scripts/bench_diff.py`` diffs two artifacts and
 fails on regressions (the CI perf gate).
@@ -59,6 +61,12 @@ def _json_payload(rows):
             entry.update({
                 "blocked_rows": bp.total_rows,
                 "blocked_kb": round(bp.padded_peak_bytes / 1024, 1),
+                "packed_peak_kb": round(bp.padded_peak_bytes / 1024, 1),
+                "padding_overhead_pct": round(bp.padding_overhead_pct, 1),
+                "legacy_blocked_kb": round(
+                    (bp.legacy_padded_bytes or bp.padded_peak_bytes)
+                    / 1024, 1),
+                "packing": bp.packing,
                 "window_rows": ws.max_window_rows,
                 "window_pct": round(
                     100.0 * ws.max_window_rows / ws.total_rows, 1),
@@ -108,7 +116,7 @@ def _json_payload(rows):
                 (time.perf_counter() - t0) / n * 1e6, 1)
 
     return {
-        "schema": "repro-dmo-bench-v2",
+        "schema": "repro-dmo-bench-v3",
         "models": models,
         "exec_us_per_call": exec_us,
         "sweep_rows": [[n, round(us, 1), d] for n, us, d in rows],
@@ -120,10 +128,10 @@ def main(argv=None) -> None:
     os.environ.setdefault("REPRO_DMO_DISK_CACHE", "1")
     ap = argparse.ArgumentParser(
         prog="benchmarks.run", description="DMO benchmark sweep")
-    ap.add_argument("--json", nargs="?", const="BENCH_pr8.json",
+    ap.add_argument("--json", nargs="?", const="BENCH_pr9.json",
                     default=None, metavar="PATH",
                     help="also write the structured benchmark artifact "
-                         "(default path: BENCH_pr8.json)")
+                         "(default path: BENCH_pr9.json)")
     ap.add_argument("--sweep", choices=("on", "off"), default="on",
                     help="run the full CSV sweep ('off' keeps --json cheap "
                          "on a warm plan cache)")

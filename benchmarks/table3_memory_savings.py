@@ -18,8 +18,10 @@ attempt (default 8M arena elements, which covers both 8-bit rows).
 
 Since the row-blocked layout layer, each row additionally reports the
 *legalised* (row-blocked) arena peak next to the byte-granular one: what a
-compiled-mode (tiled VMEM) execution actually allocates, with the tiling
-padding overhead made explicit against the report's stated per-model bound
+compiled-mode (tiled VMEM) execution actually allocates. Since packed
+row-blocked layouts the column states the packed overhead next to what the
+legacy one-image-row-per-arena-row layout would have cost, and only the
+packed overhead is held to the report's stated per-model bound
 (:func:`padding_bound_pct`; rows exceeding it print OVER-BOUND).
 
 Since the joint execution-order x overlap search, each row also carries an
@@ -47,28 +49,28 @@ from repro.core.pipeline import auto_budget_s, compile as compile_graph
 _EXEC_ELEMS = int(os.environ.get("REPRO_DMO_EXEC_ELEMS", 8_000_000))
 
 #: Stated per-model bound on the row-blocked tiling padding (+% over the
-#: byte-granular DMO peak). One image row per (lane-tiled) arena row plus
-#: sublane-aligned offsets costs real bytes, and the *tighter* the byte plan
-#: packs the larger the relative padding — measured ~+105% on the flagship
-#: 8-bit MobileNet up to ~+715% on MobileNet v2 0.35 (whose widest image
-#: row sets the arena rowlen while DMO halves the byte peak). Split-band
-#: winners (overlap-aware splitting) push the ratio further still: the
-#: byte peak drops AND every band is its own image-layout tensor whose
-#: halo rows and sublane-aligned offset pad separately — the 8-bit rows'
-#: bounds cover their measured split-plan overheads (+437% / +317%).
-#: Bounds are the measured overheads with ~30-40% plan-variability
-#: headroom; the bound makes a padding regression loud in this report
-#: (rows print OVER-BOUND) and in tests/test_block_layouts.py.
+#: byte-granular DMO peak), for the PACKED layout the legaliser now ships
+#: (`packing="auto"`: multiple narrow image rows per lane-tiled arena row,
+#: wide rows spanning several arena rows, per-model arena rowlen swept for
+#: the lowest padded peak). The legacy one-image-row-per-arena-row layout
+#: cost +105%..+715% (split-band winners up to +437%); packing cuts the
+#: measured winner-plan overheads to +7%..+51% zoo-wide (flagship 8-bit
+#: MobileNet: +295% legacy -> +48% packed on the split winner, +140% ->
+#: +20% on the unsplit DMO plan). Bounds are the measured packed overheads
+#: with ~30-60% plan-variability headroom; only the *packed* layout is
+#: held to them — rows exceeding the bound print OVER-BOUND here and fail
+#: tests/test_block_layouts.py.
 _PAD_BOUND_PCT = {
-    "mobilenet_v1_1.0_224": 280.0,
-    "mobilenet_v1_1.0_224_8bit": 450.0,
-    "mobilenet_v1_0.25_128_8bit": 600.0,
-    "mobilenet_v2_0.35_224": 1000.0,
-    "mobilenet_v2_1.0_224": 450.0,
-    "inception_resnet_v2": 470.0,
-    "nasnet_mobile": 570.0,
+    "mobilenet_v1_1.0_224": 70.0,
+    "mobilenet_v1_1.0_224_8bit": 70.0,
+    "mobilenet_v1_0.25_128_8bit": 80.0,
+    "mobilenet_v1_0.25_224": 80.0,
+    "mobilenet_v2_0.35_224": 75.0,
+    "mobilenet_v2_1.0_224": 60.0,
+    "inception_resnet_v2": 65.0,
+    "nasnet_mobile": 55.0,
 }
-_PAD_BOUND_DEFAULT_PCT = 400.0
+_PAD_BOUND_DEFAULT_PCT = 75.0
 
 
 def padding_bound_pct(name: str) -> float:
@@ -87,10 +89,12 @@ def _blocked_status(name: str, cp, g) -> str:
         except ValueError as e:
             return f"blocked=n/a({e})"
     bound = padding_bound_pct(name)
-    flag = "" if bp.padding_overhead_pct <= bound else " OVER-BOUND"
+    pad = bp.padding_overhead_pct
+    flag = "" if pad <= bound else " OVER-BOUND"
+    legacy = (f"legacy +{bp.legacy_padding_overhead_pct:.1f}%, "
+              if bp.packing == "packed" else "legacy layout, ")
     return (f"blocked={bp.padded_peak_bytes / 1024:.0f}KB "
-            f"pad=+{bp.padding_overhead_pct:.1f}%"
-            f"(bound {bound:.0f}%){flag}")
+            f"pad=+{pad:.1f}%({legacy}bound {bound:.0f}%){flag}")
 
 
 def _order_status(cp) -> str:

@@ -1,7 +1,8 @@
 """Diff two ``BENCH_*.json`` artifacts and fail on perf regressions.
 
 Compares the structural per-model metrics (arena peaks, blocked rows,
-streaming window rows/bytes, pallas launch counts) of two
+packed-layout padding overheads, streaming window rows/bytes, pallas
+launch counts) of two
 ``benchmarks.run --json`` artifacts over their *common* keys and exits
 non-zero when any metric regresses by more than the threshold (default 5%).
 Structural metrics are machine-independent, so the gate is deterministic;
@@ -46,6 +47,8 @@ MODEL_METRICS = {
     "saving_pct": "higher",
     "baseline_kb": "equal",            # graph-derived: any drift is a bug
     "fixed_dmo_kb": "lower",           # best fixed-order plan (pre order-search)
+    "padding_overhead_pct": "lower",   # shipped layout's tiling tax over dmo_kb
+    "packed_peak_kb": "lower",         # padded peak of the shipped layout
 }
 
 #: Wall-clock metrics, compared only under ``--timing``.
@@ -125,7 +128,10 @@ def series(paths, metric: str = "dmo_kb") -> list:
         row = [n]
         for _, models in arts:
             v = models.get(n, {}).get(metric)
-            row.append("-" if v is None else f"{v:g}")
+            # older artifacts may predate the metric or carry it as a
+            # non-numeric field (e.g. packing="legacy") — print "-"
+            numeric = isinstance(v, (int, float)) and not isinstance(v, bool)
+            row.append(f"{v:g}" if numeric else "-")
         rows.append(row)
     lines = ["  ".join(c.ljust(w) if i == 0 else c.rjust(w)
                        for i, (c, w) in enumerate(zip(row, widths)))

@@ -9,7 +9,10 @@ Runs the compiled plan on the selected execution route and writes:
   live window ``[lo, hi)`` in arena rows;
 - ``"C"`` counter tracks: ``arena_live_bytes`` (numpy route: bytes of the
   byte arena occupied by tensors live at each step — the planner's
-  occupancy curve), ``window_rows`` (each op's streaming VMEM-resident
+  occupancy curve), ``arena_padded_bytes`` (the same liveness costed in
+  the legalised row-blocked layout — whole padded arena rows per tensor,
+  so the gap between the two curves IS the lane-padding tax the packed
+  layouts shrink), ``window_rows`` (each op's streaming VMEM-resident
   rows), and ``pallas_launches`` (pallas routes: cumulative launch count).
 
 Routes:
@@ -98,6 +101,15 @@ def trace_events(cp) -> list:
         events.append({"name": "arena_live_bytes", "ph": "C",
                        "ts": round(ts, 3), "pid": 1,
                        "args": {"bytes": int(live)}})
+        if bp is not None:
+            # what the same liveness costs in the legalised (row-blocked,
+            # possibly packed) layout: whole padded arena rows per tensor
+            padded = sum(bp.layouts[t].rows * bp.row_bytes
+                         for t, (s0, e0) in scopes.items()
+                         if s0 <= step <= e0 and t in bp.layouts)
+            events.append({"name": "arena_padded_bytes", "ph": "C",
+                           "ts": round(ts, 3), "pid": 1,
+                           "args": {"bytes": int(padded)}})
         if w is not None:
             events.append({"name": "window_rows", "ph": "C",
                            "ts": round(ts, 3), "pid": 1,

@@ -57,8 +57,9 @@ import numpy as np
 from repro.core.exec import ops as X
 from repro.core.exec import unwrap_plan
 from repro.core.graph import Op
-from repro.core.planner import (BlockPlan, Plan, fused_slots,
-                                legalise_for_blocks)
+from repro.core.planner import (BlockPlan, Plan, chain_addr_of,
+                                chain_rows_of, fused_slots,
+                                legalise_for_blocks, tile_rows)
 
 
 def _fused_chains(order: Sequence[Op]) -> Dict[str, List[Op]]:
@@ -79,6 +80,12 @@ def _fused_chains(order: Sequence[Op]) -> Dict[str, List[Op]]:
         pos[cname] = i
         chains.setdefault(cname, []).append(op)
     return chains
+
+
+def _addr_triple(lay) -> Tuple[int, int, int]:
+    """A layout's packed-addressing spec triple
+    ``(cols_per_row, row_span, image_rowlen)``."""
+    return (lay.cols_per_row, lay.row_span, lay.image_rowlen)
 
 
 def _canon_meta(op: Op) -> Tuple:
@@ -152,7 +159,10 @@ class PallasExecutor:
     defers to the shared ``REPRO_DMO_INTERPRET`` switch. ``layout``:
     ``"auto"`` runs the row-blocked program whenever the plan legalises
     (uniform dtype, no aggregated views) and falls back to the flat byte
-    program otherwise; ``"blocks"`` / ``"flat"`` force one program.
+    program otherwise; ``"blocks"`` / ``"flat"`` force one program. The
+    legalisation itself prefers *packed* row layouts (planner
+    ``packing="auto"``) and reverts to the legacy one-image-row-per-arena-
+    row layout whenever packing fails to reduce the padded peak.
     Compiled and streaming modes require the row-blocked program — a flat
     byte arena cannot meet the VMEM tilings. ``vmem_budget`` (bytes) gates
     execution: compiled mode refuses arenas larger than it, streaming mode
@@ -346,6 +356,8 @@ class PallasExecutor:
         operands)."""
         from repro.kernels.arena_ops import OpSpec
         dtype = "i8" if bplan.dtype_bytes == 1 else "f32"
+        packed = bplan.packing == "packed"
+        sub = bplan.tiling[0]
         chains = _fused_chains(bplan.order)
         emitted: set = set()
         specs: List[OpSpec] = []
@@ -365,6 +377,14 @@ class PallasExecutor:
             lays = [bplan.layout_of(t) for t in ins]
             out = bplan.layout_of(op.output)
             q = X.op_quant(op, quant)
+            # packed plans carry their addressing triples into the kernels;
+            # legacy plans emit the exact pre-packing specs (shared lowering
+            # cache, bit-identical programs)
+            extra = dict(
+                in_addr=tuple(_addr_triple(l) for l in lays),
+                out_addr=_addr_triple(out),
+                out_tile=tile_rows(out.cols_per_row, out.row_span, sub),
+            ) if packed else {}
             specs.append(OpSpec(
                 kind=op.kind,
                 in_off=tuple(l.row_offset for l in lays),
@@ -376,7 +396,8 @@ class PallasExecutor:
                 qmeta=_canon_qmeta(op, q),
                 rowlen=bplan.arena_rowlen,
                 in_rows=tuple((l.rows, l.rowlen) for l in lays),
-                out_rows=(out.rows, out.rowlen)))
+                out_rows=(out.rows, out.rowlen),
+                **extra))
         return tuple(specs)
 
     def _fused_block_spec(self, bplan: BlockPlan, members: List[Op],
@@ -393,15 +414,26 @@ class PallasExecutor:
         cat = members[-1]
         internal = {op.output.storage() for op in members[:-1]}
         streaming = window is not None
+        packed = bplan.packing == "packed"
+        rows_of = chain_rows_of(bplan)
+        addr_of = chain_addr_of(bplan)
 
-        def rows_of(s):
+        def triple_of(s):
+            """The packed-addressing spec triple of a chain operand —
+            arena tensors from their layout, scratch tensors from the
+            shared :func:`~repro.core.planner.chain_addr_of` rule."""
             lay = bplan.layouts.get(s)
-            return lay.rows if lay is not None else int(s.shape[-3])
+            if lay is not None:
+                return _addr_triple(lay)
+            c, k = addr_of(s)
+            return (c, k, int(s.shape[-2]) * int(s.shape[-1]))
 
         def used_of(s):
             lay = bplan.layouts.get(s)
-            return lay.rowlen if lay is not None \
-                else int(s.shape[-2]) * int(s.shape[-1])
+            if lay is not None:
+                return lay.rowlen
+            c, k, rl = triple_of(s)
+            return L if k > 1 else c * rl
 
         slots, total = fused_slots(members, rows_of, round_to=sub,
                                    include_io=streaming)
@@ -422,6 +454,10 @@ class PallasExecutor:
             placed = [place(t) for t in op.inputs]
             o_off, o_rows, o_scr = place(op.output)
             q = X.op_quant(op, quant)
+            extra = dict(
+                in_addr=tuple(triple_of(t.storage()) for t in op.inputs),
+                out_addr=triple_of(op.output.storage()),
+            ) if packed else {}
             stages.append(OpSpec(
                 kind=op.kind,
                 in_off=tuple(p[0] for p in placed),
@@ -435,7 +471,8 @@ class PallasExecutor:
                 in_rows=tuple(p[1] for p in placed),
                 out_rows=o_rows,
                 in_scratch=tuple(p[2] for p in placed),
-                out_scratch=o_scr))
+                out_scratch=o_scr,
+                **extra))
         ext = self._chain_ext_inputs(members, internal)
         out_lay = bplan.layout_of(cat.output)
         spec = OpSpec(
@@ -629,12 +666,22 @@ class PallasExecutor:
         scattered into its block layout (row-major over the used row
         prefix)."""
         dt = X.arena_dtype(bplan.dtype_bytes)
-        arena = np.zeros((bplan.total_rows, bplan.arena_rowlen), dt)
+        L = bplan.arena_rowlen
+        arena = np.zeros((bplan.total_rows, L), dt)
         for t in graph.tensors:
             if t.kind != "input":
                 continue
             lay = bplan.layout_of(t)
             flat = np.asarray(inputs[t.name], dt).reshape(-1)
+            k = lay.row_span
+            if k > 1:
+                # one image row spans k arena rows, column-padded per row
+                rl, h = lay.image_rowlen, lay.rows // k
+                block = np.zeros((h, k * L), dt)
+                block[:, :rl] = flat.reshape(h, rl)
+                arena[lay.row_offset:lay.row_offset + lay.rows, :] = \
+                    block.reshape(lay.rows, L)
+                continue
             block = np.zeros(lay.rows * lay.rowlen, dt)
             block[:flat.size] = flat
             arena[lay.row_offset:lay.row_offset + lay.rows,
@@ -645,10 +692,18 @@ class PallasExecutor:
     def _gather_block_outputs(bplan: BlockPlan, graph,
                               out_arena: np.ndarray) -> Dict[str, np.ndarray]:
         outs: Dict[str, np.ndarray] = {}
+        L = bplan.arena_rowlen
         for t in graph.tensors:
             if t.kind != "output":
                 continue
             lay = bplan.layout_of(t)
+            k = lay.row_span
+            if k > 1:
+                rl, h = lay.image_rowlen, lay.rows // k
+                rows = out_arena[lay.row_offset:lay.row_offset + lay.rows, :]
+                flat = rows.reshape(h, k * L)[:, :rl]
+                outs[t.name] = flat.reshape(-1)[:t.elems].reshape(t.shape)
+                continue
             block = out_arena[lay.row_offset:lay.row_offset + lay.rows,
                               :lay.rowlen]
             outs[t.name] = block.reshape(-1)[:t.elems].reshape(t.shape)

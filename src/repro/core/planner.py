@@ -229,15 +229,42 @@ TPU_TILES: Dict[int, Tuple[int, int]] = {4: (8, 128), 2: (16, 128),
 _ROW_STREAMING_KINDS = frozenset({"conv2d", "depthwise_conv2d", "pool"})
 
 
+def pack_geometry(rowlen: int, arena_rowlen: int) -> Tuple[int, int]:
+    """Packed addressing geometry ``(cols_per_row, row_span)`` for an image
+    row of ``rowlen`` elements in an arena of ``arena_rowlen``-element rows:
+    narrow image rows pack ``cols_per_row`` per arena row; an image row wider
+    than the arena row spans ``row_span`` consecutive arena rows. Exactly one
+    of the two factors exceeds 1 (both are 1 when ``rowlen`` fills the arena
+    row)."""
+    if rowlen <= arena_rowlen:
+        return max(1, arena_rowlen // rowlen), 1
+    return 1, -(-rowlen // arena_rowlen)
+
+
+def _ar_of(r: int, c: int, k: int) -> int:
+    """First arena row (block-relative) holding image row ``r`` under the
+    packed geometry ``(c, k)``."""
+    return r // c if c > 1 else r * k
+
+
+def _ar_top(r: int, c: int, k: int) -> int:
+    """Last arena row (block-relative) image row ``r`` touches."""
+    return r // c if c > 1 else (r + 1) * k - 1
+
+
 @dataclasses.dataclass(frozen=True)
 class BlockLayout:
     """Row-blocked placement of one arena tensor: the tensor occupies
-    ``rows`` consecutive arena rows starting at ``row_offset`` (a sublane-
-    tile-aligned row index), using the first ``rowlen`` elements of each row.
-    Conv/pool operands map one *image* row per arena row (``rows = H``,
-    ``rowlen = W*C``); every other tensor packs densely (``rowlen`` = the
-    full arena row). The tail of each row — and of the final dense row — is
-    tiling padding, accounted by :meth:`BlockPlan.padded_peak_bytes`."""
+    ``rows`` consecutive arena rows starting at ``row_offset``, using the
+    first ``rowlen`` elements of each row. Conv/pool operands keep image-row
+    structure; on a legacy layout that is one image row per arena row
+    (``rows = H``, ``rowlen = W*C``), on a packed layout ``cols_per_row``
+    narrow image rows share each arena row (``rows = ceil(H/c)``, ``rowlen =
+    c*(W*C)``) or one wide image row spans ``row_span`` arena rows (``rows =
+    H*k``, ``rowlen`` = the full arena row). Every other tensor packs
+    densely (``rowlen`` = the full arena row). The tail of each row — and of
+    the final dense row — is tiling padding, accounted by
+    :meth:`BlockPlan.padded_peak_bytes`."""
 
     name: str
     shape: Tuple[int, ...]
@@ -245,6 +272,8 @@ class BlockLayout:
     row_offset: int
     rows: int
     rowlen: int              # elements of each arena row this tensor uses
+    cols_per_row: int = 1    # image rows packed per arena row
+    row_span: int = 1        # arena rows spanned by one image row
 
     @property
     def elems(self) -> int:
@@ -252,6 +281,37 @@ class BlockLayout:
         for s in self.shape:
             n *= int(s)
         return n
+
+    @property
+    def image_rowlen(self) -> int:
+        """Elements of one *image* row (= ``W*C`` for image layouts; the
+        used row length for dense/legacy ones)."""
+        if self.cols_per_row > 1:
+            return self.rowlen // self.cols_per_row
+        if self.row_span > 1:
+            return int(self.shape[-2]) * int(self.shape[-1])
+        return self.rowlen
+
+    def addr(self, r: int, col: int) -> Tuple[int, int]:
+        """(block-relative arena row, lane offset) of image-row element
+        ``(r, col)`` — the packed addressing every kernel route uses."""
+        if self.cols_per_row > 1:
+            rl = self.rowlen // self.cols_per_row
+            return r // self.cols_per_row, (r % self.cols_per_row) * rl + col
+        if self.row_span > 1:
+            return r * self.row_span + col // self.rowlen, col % self.rowlen
+        return r, col
+
+    def image_addr(self, ar: int, lane: int) -> Tuple[int, int]:
+        """Inverse of :meth:`addr`: the ``(image_row, col)`` stored at
+        block-relative arena row ``ar``, lane ``lane``."""
+        if self.cols_per_row > 1:
+            rl = self.rowlen // self.cols_per_row
+            return ar * self.cols_per_row + lane // rl, lane % rl
+        if self.row_span > 1:
+            return (ar // self.row_span,
+                    (ar % self.row_span) * self.rowlen + lane)
+        return ar, lane
 
 
 @dataclasses.dataclass
@@ -274,6 +334,9 @@ class BlockPlan(Plan):
         default_factory=dict)
     row_overlaps: Dict[Tuple[int, int], int] = dataclasses.field(
         default_factory=dict)          #: (op idx, input idx) -> O_s in rows
+    packing: str = "legacy"            #: "legacy" | "packed" row layout
+    legacy_padded_bytes: int = 0       #: one-image-row-per-arena-row peak
+    legacy_window_rows: int = 0        #: legacy streaming max_window_rows
 
     @property
     def dtype_bytes(self) -> int:
@@ -298,6 +361,28 @@ class BlockPlan(Plan):
         if base == 0:
             return 0.0
         return 100.0 * (self.padded_peak_bytes / base - 1.0)
+
+    @property
+    def row_align(self) -> int:
+        """Row-offset alignment of this layout's placements: the sublane
+        tile on legacy layouts; packed layouts place at a finer 8-row grain
+        (a whole sublane tile of slack per int8 tensor would give back much
+        of the packing win — DMA and in-kernel ``pl.dslice`` addressing take
+        arbitrary row offsets)."""
+        sub = self.tiling[0]
+        return min(sub, 8) if self.packing == "packed" else sub
+
+    @property
+    def legacy_padding_overhead_pct(self) -> float:
+        """The one-image-row-per-arena-row (legacy) layout's padding
+        overhead over the byte-granular source peak — what
+        :attr:`padding_overhead_pct` was before packing. Equal to the packed
+        overhead when the never-regress fallback kept the legacy layout."""
+        base = (self.source or self).peak_bytes
+        legacy = self.legacy_padded_bytes or self.padded_peak_bytes
+        if base == 0:
+            return 0.0
+        return 100.0 * (legacy / base - 1.0)
 
     def layout_of(self, t: Tensor) -> "BlockLayout":
         return self.layouts[t.storage()]
@@ -370,19 +455,29 @@ class BlockPlan(Plan):
                  f"{self.arena_rowlen} elems ({self.padded_peak_bytes} bytes,"
                  f" tile {self.tiling[0]}x{self.tiling[1]}) = "
                  f"+{self.padding_overhead_pct:.1f}% padding over "
-                 f"byte-granular peak {base}",
-                 "  " + ws.summary()]
+                 f"byte-granular peak {base}"]
+        if self.packing == "packed":
+            lines.append(
+                f"  packed rows: +{self.padding_overhead_pct:.1f}% vs "
+                f"legacy +{self.legacy_padding_overhead_pct:.1f}% "
+                f"({self.legacy_padded_bytes} bytes, "
+                f"max window {self.legacy_window_rows} rows)")
+        lines.append("  " + ws.summary())
         return "\n".join(lines)
 
 
-def _min_row_distance(op: Op) -> int:
-    """Smallest safe input/output *row* distance for a row-streaming op:
-    writing output row ``i`` (which clobbers its whole arena row, padding
-    included) must leave every input row that rows ``> i`` still read
-    intact. Exact by enumeration over output rows — the analytic byte O_s
-    rounded to rows can overstate the safe overlap when the output's dense
-    rows are narrower than the input's (e.g. width-strided convs), so the
-    legaliser takes the max of both distances."""
+def _min_row_distance(op: Op, ci: int = 1, ki: int = 1,
+                      co: int = 1, ko: int = 1) -> int:
+    """Smallest safe input/output *arena-row* distance for a row-streaming
+    op: writing output image row ``i`` (which clobbers the whole arena rows
+    it touches, padding and co-packed neighbours included) must leave every
+    input row that rows ``> i`` still read intact. Exact by enumeration over
+    output rows — the analytic byte O_s rounded to rows can overstate the
+    safe overlap when the output's dense rows are narrower than the input's
+    (e.g. width-strided convs), so the legaliser takes the max of both
+    distances. ``(ci, ki)`` / ``(co, ko)`` are the operands' packed
+    ``(cols_per_row, row_span)`` geometries; the defaults reproduce the
+    legacy one-image-row-per-arena-row distance exactly."""
     if op.kind not in _ROW_STREAMING_KINDS:
         return 0
     ih = op.inputs[0].shape[-3]
@@ -401,7 +496,7 @@ def _min_row_distance(op: Op) -> int:
                 break
         if lo is None:
             continue
-        d = max(d, nxt - lo)
+        d = max(d, _ar_top(nxt - 1, co, ko) - _ar_of(lo, ci, ki) + 1)
     return d
 
 
@@ -431,20 +526,161 @@ def _image_layouts(plan: Plan) -> Dict[Tensor, Tuple[int, int]]:
     return image
 
 
+def _legalise_at(plan: Plan, sub: int, lanes: int, db: int,
+                 image: Dict[Tensor, Tuple[int, int]], arena_rowlen: int,
+                 packed: bool) -> BlockPlan:
+    """One legalisation at a fixed ``arena_rowlen``. ``packed=False`` is the
+    legacy layout (one image row per arena row, sublane-aligned placement,
+    byte O_s distance rounded to whole rows — bit-identical to the pre-
+    packing legaliser); ``packed=True`` derives per-tensor
+    ``(cols_per_row, row_span)`` geometry from :func:`pack_geometry`, the
+    O_s distance in packed arena-row units, and places at the finer packed
+    row alignment."""
+    tensors = list(plan.offsets)
+    row_bytes = arena_rowlen * db
+
+    rows: Dict[Tensor, int] = {}
+    rowlen: Dict[Tensor, int] = {}
+    addr: Dict[Tensor, Tuple[int, int]] = {}
+    for t in tensors:
+        if t in image:
+            h, rl = image[t]
+            c, k = pack_geometry(rl, arena_rowlen) if packed else (1, 1)
+            addr[t] = (c, k)
+            rows[t] = -(-h // c) if c > 1 else h * k
+            rowlen[t] = c * rl if k == 1 else arena_rowlen
+        else:
+            addr[t] = (1, 1)
+            rows[t] = -(-t.elems // arena_rowlen)
+            rowlen[t] = arena_rowlen
+
+    # row-granular O_s per recorded overlap: the byte distance re-derived in
+    # (packed) arena-row units, stiffened by the exact row-streaming bound
+    row_overlaps: Dict[Tuple[int, int], int] = {}
+    for (oi, ii), v in plan.overlaps.items():
+        op = plan.order[oi]
+        outp = op.output.storage()
+        if not packed:
+            dist = -(-(outp.nbytes - v) // row_bytes)
+            dist = max(dist, _min_row_distance(op))
+        else:
+            inp = op.inputs[ii].storage()
+            co, ko = addr[outp]
+            # last clobber-endangered element -> its last packed arena row
+            last = -(-(outp.nbytes - v) // db) - 1
+            if outp in image:
+                h, rl = image[outp]
+                dist = _ar_top(min(last // rl, h - 1), co, ko) + 1
+            else:
+                dist = last // arena_rowlen + 1
+            ci, ki = addr.get(inp, (1, 1))
+            dist = max(dist, _min_row_distance(op, ci, ki, co, ko))
+        row_overlaps[(oi, ii)] = max(0, rows[outp] - dist)
+
+    align = min(sub, 8) if packed else sub
+    scopes = plan.graph.scopes(plan.order)
+    placed: Dict[Tensor, int] = {}
+    for t in sorted(tensors, key=lambda t: (plan.offsets[t], -t.nbytes)):
+        placed[t] = _lowest_feasible(t, placed, scopes, plan.order,
+                                     row_overlaps, sizes=rows, align=align)
+    total = max((placed[t] + rows[t] for t in tensors), default=0)
+    total = -(-total // sub) * sub
+
+    layouts = {
+        t: BlockLayout(t.name, tuple(t.shape), db, placed[t], rows[t],
+                       rowlen[t], cols_per_row=addr[t][0],
+                       row_span=addr[t][1])
+        for t in tensors
+    }
+    # the legalised plan re-expressed in bytes: offsets are row-aligned and
+    # each O_s is the row-rounded effective overlap (>= 0), so byte-level
+    # validate()/numpy execution see a normal — just padded — plan
+    offsets = {t: placed[t] * row_bytes for t in tensors}
+    overlaps: Dict[Tuple[int, int], int] = {}
+    for (oi, ii), os_rows in row_overlaps.items():
+        outp = plan.order[oi].output.storage()
+        dist_b = (rows[outp] - os_rows) * row_bytes
+        overlaps[(oi, ii)] = max(0, outp.nbytes - dist_b)
+    return BlockPlan(plan.graph, list(plan.order), offsets, overlaps,
+                     plan.strategy + "+blocks", source=plan,
+                     tiling=(sub, lanes), arena_rowlen=arena_rowlen,
+                     total_rows=total, layouts=layouts,
+                     row_overlaps=row_overlaps,
+                     packing="packed" if packed else "legacy")
+
+
+def _packed_candidates(image: Dict[Tensor, Tuple[int, int]], lanes: int,
+                       legacy_rowlen: int) -> List[int]:
+    """Candidate packed arena rowlens: each distinct image rowlen rounded to
+    lanes (packing is densest when the arena row is a small multiple of the
+    image rows it holds), the 1.5x points between them (two narrow rows plus
+    half a wider one — the winner on layer pyramids whose widths halve), the
+    lane tile and its double, and the legacy rowlen itself (pure re-derive:
+    span-free, but packed O_s and alignment). Wider-than-legacy rows can
+    only add padding, so candidates cap at ``legacy_rowlen``."""
+    rls = sorted({used for _, used in image.values()})
+    cands = {-(-rl // lanes) * lanes for rl in rls}
+    cands |= {-(-(3 * rl) // (2 * lanes)) * lanes for rl in rls}
+    cands |= {legacy_rowlen, lanes, 2 * lanes}
+    return sorted(c for c in cands if 0 < c <= legacy_rowlen)
+
+
+def _best_packed(plan: Plan, sub: int, lanes: int, db: int,
+                 image: Dict[Tensor, Tuple[int, int]], legacy_rowlen: int,
+                 legacy_bp: BlockPlan, force: bool) -> Optional[BlockPlan]:
+    """Sweep the packed candidate rowlens and return the best packed
+    legalisation, or ``None`` when none beats the legacy layout (the
+    never-regress fallback). "Beats" is lexicographic (padded peak, max
+    streaming window): a candidate must not regress either metric vs legacy
+    and must strictly improve at least one. ``force=True`` (the
+    ``packing="packed"`` override) returns the best candidate even when
+    legacy wins."""
+    if not image:
+        return None
+    legacy_padded = legacy_bp.padded_peak_bytes
+    legacy_win = legacy_bp.window_schedule().max_window_rows
+    best: Optional[BlockPlan] = None
+    best_key = None
+    for rowlen in _packed_candidates(image, lanes, legacy_rowlen):
+        bp = _legalise_at(plan, sub, lanes, db, image, rowlen, packed=True)
+        key = (bp.padded_peak_bytes, bp.window_schedule().max_window_rows)
+        if not force and (key[0] > legacy_padded or key[1] > legacy_win):
+            continue
+        if best_key is None or key < best_key:
+            best, best_key = bp, key
+    if best is None:
+        return None
+    if not force and best_key >= (legacy_padded, legacy_win):
+        return None
+    best.legacy_padded_bytes = legacy_padded
+    best.legacy_window_rows = legacy_win
+    return best
+
+
 def legalise_for_blocks(plan: Plan,
                         tiling: Optional[Mapping[int, Tuple[int, int]]] = None,
-                        ) -> BlockPlan:
+                        packing: str = "auto") -> BlockPlan:
     """Legalise a byte-granular plan onto the row-blocked arena grid.
 
-    Every arena tensor gets a ``(rows, rowlen)`` block shape and a
-    sublane-tile-aligned row offset (per-dtype tiles: (8, 128) f32,
-    (32, 128) int8); each op's diagonal distance is re-derived at row
-    granularity — the byte distance ``|out| - O_s`` rounded *up* to whole
-    rows (the ``dmo_arena_dwconv`` rule), stiffened by the exact
-    row-streaming bound of :func:`_min_row_distance`. Placement re-runs the
-    lowest-feasible-offset allocator in row units over the same liveness
-    scopes, inserting tensors in the source plan's (byte-offset) order, so
-    the legalised plan keeps the source's packing structure.
+    Every arena tensor gets a ``(rows, rowlen)`` block shape and an aligned
+    row offset (per-dtype tiles: (8, 128) f32, (32, 128) int8); each op's
+    diagonal distance is re-derived at row granularity — the byte distance
+    ``|out| - O_s`` rounded *up* to whole rows (the ``dmo_arena_dwconv``
+    rule), stiffened by the exact row-streaming bound of
+    :func:`_min_row_distance`. Placement re-runs the lowest-feasible-offset
+    allocator in row units over the same liveness scopes, inserting tensors
+    in the source plan's (byte-offset) order, so the legalised plan keeps
+    the source's packing structure.
+
+    ``packing`` selects the row layout family:
+
+    - ``"legacy"`` — one image row per lane-tiled arena row whose length is
+      set by the widest image row (the pre-packing layout, bit-identical);
+    - ``"packed"`` — pack ``cols_per_row`` narrow image rows per arena row
+      (or span wide rows over ``row_span`` arena rows) at the best candidate
+      rowlen, cutting the lane-padding tax;
+    - ``"auto"`` (default) — packed when it beats legacy on (padded peak,
+      max streaming window), else the legacy layout: never regress.
 
     Raises ``ValueError`` for plans no row-blocked arena can express
     (mixed-dtype plans — one typed 2-D buffer has one element size —
@@ -452,13 +688,16 @@ def legalise_for_blocks(plan: Plan,
     ``AssertionError`` when the *source* plan is itself unsafe: the
     legaliser re-places tensors, so it must refuse to silently repair a
     clobbering layout."""
+    if packing not in ("auto", "packed", "legacy"):
+        raise ValueError(f"unknown packing {packing!r}: "
+                         "expected auto|packed|legacy")
     if tiling is None:
         # memoised per plan: executors, reports and benchmarks all legalise
-        # the same plan, and re-placement + two O(T^2) validates per call
+        # the same plan, and the candidate sweep + O(T^2) validates per call
         # would otherwise skew execution timings
         cached = plan.__dict__.get("_block_cache")
-        if cached is not None:
-            return cached
+        if cached is not None and packing in cached:
+            return cached[packing]
     tiles = dict(TPU_TILES) if tiling is None else dict(tiling)
     tensors = list(plan.offsets)
     widths = {t.dtype_bytes for t in tensors}
@@ -478,60 +717,20 @@ def legalise_for_blocks(plan: Plan,
     sub, lanes = tiles[db]
     image = _image_layouts(plan)
 
-    # arena row length: every image row must fit one arena row
+    # legacy arena row length: every image row must fit one arena row
     need = max([lanes] + [used for _, used in image.values()])
-    arena_rowlen = -(-need // lanes) * lanes
-    row_bytes = arena_rowlen * db
+    legacy_rowlen = -(-need // lanes) * lanes
 
-    rows: Dict[Tensor, int] = {}
-    rowlen: Dict[Tensor, int] = {}
-    for t in tensors:
-        if t in image:
-            rows[t], rowlen[t] = image[t]
-        else:
-            rows[t] = -(-t.elems // arena_rowlen)
-            rowlen[t] = arena_rowlen
-
-    # row-granular O_s per recorded overlap: distance = ceil(byte distance /
-    # row), stiffened by the exact row-streaming bound
-    row_overlaps: Dict[Tuple[int, int], int] = {}
-    for (oi, ii), v in plan.overlaps.items():
-        op = plan.order[oi]
-        outp = op.output.storage()
-        dist = -(-(outp.nbytes - v) // row_bytes)
-        dist = max(dist, _min_row_distance(op))
-        row_overlaps[(oi, ii)] = max(0, rows[outp] - dist)
-
-    scopes = plan.graph.scopes(plan.order)
-    placed: Dict[Tensor, int] = {}
-    for t in sorted(tensors, key=lambda t: (plan.offsets[t], -t.nbytes)):
-        placed[t] = _lowest_feasible(t, placed, scopes, plan.order,
-                                     row_overlaps, sizes=rows, align=sub)
-    total = max((placed[t] + rows[t] for t in tensors), default=0)
-    total = -(-total // sub) * sub
-
-    layouts = {
-        t: BlockLayout(t.name, tuple(t.shape), db, placed[t], rows[t],
-                       rowlen[t])
-        for t in tensors
-    }
-    # the legalised plan re-expressed in bytes: offsets are row-aligned and
-    # each O_s is the row-rounded effective overlap (>= 0), so byte-level
-    # validate()/numpy execution see a normal — just padded — plan
-    offsets = {t: placed[t] * row_bytes for t in tensors}
-    overlaps: Dict[Tuple[int, int], int] = {}
-    for (oi, ii), os_rows in row_overlaps.items():
-        outp = plan.order[oi].output.storage()
-        dist_b = (rows[outp] - os_rows) * row_bytes
-        overlaps[(oi, ii)] = max(0, outp.nbytes - dist_b)
-    bp = BlockPlan(plan.graph, list(plan.order), offsets, overlaps,
-                   plan.strategy + "+blocks", source=plan,
-                   tiling=(sub, lanes), arena_rowlen=arena_rowlen,
-                   total_rows=total, layouts=layouts,
-                   row_overlaps=row_overlaps)
+    bp = _legalise_at(plan, sub, lanes, db, image, legacy_rowlen,
+                      packed=False)
+    if packing != "legacy":
+        packed_bp = _best_packed(plan, sub, lanes, db, image, legacy_rowlen,
+                                 bp, force=(packing == "packed"))
+        if packed_bp is not None:
+            bp = packed_bp
     bp.validate()
     if tiling is None:
-        plan.__dict__["_block_cache"] = bp
+        plan.__dict__.setdefault("_block_cache", {})[packing] = bp
     return bp
 
 
@@ -637,8 +836,29 @@ def _roll_geometry(op: Op) -> Tuple[int, int, int, int]:
     return kh, sh, dh, ph
 
 
+def tile_rows(co: int, ko: int, sub: int) -> int:
+    """Output *image* rows per streaming grid tile under the packed output
+    geometry ``(co, ko)``: the smallest multiple of ``cols_per_row`` that
+    covers ``sub`` image rows, so every arena row's lane phases complete
+    within one tile while the per-tile *input* span (and with it the rolling
+    window) stays at its legacy size instead of scaling with the packing
+    factor. ``sub`` image rows on a legacy layout."""
+    if co > 1:
+        return -(-sub // co) * co
+    return max(1, sub // ko)
+
+
+def tile_arena_rows(co: int, ko: int, sub: int) -> int:
+    """Arena rows one streaming output tile occupies (sublane-rounded):
+    ``sub`` unless one image row spans more than a sublane tile."""
+    tr = tile_rows(co, ko, sub)
+    return _round_up(_ar_top(tr - 1, co, ko) + 1, sub)
+
+
 def rolling_starts(op: Op, xi: int, xo: int, ih: int, oh: int, sub: int,
                    total_rows: int,
+                   in_addr: Tuple[int, int] = (1, 1),
+                   out_addr: Tuple[int, int] = (1, 1),
                    ) -> Tuple[Tuple[int, ...], int]:
     """Per-tile input-window fetch starts for a row-streaming op.
 
@@ -664,18 +884,24 @@ def rolling_starts(op: Op, xi: int, xo: int, ih: int, oh: int, sub: int,
     band separately from the output tile preserves blocked-mode semantics
     row for row.
 
-    Returns ``(starts per tile, win_in)``."""
+    ``ih``/``oh`` are *image* heights; ``in_addr``/``out_addr`` the packed
+    ``(cols_per_row, row_span)`` geometries (legacy defaults: one image row
+    per arena row, tiles of ``sub`` rows). Returns
+    ``(starts per tile, win_in)`` in arena rows."""
     kh, sh, dh, ph = _roll_geometry(op)
-    tr = sub
+    ci, ki = in_addr
+    co, ko = out_addr
+    tr = tile_rows(co, ko, sub)
+    in_arena_rows = -(-ih // ci) if ci > 1 else ih * ki
     need, tiles = 0, []
     for a in range(0, oh, tr):
         b = min(a + tr, oh)
         iy_lo = min(max(a * sh - ph, 0), ih - 1)
         iy_hi = min(max((b - 1) * sh - ph + (kh - 1) * dh, 0), ih - 1)
-        s_t = (iy_lo // sub) * sub
+        s_t = (_ar_of(iy_lo, ci, ki) // sub) * sub
         tiles.append(s_t)
-        need = max(need, iy_hi - s_t + 1)
-    win_in = min(_round_up(need, sub), _round_up(ih, sub))
+        need = max(need, _ar_top(iy_hi, ci, ki) - s_t + 1)
+    win_in = min(_round_up(need, sub), _round_up(in_arena_rows, sub))
     starts = tuple(max(0, min(xi + s_t, total_rows - win_in))
                    for s_t in tiles)
     return starts, win_in
@@ -749,6 +975,44 @@ class WindowSchedule:
         return "\n".join(lines)
 
 
+def chain_addr_of(bplan: BlockPlan):
+    """Packed geometry resolver for fused-chain operands: ``f(tensor
+    storage) -> (cols_per_row, row_span)``. Arena tensors answer from their
+    :class:`BlockLayout`; chain-internal scratch tensors (no layout) derive
+    theirs from :func:`pack_geometry` on their image rowlen — the ONE rule
+    the planner's windows, the backend's fused specs and the kernels'
+    scratch addressing all share. Legacy layouts keep every operand at
+    ``(1, 1)`` (one image row per scratch row)."""
+    packed = bplan.packing == "packed"
+
+    def addr_of(s: Tensor) -> Tuple[int, int]:
+        lay = bplan.layouts.get(s)
+        if lay is not None:
+            return lay.cols_per_row, lay.row_span
+        if not packed:
+            return 1, 1
+        rl = int(s.shape[-2]) * int(s.shape[-1])
+        return pack_geometry(rl, bplan.arena_rowlen)
+
+    return addr_of
+
+
+def chain_rows_of(bplan: BlockPlan):
+    """Arena/scratch row resolver for fused-chain operands: ``f(tensor
+    storage) -> rows``, packed-geometry-aware via :func:`chain_addr_of`."""
+    addr_of = chain_addr_of(bplan)
+
+    def rows_of(s: Tensor) -> int:
+        lay = bplan.layouts.get(s)
+        if lay is not None:
+            return lay.rows
+        c, k = addr_of(s)
+        h = int(s.shape[-3])
+        return -(-h // c) if c > 1 else h * k
+
+    return rows_of
+
+
 def _fused_window(bplan: BlockPlan, members: Sequence[Op],
                   sub: int) -> OpWindow:
     """One staged window for a whole fused band chain. The streaming fused
@@ -757,13 +1021,11 @@ def _fused_window(bplan: BlockPlan, members: Sequence[Op],
     block back — so the resident rows are the ``include_io``
     :func:`fused_slots` packing (chain scratch plus the staged I/O blocks),
     and the row extent spans the external operands' arena placements.
-    Chain-internal tensors have no layouts; their scratch rows are one
-    arena row per image row."""
+    Chain-internal tensors have no layouts; their scratch rows come from
+    the shared :func:`chain_rows_of` rule (one arena row per image row on
+    legacy layouts, packed geometry on packed ones)."""
     internal = {op.output.storage() for op in members[:-1]}
-
-    def rows_of(s: Tensor) -> int:
-        lay = bplan.layouts.get(s)
-        return lay.rows if lay is not None else int(s.shape[-3])
+    rows_of = chain_rows_of(bplan)
 
     _, total = fused_slots(members, rows_of, round_to=sub, include_io=True)
     ext: List[BlockLayout] = []
@@ -815,14 +1077,18 @@ def window_schedule(bplan: BlockPlan) -> "WindowSchedule":
         hi_e = max([l.row_offset + l.rows for l in lays]
                    + [out.row_offset + out.rows])
         if op.kind in _ROW_STREAMING_KINDS and len(lays) == 1:
+            in_addr = (lays[0].cols_per_row, lays[0].row_span)
+            out_addr = (out.cols_per_row, out.row_span)
             starts, win_in = rolling_starts(
                 op, lays[0].row_offset, out.row_offset,
-                lays[0].rows, out.rows, sub, bplan.total_rows)
+                int(op.inputs[0].shape[-3]), int(op.output.shape[-3]),
+                sub, bplan.total_rows, in_addr=in_addr, out_addr=out_addr)
+            out_ar = tile_arena_rows(*out_addr, sub)
             lo = (min(min(starts), lo_e) // sub) * sub
             hi = _round_up(max(max(s + win_in for s in starts), hi_e), sub)
             windows.append(OpWindow(op.name, op.kind, lo, hi,
-                                    win_rows=win_in + sub,
-                                    resident_rows=2 * win_in + sub,
+                                    win_rows=win_in + out_ar,
+                                    resident_rows=2 * win_in + out_ar,
                                     starts=starts))
         else:
             _, _, total = staged_slots([l.rows for l in lays], out.rows, sub)

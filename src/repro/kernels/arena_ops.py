@@ -25,10 +25,14 @@ that the streaming one):
 - **row-blocked** (:class:`_BlockMem`) — the arena is a 2-D
   ``(rows, rowlen)`` buffer *typed* to the plan's dtype, laid out by
   :func:`repro.core.planner.legalise_for_blocks`: operands occupy whole
-  arena rows at sublane-tile-aligned row offsets, conv/pool walk one image
-  row per arena row via ``pl.dslice`` on the row axis, and no bitcasts are
-  needed — the same program lowers under ``interpret=False``. The whole
-  arena is VMEM-resident, so the VMEM capacity caps ``total_rows``.
+  arena rows at row-aligned offsets, conv/pool walk image rows via
+  ``pl.dslice`` on the row axis, and no bitcasts are needed — the same
+  program lowers under ``interpret=False``. Packed layouts (spec
+  ``in_addr``/``out_addr`` triples) put ``cols_per_row`` narrow image rows
+  in each arena row — reads dynamic-slice the lane phase, writes RMW the
+  whole arena row — or span one wide image row over ``row_span``
+  consecutive arena rows. The whole arena is VMEM-resident, so the VMEM
+  capacity caps ``total_rows``.
 - **streaming** (:class:`_StreamRollMem` / :class:`_StreamStageMem`) — the
   arena stays in ``pltpu.ANY`` (HBM) and each op DMAs only its *live
   window* (:class:`repro.core.planner.WindowSchedule`) into VMEM scratch
@@ -118,6 +122,15 @@ class OpSpec:
     win_lo: int = 0                    # live-window extent low edge (rows)
     win_rows: int = 0                  # VMEM-resident rows (0 = non-streaming)
     win_starts: Tuple[int, ...] = ()   # rolling-window fetch starts per tile
+    #: Packed row addressing (blocked/streaming programs only): per-operand
+    #: ``(cols_per_row, row_span, image_rowlen)`` triples from the packed
+    #: :class:`~repro.core.planner.BlockLayout` geometry. Empty = the legacy
+    #: one-image-row-per-arena-row addressing (and bit-identical specs for
+    #: legacy plans). ``out_tile`` is the *image* rows one streaming grid
+    #: tile computes (0 = the dtype sublane, the legacy tiling).
+    in_addr: Tuple[Tuple[int, int, int], ...] = ()
+    out_addr: Tuple[int, int, int] = ()
+    out_tile: int = 0
     #: Fused band-chain super-kernel (``kind == "fused"``): the chain's
     #: member ops in graph order as nested stage specs. Stage offsets whose
     #: ``in_scratch``/``out_scratch`` flag is set are *scratch-local* slot
@@ -152,6 +165,26 @@ def _jnp_dtype(dtype: str):
 def _sub(dtype: str) -> int:
     """Sublane tile rows for the arena dtype (mirrors planner.TPU_TILES)."""
     return 32 if dtype == "i8" else 8
+
+
+def _addr_in(spec: OpSpec, i: int) -> Tuple[int, int, int]:
+    """Input ``i``'s packed addressing triple ((1, 1, 0) = legacy)."""
+    return spec.in_addr[i] if spec.in_addr else (1, 1, 0)
+
+
+def _addr_out(spec: OpSpec) -> Tuple[int, int, int]:
+    return spec.out_addr if spec.out_addr else (1, 1, 0)
+
+
+def _tile_geom(spec: OpSpec) -> Tuple[int, int]:
+    """(image rows, sublane-rounded arena rows) of one streaming output
+    tile — mirrors planner.tile_rows/tile_arena_rows (``out_tile`` is a
+    multiple of ``cols_per_row``, so lane phases complete within a tile)."""
+    sub = _sub(spec.dtype)
+    tr = spec.out_tile or sub
+    c, k, _ = _addr_out(spec)
+    ar = (tr - 1) // c + 1 if c > 1 else tr * k
+    return tr, -(-ar // sub) * sub
 
 
 # ---------------------------------------------------------------------------
@@ -233,6 +266,51 @@ def _out_block(value, rows: int, used: int, L: int, dt):
     return _pad_cols(flat.reshape(rows, used), rows, used, L, dt)
 
 
+def _dec_row(ref, row0, iy, L: int, used: int, addr: Tuple[int, int, int]):
+    """One image row (``used`` elements) of an operand whose image row 0
+    starts at arena row ``row0`` of a (rows, L) ref, at a traced row index
+    ``iy``. Packed rows live at lane phase ``(iy % c) * rl`` of arena row
+    ``iy // c``; a spanning image row occupies ``k`` consecutive arena
+    rows."""
+    c, k, rl = addr
+    if c > 1:
+        row = ref[pl.dslice(row0 + iy // c, 1), :].reshape(L)
+        return jax.lax.dynamic_slice(row, ((iy % c) * rl,), (rl,))
+    if k > 1:
+        return ref[pl.dslice(row0 + iy * k, k), :].reshape(k * L)[:used]
+    return ref[pl.dslice(row0 + iy, 1), :].reshape(L)[:used]
+
+
+def _dec_block(block, rows: int, used: int, L: int,
+               addr: Tuple[int, int, int], n: int):
+    """A whole (rows, L) operand block flattened to its first ``n``
+    elements. Packed/legacy rows are contiguous over the used prefix
+    (packing is row-major in image order); spanning rows carry per-image-row
+    column padding that must be stripped."""
+    _, k, rl = addr
+    if k > 1:
+        h = rows // k
+        flat = block.reshape(h, k * L)[:, :rl].reshape(h * rl)
+    else:
+        flat = block[:, :used].reshape(rows * used)
+    return flat[:n]
+
+
+def _enc_block(value, rows: int, used: int, L: int, dt,
+               addr: Tuple[int, int, int]):
+    """Inverse of :func:`_dec_block`: an output tensor as a padded
+    (rows, L) arena block under the given addressing."""
+    _, k, rl = addr
+    if k > 1:
+        h = rows // k
+        flat = value.reshape(-1).astype(dt)
+        if flat.size < h * rl:
+            flat = jnp.concatenate([flat, jnp.zeros(h * rl - flat.size, dt)])
+        return _pad_cols(flat.reshape(h, rl), h, rl, k * L,
+                         dt).reshape(rows, L)
+    return _out_block(value, rows, used, L, dt)
+
+
 class _BlockMem:
     """Row-blocked accessor: whole arena rows of a typed (R, L) buffer via
     ``pl.dslice`` on the row axis — no bitcasts, compiled-mode lowerable."""
@@ -252,24 +330,41 @@ class _BlockMem:
         rows, used = self.spec.in_rows[i]
         shape = self.spec.in_shape[i]
         block = self._in_ref(i)[pl.dslice(self.spec.in_off[i], rows), :]
-        flat = block[:, :used].reshape(rows * used)
-        return flat[:_elems(shape)].reshape(shape)
+        return _dec_block(block, rows, used, self.L, _addr_in(self.spec, i),
+                          _elems(shape)).reshape(shape)
 
     def read_row(self, i: int, iy):
         used = _elems(self.spec.in_shape[i][-2:])
-        row = self._in_ref(i)[pl.dslice(self.spec.in_off[i] + iy, 1), :]
-        return row.reshape(self.L)[:used]
+        return _dec_row(self._in_ref(i), self.spec.in_off[i], iy, self.L,
+                        used, _addr_in(self.spec, i))
 
     def write(self, value):
         rows, used = self.spec.out_rows
         self._out_ref()[pl.dslice(self.spec.out_off, rows), :] = \
-            _out_block(value, rows, used, self.L, self.dt)
+            _enc_block(value, rows, used, self.L, self.dt,
+                       _addr_out(self.spec))
 
     def write_row(self, oy, value):
+        # A packed row store is a read-modify-write of the whole arena row
+        # (the other lane phases must survive); safe because the row loop is
+        # sequential and the planner's O_s is derived at whole-arena-row
+        # granularity, phases included.
         used = _elems(self.spec.out_shape[-2:])
-        row = value.reshape(1, used).astype(self.dt)
-        self._out_ref()[pl.dslice(self.spec.out_off + oy, 1), :] = \
-            _pad_cols(row, 1, used, self.L, self.dt)
+        c, k, rl = _addr_out(self.spec)
+        ref, off = self._out_ref(), self.spec.out_off
+        val = value.reshape(-1).astype(self.dt)
+        if c > 1:
+            ar = off + oy // c
+            row = ref[pl.dslice(ar, 1), :].reshape(self.L)
+            row = jax.lax.dynamic_update_slice(row, val, ((oy % c) * rl,))
+            ref[pl.dslice(ar, 1), :] = row.reshape(1, self.L)
+        elif k > 1:
+            ref[pl.dslice(off + oy * k, k), :] = _pad_cols(
+                val.reshape(1, used), 1, used, k * self.L,
+                self.dt).reshape(k, self.L)
+        else:
+            ref[pl.dslice(off + oy, 1), :] = \
+                _pad_cols(val.reshape(1, used), 1, used, self.L, self.dt)
 
     def fori_rows(self, oh: int, body) -> None:
         jax.lax.fori_loop(0, oh, body, 0)
@@ -323,19 +418,41 @@ class _StreamRollMem:
 
     def read_row(self, i: int, iy):
         used = _elems(self.spec.in_shape[i][-2:])
-        idx = self.spec.in_off[i] + iy - self.base
-        row = self.in_ref[pl.dslice(idx, 1), :]
-        return row.reshape(self.L)[:used]
+        return _dec_row(self.in_ref, self.spec.in_off[i] - self.base, iy,
+                        self.L, used, _addr_in(self.spec, i))
 
     def write_row(self, oy, value):
+        # Packed output rows RMW their slot row (phases accumulate — the
+        # tile covers whole arena rows, ``out_tile = sub*c`` image rows) and
+        # DMA the whole arena row back per phase; the redundant copies are
+        # idempotent and the final one carries every phase. Spanning rows
+        # write and copy ``k`` arena rows at once.
         used = _elems(self.spec.out_shape[-2:])
-        j = oy - self.row_lo
-        self.out_ref[pl.dslice(j, 1), :] = \
-            _pad_cols(value.reshape(1, used).astype(self.dt), 1, used,
-                      self.L, self.dt)
+        c, k, rl = _addr_out(self.spec)
+        val = value.reshape(-1).astype(self.dt)
+        if c > 1:
+            ar = oy // c                    # operand-relative arena row
+            j = ar - self.row_lo // c       # slot row (row_lo % c == 0)
+            row = self.out_ref[pl.dslice(j, 1), :].reshape(self.L)
+            row = jax.lax.dynamic_update_slice(row, val, ((oy % c) * rl,))
+            self.out_ref[pl.dslice(j, 1), :] = row.reshape(1, self.L)
+            n = 1
+        elif k > 1:
+            ar = oy * k
+            j = (oy - self.row_lo) * k
+            self.out_ref[pl.dslice(j, k), :] = _pad_cols(
+                val.reshape(1, used), 1, used, k * self.L,
+                self.dt).reshape(k, self.L)
+            n = k
+        else:
+            ar = oy
+            j = oy - self.row_lo
+            self.out_ref[pl.dslice(j, 1), :] = \
+                _pad_cols(val.reshape(1, used), 1, used, self.L, self.dt)
+            n = 1
         cp = pltpu.make_async_copy(
-            self.out_ref.at[pl.dslice(j, 1), :],
-            self.arena_ref.at[pl.dslice(self.spec.out_off + oy, 1), :],
+            self.out_ref.at[pl.dslice(j, n), :],
+            self.arena_ref.at[pl.dslice(self.spec.out_off + ar, n), :],
             self.sem)
         cp.start()
         cp.wait()
@@ -362,13 +479,14 @@ class _StreamStageMem:
         rows, used = self.spec.in_rows[i]
         shape = self.spec.in_shape[i]
         block = self.ref[pl.dslice(self.offs[i], rows), :]
-        flat = block[:, :used].reshape(rows * used)
-        return flat[:_elems(shape)].reshape(shape)
+        return _dec_block(block, rows, used, self.L, _addr_in(self.spec, i),
+                          _elems(shape)).reshape(shape)
 
     def write(self, value):
         rows, used = self.spec.out_rows
         self.ref[pl.dslice(self.out_slot, rows), :] = \
-            _out_block(value, rows, used, self.L, self.dt)
+            _enc_block(value, rows, used, self.L, self.dt,
+                       _addr_out(self.spec))
         cp = pltpu.make_async_copy(
             self.ref.at[pl.dslice(self.out_slot, rows), :],
             self.arena_ref.at[pl.dslice(self.spec.out_off, rows), :],
@@ -643,7 +761,8 @@ def _fused_kernel(*refs, spec: OpSpec):
 
 def _stream_roll_kernel(a_ref, *rest, spec: OpSpec):
     """One output-row tile of a rolling-window conv/dw-conv/pool. Grid step
-    ``t`` computes output rows ``[t*sub, min((t+1)*sub, oh))`` out of a
+    ``t`` computes output rows ``[t*tr, min((t+1)*tr, oh))`` (``tr`` image
+    rows = one sublane tile of packed arena rows) out of a
     double-buffered VMEM input window whose arena fetch start is the
     planner's static ``win_starts[t]`` (the single source of truth — the
     kernel just indexes the table). The tile-``t+1`` fetch is issued before
@@ -655,12 +774,12 @@ def _stream_roll_kernel(a_ref, *rest, spec: OpSpec):
     write-backs."""
     nw = 1 if spec.kind in WEIGHTED_KINDS else 0
     w_refs, o_ref = rest[:nw], rest[nw]
-    in_win, out_tile, in_sems, out_sem = rest[nw + 1:]
+    in_win, out_buf, in_sems, out_sem = rest[nw + 1:]
 
-    sub = _sub(spec.dtype)
     oh = spec.out_shape[-3]
     T = len(spec.win_starts)
-    win_in = spec.win_rows - sub
+    tr, tile_ar = _tile_geom(spec)
+    win_in = spec.win_rows - tile_ar
     t = pl.program_id(0)
 
     def start_of(tt):
@@ -688,9 +807,9 @@ def _stream_roll_kernel(a_ref, *rest, spec: OpSpec):
 
     fetch(t).wait()
 
-    row_lo = t * sub
-    row_hi = jnp.minimum(row_lo + sub, oh)
-    mem = _StreamRollMem(in_win.at[jax.lax.rem(t, 2)], out_tile, o_ref,
+    row_lo = t * tr
+    row_hi = jnp.minimum(row_lo + tr, oh)
+    mem = _StreamRollMem(in_win.at[jax.lax.rem(t, 2)], out_buf, o_ref,
                          out_sem, spec, start_of(t), row_lo, row_hi)
     _BODIES[spec.kind](mem, *w_refs, spec=spec)
 
@@ -786,12 +905,13 @@ def _apply_stream(arena: jax.Array, spec: OpSpec,
             **io_specs,
         )
     elif spec.win_starts:                      # rolling conv/dw/pool window
+        _, tile_ar = _tile_geom(spec)
         fn = pl.pallas_call(
             functools.partial(_stream_roll_kernel, spec=spec),
             grid=(len(spec.win_starts),),
             scratch_shapes=[
-                pltpu.VMEM((2, spec.win_rows - sub, L), dt),
-                pltpu.VMEM((sub, L), dt),
+                pltpu.VMEM((2, spec.win_rows - tile_ar, L), dt),
+                pltpu.VMEM((tile_ar, L), dt),
                 pltpu.SemaphoreType.DMA((2,)),
                 pltpu.SemaphoreType.DMA(()),
             ],

@@ -36,8 +36,9 @@ def _assert_block_invariants(bp: BlockPlan):
     assert bp.total_rows % sub == 0           # sublane-tiled arena height
     for t, lay in bp.layouts.items():
         assert isinstance(lay, BlockLayout)
-        assert lay.row_offset % sub == 0, \
-            f"{lay.name}: row offset {lay.row_offset} not {sub}-aligned"
+        assert lay.row_offset % bp.row_align == 0, \
+            f"{lay.name}: row offset {lay.row_offset} not " \
+            f"{bp.row_align}-aligned"
         assert lay.row_offset + lay.rows <= bp.total_rows
         assert 0 < lay.rowlen <= bp.arena_rowlen
         assert lay.rows * lay.rowlen >= lay.elems

@@ -155,12 +155,10 @@ def test_fused_streaming_window_containment():
                if op.params.get("fuse_chain") == w.op_name]
     internal = {op.output.storage() for op in members[:-1]}
 
-    def rows_of(s):
-        lay = bp.layouts.get(s)
-        return lay.rows if lay is not None else int(s.shape[-3])
-
-    _, total = P.fused_slots(members, rows_of, round_to=bp.tiling[0],
-                             include_io=True)
+    # chain_rows_of applies the packed (cols_per_row, row_span) geometry to
+    # chain-scratch tensors exactly as the planner's _fused_window does
+    _, total = P.fused_slots(members, P.chain_rows_of(bp),
+                             round_to=bp.tiling[0], include_io=True)
     assert w.win_rows == w.resident_rows == total
     for op in members:
         for t in list(op.inputs) + [op.output]:

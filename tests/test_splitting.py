@@ -199,8 +199,10 @@ def test_split_band_plan_legalises_for_blocks():
     banded = [op for op in sg.ops if band_range(op) is not None]
     for op in banded:
         lay = bp.layout_of(op.output)
-        assert lay.rows == op.output.shape[0]
-        assert lay.rowlen == op.output.shape[1] * op.output.shape[2]
+        h = op.output.shape[0]
+        c, k = lay.cols_per_row, lay.row_span
+        assert lay.rows == (-(-h // c) if c > 1 else h * k)
+        assert lay.image_rowlen == op.output.shape[1] * op.output.shape[2]
 
 
 def test_pipeline_split_winner_full_verify_chain():
