@@ -2,13 +2,14 @@
 Prints ``name,us_per_call,derived`` CSV rows.
 
 ``--json [PATH]`` additionally writes a structured artifact (default
-``BENCH_pr9.json``): per-model plan peaks (fixed-order vs joint
+``BENCH_pr10.json``): per-model plan peaks (fixed-order vs joint
 execution-order x overlap search, plus the order-search wall time),
 blocked/window rows, the shipped layout's packing (packed peak, padding
 overhead, the legacy layout's cost for comparison), pallas launch counts
-(fused band chains collapse to one), compile time, and exec throughput
-per backend×dtype — so the perf trajectory is machine-readable
-instead of living in prose. ``--sweep off`` skips the CSV sweep when only
+(fused band chains collapse to one), compile time, the memory-vs-batch
+trade curve (``peak_vs_batch``), exec throughput per backend×dtype, and
+the serving demo's sustained inferences/sec (``serve_throughput``) — so
+the perf trajectory is machine-readable instead of living in prose. ``--sweep off`` skips the CSV sweep when only
 the artifact is wanted. ``scripts/bench_diff.py`` diffs two artifacts and
 fails on regressions (the CI perf gate).
 
@@ -86,6 +87,14 @@ def _json_payload(rows):
                     "fused_scratch_rows": max(
                         (s.scratch_rows for s in fused), default=0),
                 })
+        # memory-vs-batch trade curve: the rows a PlanServer routes on
+        # (deterministic default compile kwargs — no search budget — so
+        # the batched sweep stays cheap and cache-stable)
+        from repro.core.pipeline import peak_vs_batch
+        entry["peak_vs_batch"] = [
+            {k: r[k] for k in ("batch", "peak_bytes", "per_image_bytes",
+                               "peak_ratio_vs_b1")}
+            for r in peak_vs_batch(build(), batches=(1, 2, 4, 8))]
         models[name] = entry
 
     exec_us = {}
@@ -115,10 +124,16 @@ def _json_payload(rows):
             exec_us[f"{tier}/{bname}"] = round(
                 (time.perf_counter() - t0) / n * 1e6, 1)
 
+    # serving demo: sustained inferences/sec on the 8-bit reduced flagship
+    # through the deadline-batching PlanServer (batch variants 1..8)
+    from repro.serve import throughput_demo
+    serve = throughput_demo(zoo.mobilenet_v1(0.25, 32, 1), n_requests=512)
+
     return {
-        "schema": "repro-dmo-bench-v3",
+        "schema": "repro-dmo-bench-v4",
         "models": models,
         "exec_us_per_call": exec_us,
+        "serve_throughput": serve,
         "sweep_rows": [[n, round(us, 1), d] for n, us, d in rows],
         "plan_cache": cache_info(),
     }
@@ -128,10 +143,10 @@ def main(argv=None) -> None:
     os.environ.setdefault("REPRO_DMO_DISK_CACHE", "1")
     ap = argparse.ArgumentParser(
         prog="benchmarks.run", description="DMO benchmark sweep")
-    ap.add_argument("--json", nargs="?", const="BENCH_pr9.json",
+    ap.add_argument("--json", nargs="?", const="BENCH_pr10.json",
                     default=None, metavar="PATH",
                     help="also write the structured benchmark artifact "
-                         "(default path: BENCH_pr9.json)")
+                         "(default path: BENCH_pr10.json)")
     ap.add_argument("--sweep", choices=("on", "off"), default="on",
                     help="run the full CSV sweep ('off' keeps --json cheap "
                          "on a warm plan cache)")

@@ -127,7 +127,13 @@ def series(paths, metric: str = "dmo_kb") -> list:
     for n in names:
         row = [n]
         for _, models in arts:
-            v = models.get(n, {}).get(metric)
+            if n not in models:
+                # the model itself predates (or was dropped from) this
+                # artifact — distinct from a model that exists but lacks
+                # the metric
+                row.append("(absent)")
+                continue
+            v = models[n].get(metric)
             # older artifacts may predate the metric or carry it as a
             # non-numeric field (e.g. packing="legacy") — print "-"
             numeric = isinstance(v, (int, float)) and not isinstance(v, bool)

@@ -1,0 +1,84 @@
+"""Fan a zoo x batches compile grid across worker processes.
+
+Thin CLI over :func:`repro.core.pipeline.compile_many`: the workers share
+the content-addressed disk plan-cache (atomic writes, so concurrent
+compiles of one key race benignly), which is what the CI ``serving`` step
+exercises — a second run over the same grid must be served from the disk
+entries the first run's workers wrote.
+
+A real script file, not an inline heredoc, because multiprocessing's spawn
+start method re-imports ``__main__`` in every worker: stdin-fed scripts
+cannot spawn, and module-level side effects would re-execute per worker
+(all env setup stays under ``main()``).
+
+Usage::
+
+    PYTHONPATH=src python scripts/compile_zoo.py --workers 2 --batches 1 2
+    PYTHONPATH=src python scripts/compile_zoo.py \
+        --models mobilenet_v1_0.25_128_8bit --batches 1 2 4 8 --expect-disk-hits
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+#: Reduced executable builds: cheap enough for a CI grid, real enough to
+#: exercise split/fuse winners at every batch.
+DEFAULT_MODELS = ("mobilenet_v1_0.25_32_8bit", "mobilenet_v1_0.25_32_f32")
+
+
+def _build(name: str):
+    from repro.core import zoo
+    if name in zoo.TABLE3_MODELS:
+        return zoo.TABLE3_MODELS[name][0]()
+    if name == "mobilenet_v1_0.25_32_8bit":
+        return zoo.mobilenet_v1(0.25, 32, 1)
+    if name == "mobilenet_v1_0.25_32_f32":
+        return zoo.mobilenet_v1(0.25, 32, 4)
+    raise SystemExit(f"unknown model {name!r}: pick a TABLE3_MODELS name, "
+                     "'mobilenet_v1_0.25_32_8bit' or "
+                     "'mobilenet_v1_0.25_32_f32'")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="compile a zoo x batches grid across worker processes")
+    ap.add_argument("--models", nargs="+", default=list(DEFAULT_MODELS),
+                    metavar="NAME")
+    ap.add_argument("--batches", nargs="+", type=int, default=[1, 2, 4, 8])
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--expect-disk-hits", action="store_true",
+                    help="fail unless every job was served from the disk "
+                         "plan-cache (run the same grid twice: the second "
+                         "run proves cross-process sharing)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the per-job summaries as JSON")
+    args = ap.parse_args(argv)
+
+    from repro.core.pipeline import compile_many
+    graphs = [_build(n) for n in args.models]
+    res = compile_many(graphs, batches=args.batches, workers=args.workers)
+
+    for r in res:
+        print(f"{r['graph']} b={r['batch']}: peak={r['peak_bytes']} "
+              f"({r['saving_pct']}% vs {r['baseline_bytes']}) "
+              f"disk_hits={r['disk_hits']} wall={r['wall_s']}s")
+    hits = sum(r["disk_hits"] for r in res)
+    print(f"# {len(res)} jobs over {args.workers} workers, "
+          f"{hits} disk-cache hits")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(res, f, indent=1, sort_keys=True)
+            f.write("\n")
+
+    if args.expect_disk_hits and hits < len(res):
+        print(f"# FAIL: expected {len(res)} disk-cache hits, got {hits}",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,7 +23,11 @@ Routes:
 - ``streaming`` — the double-buffered streaming Pallas program;
 - ``fused``     — alias of ``blocked`` that *requires* the winning graph to
   carry fused band chains (errors out otherwise), for eyeballing the
-  one-launch-per-chain collapse.
+  one-launch-per-chain collapse;
+- ``serve``     — a closed-loop :class:`~repro.serve.PlanServer` run:
+  request-level spans (queue wait -> batch assembly -> execute), one
+  trace track per request, so the deadline-batching behaviour is visible
+  request by request.
 
 Open the file at ``chrome://tracing`` (or https://ui.perfetto.dev).
 
@@ -39,7 +43,7 @@ import argparse
 import json
 import time
 
-ROUTES = ("numpy", "flat", "blocked", "streaming", "fused")
+ROUTES = ("numpy", "flat", "blocked", "streaming", "fused", "serve")
 
 
 def _build(name: str):
@@ -227,12 +231,48 @@ def trace_pallas_events(cp, route: str) -> list:
     return events
 
 
+def trace_serve_events(graph, n_requests: int = 64) -> list:
+    """Chrome-tracing events for a closed-loop PlanServer run: each request
+    is one trace track (tid = request id) carrying its queue-wait, batch-
+    assembly and execute spans, plus a queue-depth counter per flush."""
+    import numpy as np
+    from repro.serve import PlanServer
+
+    server = PlanServer(graph)
+    rng = np.random.default_rng(1)
+    shapes = {t.name: tuple(t.shape)
+              for t in graph.tensors if t.kind == "input"}
+    for _ in range(n_requests):
+        server.submit({nm: rng.standard_normal(sh).astype(np.float32)
+                       for nm, sh in shapes.items()})
+        server.step()
+    server.drain()
+
+    events = []
+    for s in server.spans():
+        ts = s["t_submit"] * 1e6
+        for phase in ("queue_wait", "assemble", "execute"):
+            dur = s[f"{phase}_s"] * 1e6
+            events.append({
+                "name": phase, "cat": "serve", "ph": "X",
+                "ts": round(ts, 3), "dur": round(max(dur, 0.001), 3),
+                "pid": 1, "tid": s["rid"],
+                "args": {"rid": s["rid"], "batch": s["batch"]}})
+            ts += dur
+    st = server.stats()
+    events.append({"name": "serve_stats", "ph": "C", "ts": 0.0, "pid": 1,
+                   "args": {"throughput_inf_s": st["throughput_inf_s"] or 0}})
+    return events
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(
         description="export an arena execution as chrome://tracing JSON")
     ap.add_argument("--model", default="mobilenet_v1_0.25_32_8bit")
     ap.add_argument("--route", default="numpy", choices=ROUTES,
                     help="execution route to trace (default: numpy)")
+    ap.add_argument("--requests", type=int, default=64,
+                    help="request count for --route serve (default 64)")
     ap.add_argument("--out", default="trace.json")
     args = ap.parse_args(argv)
 
@@ -240,8 +280,8 @@ def main(argv=None) -> None:
     cp = compile_graph(_build(args.model))
     if args.route == "numpy":
         events = trace_events(cp)
-    else:
-        events = trace_pallas_events(cp, args.route)
+    elif args.route == "serve":
+        events = trace_serve_events(cp.original, args.requests)
     spans = sum(1 for e in events if e["ph"] == "X")
     with open(args.out, "w") as f:
         json.dump({"traceEvents": events, "displayTimeUnit": "ms",

@@ -55,10 +55,20 @@ class _Exec:
     def store(self, t: Tensor, v: np.ndarray) -> None:
         raise NotImplementedError
 
-    def store_rows(self, op: Op, rows) -> None:
-        """Default: materialise and store whole tensor (reference executor)."""
+    def load_image(self, t: Tensor, b: int) -> np.ndarray:
+        """Per-image value: image ``b`` of a batched tensor, or the whole
+        value of a batch-1 tensor (weights and operands shared across the
+        batch)."""
+        v = self.load(t)
+        return v[b] if t.storage().batch > 1 else v
+
+    def store_image(self, t: Tensor, v: np.ndarray, b: int) -> None:
+        raise NotImplementedError
+
+    def store_rows(self, op: Op, rows, b: int = 0) -> None:
+        """Default: materialise and store whole image (reference executor)."""
         out = np.stack([r for r in rows], axis=0)
-        self.store(op.output, out.reshape(op.output.shape))
+        self.store_image(op.output, out.reshape(op.output.shape), b)
 
     def run(self, order: Optional[List[Op]] = None) -> None:
         for op in (order or self.graph.ops):
@@ -73,23 +83,32 @@ class _Exec:
     def execute(self, op: Op) -> None:
         if op.kind == "reshape":
             return  # aliasing no-op
+        # batched ops execute image by image in ASCENDING order — the order
+        # the batched O_s (planner.batched_os_bytes) is derived against:
+        # image b's writes land before image b+1's reads
+        for b in range(op.output.storage().batch):
+            self.execute_image(op, b)
+
+    def execute_image(self, op: Op, b: int) -> None:
         q = X.op_quant(op, self.quant)
         if op.kind in ("conv2d", "depthwise_conv2d"):
-            x = self.load(op.inputs[0]).reshape(op.inputs[0].shape)
+            x = self.load_image(op.inputs[0], b).reshape(op.inputs[0].shape)
             x3 = x.reshape(x.shape[-3:])
             filt = self._filter(op, q)
             oh = op.output.shape[-3]
             self.store_rows(op, (X.conv_row(op, x3, filt, oy, q)
-                                 for oy in range(oh)))
+                                 for oy in range(oh)), b)
         elif op.kind == "pool":
-            x3 = self.load(op.inputs[0]).reshape(op.inputs[0].shape[-3:])
+            x3 = self.load_image(op.inputs[0], b).reshape(
+                op.inputs[0].shape[-3:])
             oh = op.output.shape[-3]
             self.store_rows(op, (X.pool_row(op, x3, oy, q)
-                                 for oy in range(oh)))
+                                 for oy in range(oh)), b)
         else:
-            xs = [self.load(t).reshape(t.shape) for t in op.inputs
+            xs = [self.load_image(t, b).reshape(t.shape) for t in op.inputs
                   if t.storage().kind != "weight"]
-            self.store(op.output, X.eval_op(op, xs, self._filter(op, q), q))
+            self.store_image(op.output, X.eval_op(op, xs,
+                                                  self._filter(op, q), q), b)
 
 
 class ReferenceExec(_Exec):
@@ -110,7 +129,18 @@ class ReferenceExec(_Exec):
         return self.vals[t.storage()]
 
     def store(self, t: Tensor, v: np.ndarray) -> None:
-        self.vals[t.storage()] = v.reshape(t.shape)
+        self.vals[t.storage()] = v.reshape(X.tensor_shape(t))
+
+    def store_image(self, t: Tensor, v: np.ndarray, b: int) -> None:
+        s = t.storage()
+        if s.batch == 1:
+            self.store(t, v)
+            return
+        buf = self.vals.get(s)
+        if buf is None:
+            buf = self.vals[s] = np.zeros((s.batch,) + tuple(t.shape),
+                                          v.dtype)
+        buf[b] = v.reshape(t.shape)
 
 
 class ArenaExec(_Exec):
@@ -160,24 +190,34 @@ class ArenaExec(_Exec):
         return self.arena[off:off + s.nbytes].view(X.arena_dtype(s.dtype_bytes))
 
     def load(self, t: Tensor) -> np.ndarray:
-        return self._view(t).copy().reshape(t.shape)
+        return self._view(t).copy().reshape(X.tensor_shape(t))
 
     def store(self, t: Tensor, v: np.ndarray) -> None:
         view = self._view(t)
         view[:] = np.asarray(v, dtype=view.dtype).reshape(-1)
 
-    def store_rows(self, op: Op, rows) -> None:
+    def store_image(self, t: Tensor, v: np.ndarray, b: int) -> None:
+        s = t.storage()
+        view = self._view(t)
+        if s.batch > 1:
+            n = s.image_elems
+            view = view[b * n:(b + 1) * n]
+        view[:] = np.asarray(v, dtype=view.dtype).reshape(-1)
+
+    def store_rows(self, op: Op, rows, b: int = 0) -> None:
         out = op.output
         view = self._view(out)
-        row_elems = out.elems // out.shape[-3]
+        row_elems = out.image_elems // out.shape[-3]
+        base = b * out.storage().image_elems
         for i, r in enumerate(rows):
             # NOTE: each row's inputs were loaded lazily by conv_row via the
             # generator *before* this store — but rows are produced one at a
             # time, so reads for row i+1 happen after the row-i store, exactly
             # the diagonal order.
-            view[i * row_elems:(i + 1) * row_elems] = r.reshape(-1)
+            view[base + i * row_elems:base + (i + 1) * row_elems] = \
+                r.reshape(-1)
 
-    def execute(self, op: Op) -> None:
+    def execute_image(self, op: Op, b: int) -> None:
         # conv/pool must re-load input per row to see the live arena
         if op.kind in ("conv2d", "depthwise_conv2d", "pool"):
             q = X.op_quant(op, self.quant)
@@ -187,15 +227,15 @@ class ArenaExec(_Exec):
 
             def rows():
                 for oy in range(oh):
-                    x3 = self.load(x_t).reshape(x_t.shape[-3:])
+                    x3 = self.load_image(x_t, b).reshape(x_t.shape[-3:])
                     if op.kind == "pool":
                         yield X.pool_row(op, x3, oy, q)
                     else:
                         yield X.conv_row(op, x3, filt, oy, q)
 
-            self.store_rows(op, rows())
+            self.store_rows(op, rows(), b)
         else:
-            super().execute(op)
+            super().execute_image(op, b)
 
 
 # ---------------------------------------------------------------------------

@@ -120,13 +120,24 @@ def synth_weights(graph: Graph, seed: int = 0) -> Dict[int, Dict[str, np.ndarray
     return out
 
 
+def tensor_shape(t: Tensor) -> Tuple[int, ...]:
+    """Runtime array shape of a tensor's value: the per-image shape with the
+    batch axis prepended when the tensor is batched. Backends execute batched
+    tensors image by image (the per-image kernels above never see the batch
+    axis), so this is the only place the value shape and the plan shape
+    diverge."""
+    return ((t.batch,) + tuple(t.shape)) if t.batch > 1 else tuple(t.shape)
+
+
 def random_inputs(graph: Graph, seed: int = 0) -> Dict[str, np.ndarray]:
     """Deterministic random model inputs (float32), keyed by tensor name.
     These are the *real-valued* inputs; int8 graphs quantise them through
-    :func:`quant_inputs` after calibration."""
+    :func:`quant_inputs` after calibration. Batched inputs draw
+    ``(batch,) + shape`` from the same rng stream, so image 0 of a batched
+    input is bit-identical to the batch-1 input at the same seed."""
     rng = np.random.default_rng(seed + 1)
     return {
-        t.name: rng.standard_normal(t.shape).astype(np.float32)
+        t.name: rng.standard_normal(tensor_shape(t)).astype(np.float32)
         for t in graph.tensors if t.kind == "input"
     }
 

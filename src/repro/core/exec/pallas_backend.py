@@ -58,7 +58,7 @@ from repro.core.exec import ops as X
 from repro.core.exec import unwrap_plan
 from repro.core.graph import Op
 from repro.core.planner import (BlockPlan, Plan, chain_addr_of,
-                                chain_rows_of, fused_slots,
+                                chain_image_rows_of, fused_slots,
                                 legalise_for_blocks, tile_rows)
 
 
@@ -241,6 +241,14 @@ class PallasExecutor:
 
     # -- lowering -----------------------------------------------------------
 
+    @staticmethod
+    def _flat_off(plan: Plan, t, b: int) -> int:
+        """Byte offset of image ``b`` of a flat-arena operand (batch-1
+        operands — weights excluded earlier — are shared across images)."""
+        s = t.storage()
+        off = plan._layout(t).byte_offset
+        return off + b * s.image_nbytes if s.batch > 1 else off
+
     def lower(self, plan: Plan,
               quant: Optional[X.QuantSpec] = None) -> Tuple:
         """Plan -> flat-program OpSpec sequence (static lowering, no weights
@@ -248,7 +256,10 @@ class PallasExecutor:
         plans with int8 ops — its per-op contexts become the kernels' static
         ``qmeta``. A fused band chain lowers to ONE spec (at its first
         member's position) whose stages carry byte offsets into the arena or
-        — for scratch-flagged operands — into the chain's scratch buffer."""
+        — for scratch-flagged operands — into the chain's scratch buffer.
+        Batched ops expand to one per-image spec each (image-minor order,
+        ascending — the order the batched O_s is derived against), so the
+        kernel bodies never see the batch axis."""
         from repro.kernels.arena_ops import OpSpec
         chains = _fused_chains(plan.order)
         emitted: set = set()
@@ -268,64 +279,75 @@ class PallasExecutor:
             lays = [plan._layout(t) for t in op.inputs]
             out = plan._layout(op.output)
             q = X.op_quant(op, quant)
-            specs.append(OpSpec(
-                kind=op.kind,
-                in_off=tuple(l.byte_offset for l in lays),
-                in_shape=tuple(l.shape for l in lays),
-                out_off=out.byte_offset,
-                out_shape=out.shape,
-                dtype="i8" if out.dtype_bytes == 1 else "f32",
-                meta=_canon_meta(op),
-                qmeta=_canon_qmeta(op, q)))
+            for b in range(op.output.storage().batch):
+                specs.append(OpSpec(
+                    kind=op.kind,
+                    in_off=tuple(self._flat_off(plan, t, b)
+                                 for t in op.inputs),
+                    in_shape=tuple(l.shape for l in lays),
+                    out_off=self._flat_off(plan, op.output, b),
+                    out_shape=out.shape,
+                    dtype="i8" if out.dtype_bytes == 1 else "f32",
+                    meta=_canon_meta(op),
+                    qmeta=_canon_qmeta(op, q)))
         return tuple(specs)
 
     def _fused_flat_spec(self, plan: Plan, members: List[Op],
                          quant: Optional[X.QuantSpec]):
         """One flat-program spec for a fused band chain: stage offsets are
         *byte* offsets — arena placements for external operands, packed
-        scratch-byte slots (:func:`repro.core.planner.fused_slots` over
-        ``nbytes``) for chain-internal ones."""
+        scratch-byte slots (:func:`repro.core.planner.fused_slots` over the
+        batched ``nbytes``) for chain-internal ones. Batched chains expand
+        their stages op-major (member-major, image-minor) inside the ONE
+        call — the exact order the planner's liveness model and the batched
+        O_s derivation assume — so a chain's terminal image-0 write can
+        never clobber an external input a later image still reads."""
         from repro.kernels.arena_ops import OpSpec
         cat = members[-1]
+        B = cat.output.storage().batch
         internal = {op.output.storage() for op in members[:-1]}
         align = max(s.dtype_bytes for s in internal)
-        slots, total = fused_slots(members, lambda s: s.nbytes, align=align)
+        slots, total = fused_slots(members, lambda s: s.nbytes,
+                                   align=align)
         stages: List[OpSpec] = []
         for op in members:
-            in_off, in_scr = [], []
-            for t in op.inputs:
-                s = t.storage()
-                if s in internal:
-                    in_off.append(slots[s])
-                    in_scr.append(1)
-                else:
-                    in_off.append(plan._layout(t).byte_offset)
-                    in_scr.append(0)
-            s_out = op.output.storage()
-            if s_out in internal:
-                out_off, out_scr = slots[s_out], 1
-            else:
-                out_off, out_scr = plan._layout(op.output).byte_offset, 0
             q = X.op_quant(op, quant)
-            stages.append(OpSpec(
-                kind=op.kind,
-                in_off=tuple(in_off),
-                in_shape=tuple(tuple(t.shape) for t in op.inputs),
-                out_off=out_off,
-                out_shape=tuple(op.output.shape),
-                dtype="i8" if op.output.storage().dtype_bytes == 1
-                else "f32",
-                meta=_canon_meta(op),
-                qmeta=_canon_qmeta(op, q),
-                in_scratch=tuple(in_scr),
-                out_scratch=out_scr))
+            for b in range(B):
+                in_off, in_scr = [], []
+                for t in op.inputs:
+                    s = t.storage()
+                    if s in internal:
+                        in_off.append(slots[s] + b * s.image_nbytes)
+                        in_scr.append(1)
+                    else:
+                        in_off.append(self._flat_off(plan, t, b))
+                        in_scr.append(0)
+                s_out = op.output.storage()
+                if s_out in internal:
+                    out_off = slots[s_out] + b * s_out.image_nbytes
+                    out_scr = 1
+                else:
+                    out_off = self._flat_off(plan, op.output, b)
+                    out_scr = 0
+                stages.append(OpSpec(
+                    kind=op.kind,
+                    in_off=tuple(in_off),
+                    in_shape=tuple(tuple(t.shape) for t in op.inputs),
+                    out_off=out_off,
+                    out_shape=tuple(op.output.shape),
+                    dtype="i8" if op.output.storage().dtype_bytes == 1
+                    else "f32",
+                    meta=_canon_meta(op),
+                    qmeta=_canon_qmeta(op, q),
+                    in_scratch=tuple(in_scr),
+                    out_scratch=out_scr))
         ext = self._chain_ext_inputs(members, internal)
         out_lay = plan._layout(cat.output)
         return OpSpec(
             kind="fused",
-            in_off=tuple(plan._layout(t).byte_offset for t in ext),
+            in_off=tuple(self._flat_off(plan, t, 0) for t in ext),
             in_shape=tuple(tuple(t.shape) for t in ext),
-            out_off=out_lay.byte_offset,
+            out_off=self._flat_off(plan, cat.output, 0),
             out_shape=out_lay.shape,
             dtype="i8" if out_lay.dtype_bytes == 1 else "f32",
             meta=(cat.params["fuse_chain"],),
@@ -385,19 +407,24 @@ class PallasExecutor:
                 out_addr=_addr_triple(out),
                 out_tile=tile_rows(out.cols_per_row, out.row_span, sub),
             ) if packed else {}
-            specs.append(OpSpec(
-                kind=op.kind,
-                in_off=tuple(l.row_offset for l in lays),
-                in_shape=tuple(tuple(t.shape) for t in ins),
-                out_off=out.row_offset,
-                out_shape=tuple(op.output.shape),
-                dtype=dtype,
-                meta=_canon_meta(op),
-                qmeta=_canon_qmeta(op, q),
-                rowlen=bplan.arena_rowlen,
-                in_rows=tuple((l.rows, l.rowlen) for l in lays),
-                out_rows=(out.rows, out.rowlen),
-                **extra))
+            # batched ops expand image-minor: each per-image spec addresses
+            # image b's padded sub-block (BlockLayout.image_row_offset)
+            for b in range(out.batch):
+                specs.append(OpSpec(
+                    kind=op.kind,
+                    in_off=tuple(
+                        l.image_row_offset(b if l.batch > 1 else 0)
+                        for l in lays),
+                    in_shape=tuple(tuple(t.shape) for t in ins),
+                    out_off=out.image_row_offset(b),
+                    out_shape=tuple(op.output.shape),
+                    dtype=dtype,
+                    meta=_canon_meta(op),
+                    qmeta=_canon_qmeta(op, q),
+                    rowlen=bplan.arena_rowlen,
+                    in_rows=tuple((l.image_rows, l.rowlen) for l in lays),
+                    out_rows=(out.image_rows, out.rowlen),
+                    **extra))
         return tuple(specs)
 
     def _fused_block_spec(self, bplan: BlockPlan, members: List[Op],
@@ -406,16 +433,26 @@ class PallasExecutor:
         chain's staged :class:`~repro.core.planner.OpWindow`, the streaming
         variant, whose stages run entirely inside the VMEM scratch buffer
         (every operand gets an ``include_io`` scratch slot; external inputs
-        are DMA'd in up front, the terminal output DMA'd back once)."""
+        are DMA'd in up front, the terminal output DMA'd back once).
+        Scratch slots are sized over the *batched* rows (per-image rows ×
+        batch — per-image sub-blocks pack back to back inside a slot);
+        stages expand op-major (member-major, image-minor) so the chain
+        executes in the exact order the planner's liveness model assumes,
+        each stage addressing its image's sub-block."""
         from repro.kernels.arena_ops import OpSpec
         dtype = "i8" if bplan.dtype_bytes == 1 else "f32"
         L = bplan.arena_rowlen
         sub = bplan.tiling[0]
         cat = members[-1]
+        B = cat.output.storage().batch
         internal = {op.output.storage() for op in members[:-1]}
         streaming = window is not None
         packed = bplan.packing == "packed"
-        rows_of = chain_rows_of(bplan)
+        irows_of = chain_image_rows_of(bplan)
+
+        def rows_of(s) -> int:
+            """Batched slot rows of one chain operand."""
+            return irows_of(s) * (s.batch if s.batch > 1 else 1)
         addr_of = chain_addr_of(bplan)
 
         def triple_of(s):
@@ -441,40 +478,50 @@ class PallasExecutor:
             assert used_of(s) <= L, \
                 f"scratch row of {s.name} wider than the arena row"
 
-        def place(t):
-            """(offset, (rows, used), scratch?) of one stage operand."""
+        def place(t, b):
+            """(offset, (rows, used), scratch?) of one stage operand for
+            image ``b`` — scratch-resident operands address their image's
+            sub-block inside the batched slot, arena-resident ones the
+            image's padded arena sub-block."""
             s = t.storage()
             if s in internal or streaming:
-                return slots[s], (rows_of(s), used_of(s)), 1
+                bb = b if s.batch > 1 else 0
+                return (slots[s] + bb * irows_of(s),
+                        (irows_of(s), used_of(s)), 1)
             lay = bplan.layouts[s]
-            return lay.row_offset, (lay.rows, lay.rowlen), 0
+            return (lay.image_row_offset(b if lay.batch > 1 else 0),
+                    (lay.image_rows, lay.rowlen), 0)
 
         stages: List[OpSpec] = []
         for op in members:
-            placed = [place(t) for t in op.inputs]
-            o_off, o_rows, o_scr = place(op.output)
             q = X.op_quant(op, quant)
             extra = dict(
                 in_addr=tuple(triple_of(t.storage()) for t in op.inputs),
                 out_addr=triple_of(op.output.storage()),
             ) if packed else {}
-            stages.append(OpSpec(
-                kind=op.kind,
-                in_off=tuple(p[0] for p in placed),
-                in_shape=tuple(tuple(t.shape) for t in op.inputs),
-                out_off=o_off,
-                out_shape=tuple(op.output.shape),
-                dtype=dtype,
-                meta=_canon_meta(op),
-                qmeta=_canon_qmeta(op, q),
-                rowlen=L,
-                in_rows=tuple(p[1] for p in placed),
-                out_rows=o_rows,
-                in_scratch=tuple(p[2] for p in placed),
-                out_scratch=o_scr,
-                **extra))
+            for b in range(B):
+                placed = [place(t, b) for t in op.inputs]
+                o_off, o_rows, o_scr = place(op.output, b)
+                stages.append(OpSpec(
+                    kind=op.kind,
+                    in_off=tuple(p[0] for p in placed),
+                    in_shape=tuple(tuple(t.shape) for t in op.inputs),
+                    out_off=o_off,
+                    out_shape=tuple(op.output.shape),
+                    dtype=dtype,
+                    meta=_canon_meta(op),
+                    qmeta=_canon_qmeta(op, q),
+                    rowlen=L,
+                    in_rows=tuple(p[1] for p in placed),
+                    out_rows=o_rows,
+                    in_scratch=tuple(p[2] for p in placed),
+                    out_scratch=o_scr,
+                    **extra))
         ext = self._chain_ext_inputs(members, internal)
         out_lay = bplan.layout_of(cat.output)
+        # top-level I/O covers the WHOLE batched block of each external
+        # operand (per-image sub-blocks are contiguous), so the streaming
+        # up-front/write-back DMAs stay one entry per tensor
         spec = OpSpec(
             kind="fused",
             in_off=tuple(bplan.layout_of(t).row_offset for t in ext),
@@ -484,8 +531,8 @@ class PallasExecutor:
             dtype=dtype,
             meta=(cat.params["fuse_chain"],),
             rowlen=L,
-            in_rows=tuple((bplan.layout_of(t).rows, bplan.layout_of(t).rowlen)
-                          for t in ext),
+            in_rows=tuple((bplan.layout_of(t).rows,
+                           bplan.layout_of(t).rowlen) for t in ext),
             out_rows=(out_lay.rows, out_lay.rowlen),
             stages=tuple(stages),
             scratch_rows=total)
@@ -577,15 +624,36 @@ class PallasExecutor:
             inputs = (X.quant_inputs(graph, quant, seed) if quant is not None
                       else X.random_inputs(graph, seed))
 
+        def w_of(op):
+            if quant is not None and id(op) in quant.weights_q:
+                return jnp.asarray(quant.weights_q[id(op)]["filter"],
+                                   jnp.int8)
+            return jnp.asarray(weights[id(op)]["filter"], jnp.float32)
+
+        # weight order mirrors the per-image spec/stage expansion exactly:
+        # a batched op repeats its filter per image (same jnp buffer, no
+        # copies); a batched fused chain's stages run op-major so each
+        # weighted member's filter repeats per image consecutively
         wflat = []
+        wchains = _fused_chains(plan.order)
+        wemitted: set = set()
         for op in plan.order:
+            if op.kind == "reshape":
+                continue
+            cname = op.params.get("fuse_chain")
+            if cname is not None:
+                if cname in wemitted:
+                    continue
+                wemitted.add(cname)
+                for m in wchains[cname]:
+                    if m.kind in arena_ops.WEIGHTED_KINDS:
+                        wflat.extend(
+                            w_of(m)
+                            for _ in range(m.output.storage().batch))
+                continue
             if op.kind in arena_ops.WEIGHTED_KINDS:
-                if quant is not None and id(op) in quant.weights_q:
-                    wflat.append(jnp.asarray(quant.weights_q[id(op)]["filter"],
-                                             jnp.int8))
-                else:
-                    wflat.append(jnp.asarray(weights[id(op)]["filter"],
-                                             jnp.float32))
+                wflat.extend(w_of(op)
+                             for _ in range(op.output.storage().batch))
 
         bplan = self._legalised(plan)
         route = (("stream" if self.mode == "streaming" else "blocks")
@@ -657,14 +725,15 @@ class PallasExecutor:
             if t.kind == "output":
                 s, off = t.storage(), plan.offsets[t.storage()]
                 outs[t.name] = out_arena[off:off + s.nbytes].view(
-                    X.arena_dtype(s.dtype_bytes)).reshape(t.shape)
+                    X.arena_dtype(s.dtype_bytes)).reshape(X.tensor_shape(t))
         return outs
 
     @staticmethod
     def _seed_block_arena(bplan: BlockPlan, graph, inputs) -> np.ndarray:
         """A zeroed (total_rows, rowlen) typed arena with every model input
         scattered into its block layout (row-major over the used row
-        prefix)."""
+        prefix). Batched inputs scatter image by image: image ``b`` fills
+        its own per-image-padded sub-block of ``image_rows`` rows."""
         dt = X.arena_dtype(bplan.dtype_bytes)
         L = bplan.arena_rowlen
         arena = np.zeros((bplan.total_rows, L), dt)
@@ -672,20 +741,23 @@ class PallasExecutor:
             if t.kind != "input":
                 continue
             lay = bplan.layout_of(t)
-            flat = np.asarray(inputs[t.name], dt).reshape(-1)
+            ir = lay.image_rows
+            imgs = np.asarray(inputs[t.name], dt).reshape(lay.batch, -1)
             k = lay.row_span
-            if k > 1:
-                # one image row spans k arena rows, column-padded per row
-                rl, h = lay.image_rowlen, lay.rows // k
-                block = np.zeros((h, k * L), dt)
-                block[:, :rl] = flat.reshape(h, rl)
-                arena[lay.row_offset:lay.row_offset + lay.rows, :] = \
-                    block.reshape(lay.rows, L)
-                continue
-            block = np.zeros(lay.rows * lay.rowlen, dt)
-            block[:flat.size] = flat
-            arena[lay.row_offset:lay.row_offset + lay.rows,
-                  :lay.rowlen] = block.reshape(lay.rows, lay.rowlen)
+            for b in range(lay.batch):
+                off = lay.row_offset + b * ir
+                flat = imgs[b]
+                if k > 1:
+                    # one image row spans k arena rows, column-padded per row
+                    rl, h = lay.image_rowlen, ir // k
+                    block = np.zeros((h, k * L), dt)
+                    block[:, :rl] = flat.reshape(h, rl)
+                    arena[off:off + ir, :] = block.reshape(ir, L)
+                    continue
+                block = np.zeros(ir * lay.rowlen, dt)
+                block[:flat.size] = flat
+                arena[off:off + ir, :lay.rowlen] = \
+                    block.reshape(ir, lay.rowlen)
         return arena
 
     @staticmethod
@@ -698,13 +770,16 @@ class PallasExecutor:
                 continue
             lay = bplan.layout_of(t)
             k = lay.row_span
-            if k > 1:
-                rl, h = lay.image_rowlen, lay.rows // k
-                rows = out_arena[lay.row_offset:lay.row_offset + lay.rows, :]
-                flat = rows.reshape(h, k * L)[:, :rl]
-                outs[t.name] = flat.reshape(-1)[:t.elems].reshape(t.shape)
-                continue
-            block = out_arena[lay.row_offset:lay.row_offset + lay.rows,
-                              :lay.rowlen]
-            outs[t.name] = block.reshape(-1)[:t.elems].reshape(t.shape)
+            ir = lay.image_rows
+            imgs = []
+            for b in range(lay.batch):
+                off = lay.row_offset + b * ir
+                if k > 1:
+                    rl, h = lay.image_rowlen, ir // k
+                    rows = out_arena[off:off + ir, :]
+                    flat = rows.reshape(h, k * L)[:, :rl]
+                else:
+                    flat = out_arena[off:off + ir, :lay.rowlen]
+                imgs.append(flat.reshape(-1)[:t.image_elems])
+            outs[t.name] = np.stack(imgs).reshape(X.tensor_shape(t))
         return outs

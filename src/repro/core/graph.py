@@ -37,10 +37,25 @@ class Tensor:
     kind: str = "intermediate"
     #: Alias-of: reshape/squeeze outputs share storage with their input.
     alias_of: Optional["Tensor"] = None
+    #: Leading batch axis. ``shape`` stays the per-image shape (so op params
+    #: like concat axes and band row ranges keep their meaning); a batched
+    #: tensor stores ``batch`` images back to back, image ``b`` at byte
+    #: offset ``b * image_nbytes`` of its storage. Weight tensors are never
+    #: batched (``batch == 1`` always).
+    batch: int = 1
+
+    @property
+    def image_elems(self) -> int:
+        """Elements of ONE image (``prod(shape)``, batch excluded)."""
+        return int(np.prod(self.shape)) if self.shape else 1
+
+    @property
+    def image_nbytes(self) -> int:
+        return self.image_elems * self.dtype_bytes
 
     @property
     def elems(self) -> int:
-        return int(np.prod(self.shape)) if self.shape else 1
+        return self.batch * self.image_elems
 
     @property
     def nbytes(self) -> int:
@@ -120,6 +135,9 @@ class Graph:
         self.name = name
         self.ops: List[Op] = []
         self._tensors: Dict[str, Tensor] = {}
+        #: Batch size every non-weight tensor carries (see
+        #: :func:`with_batch`). Builders construct batch-1 graphs.
+        self.batch: int = 1
 
     # -- construction -------------------------------------------------------
     def tensor(
@@ -132,7 +150,12 @@ class Graph:
     ) -> Tensor:
         if name in self._tensors:
             raise ValueError(f"duplicate tensor name {name!r}")
-        t = Tensor(name, tuple(int(s) for s in shape), dtype_bytes, kind, alias_of)
+        # graph rewrites (remove_concats / split / fuse) rebuild tensors
+        # through here: they inherit the graph's batch so a batched graph's
+        # transforms stay batched (weights are always shared across images)
+        batch = self.batch if kind != "weight" else 1
+        t = Tensor(name, tuple(int(s) for s in shape), dtype_bytes, kind,
+                   alias_of, batch=batch)
         self._tensors[name] = t
         return t
 
@@ -264,6 +287,43 @@ class Graph:
 
     def __repr__(self) -> str:  # pragma: no cover
         return f"Graph({self.name}, {len(self.ops)} ops, {len(self._tensors)} tensors)"
+
+
+def with_batch(graph: Graph, batch: int) -> Graph:
+    """A deep copy of ``graph`` with every non-weight tensor carrying a
+    leading ``batch`` axis (weights are shared across the batch and stay
+    batch-1). Per-image shapes, op params and execution order are untouched
+    — the batch axis is an attribute, not a literal shape dim, so band row
+    ranges, concat axes and overlap geometry keep their per-image meaning.
+    ``batch == 1`` returns the input graph unchanged (no copy), keeping
+    batch-1 compiles bit-identical to the pre-batch pipeline."""
+    b = int(batch)
+    if b < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    if b == 1 and graph.batch == 1:
+        return graph
+    g = Graph(graph.name)
+    g.batch = b
+    mapped: Dict[int, Tensor] = {}
+
+    def conv(t: Optional[Tensor]) -> Optional[Tensor]:
+        if t is None:
+            return None
+        nt = mapped.get(id(t))
+        if nt is None:
+            nt = Tensor(t.name, t.shape, t.dtype_bytes, t.kind,
+                        conv(t.alias_of),
+                        batch=1 if t.kind == "weight" else b)
+            mapped[id(t)] = nt
+        return nt
+
+    for t in graph._tensors.values():
+        g._tensors[t.name] = conv(t)
+    for op in graph.ops:
+        g.ops.append(Op(op.kind, [conv(t) for t in op.inputs],
+                        [conv(t) for t in op.outputs],
+                        dict(op.params), op.name))
+    return g
 
 
 # ---------------------------------------------------------------------------

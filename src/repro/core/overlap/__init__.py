@@ -26,14 +26,34 @@ PAPER_KINDS = frozenset({
 })
 
 
+def _image_op(op):
+    """A per-image (batch-1) clone of a batched op: the three calculators
+    replay the per-image loop nest, so their element counts and byte sizes
+    must exclude the batch axis. The planner re-scales the per-image O_s to
+    the batch (``planner.batched_os_bytes``). Batch-1 ops pass through
+    untouched."""
+    if all(t.batch == 1 for t in list(op.inputs) + list(op.outputs)):
+        return op
+    from repro.core.graph import Op, Tensor
+
+    def img(t):
+        return Tensor(t.name, t.shape, t.dtype_bytes, t.kind, None, batch=1)
+
+    return Op(op.kind, [img(t) for t in op.inputs],
+              [img(t) for t in op.outputs], dict(op.params), op.name)
+
+
 def safe_overlap(op, input_index: int = 0, method: str = "auto",
                  profile: str = "paper") -> int:
     """Dispatch: ``auto`` prefers the analytic closed form (cheapest, always a
     safe lower bound) and falls back to the algorithmic method for op kinds
     without a derived analytic solution. ``profile='paper'`` restricts the
-    overlap to the op kinds the paper derives; ``'extended'`` covers all."""
+    overlap to the op kinds the paper derives; ``'extended'`` covers all.
+    Batched ops are evaluated per-image (see :func:`_image_op`); the result
+    is always the PER-IMAGE ``O_s`` in bytes."""
     if profile == "paper" and op.kind not in PAPER_KINDS:
         return 0
+    op = _image_op(op)
     if method == "trace":
         return safe_overlap_trace(op, input_index)
     if method == "algorithmic":

@@ -43,7 +43,8 @@ from repro.core.splitting import auto_split, order_pinned
 __all__ = [
     "CompileOptions", "CompiledPlan", "Pass", "auto_budget_s",
     "available_passes", "cache_clear", "cache_info", "compile",
-    "default_passes", "graph_signature", "register_pass",
+    "compile_many", "default_passes", "graph_signature", "peak_vs_batch",
+    "register_pass",
 ]
 
 
@@ -72,8 +73,11 @@ def graph_signature(graph: Graph) -> str:
         if k not in ids:
             alias = ref(t.alias_of) if t.alias_of is not None else ""
             ids[k] = len(ids)
+            # batch folds in only when != 1 so batch-1 hashes (and their
+            # persisted disk entries) are stable across this change
+            batch = f":b{t.batch}" if t.batch > 1 else ""
             h.update(f"T{ids[k]}:{t.shape}:{t.dtype_bytes}:{t.kind}"
-                     f":a({alias});".encode())
+                     f"{batch}:a({alias});".encode())
         return str(ids[k])
 
     for op in graph.ops:
@@ -113,6 +117,12 @@ class CompileOptions:
     fuse_vmem_budget: Optional[int] = None
     verify: str = "auto"          # "auto" | "constraints" | "numeric" | "off"
     backend: str = "numpy"        # executor backend a plan is compiled for
+    #: Leading batch axis the plan is compiled for: the graph is rewritten
+    #: through :func:`repro.core.graph.with_batch` before any pass runs, so
+    #: every row count, O_s distance and streaming window scales with it.
+    #: Part of :meth:`key` (``astuple``), so each batch variant is its own
+    #: content-addressed cache entry — memory and disk tiers both.
+    batch: int = 1
 
     def key(self) -> str:
         return repr(dataclasses.astuple(self))
@@ -402,8 +412,9 @@ def _chain_scratch_bytes(g: Graph, members: List[Op]) -> int:
     if len(dbs) == 1:
         db = next(iter(dbs))
         sub, lanes = P.TPU_TILES.get(db, (8, 128))
-        _, total = P.fused_slots(members, lambda s: int(s.shape[-3]),
-                                 round_to=sub)
+        # batched chains stage every image's rows at once (op-major stages)
+        _, total = P.fused_slots(
+            members, lambda s: int(s.shape[-3]) * s.batch, round_to=sub)
         width = max(int(s.shape[-2]) * int(s.shape[-1]) for s in internal)
         return total * P._round_up(width, lanes) * db
     _, total = P.fused_slots(members, lambda s: s.nbytes,
@@ -857,7 +868,7 @@ def compile(graph: Graph, *, profile: str = "paper",
             split: str = "auto", split_max_parts: int = 8,
             split_ops_limit: int = 150, fuse: str = "auto",
             fuse_vmem_budget: Optional[int] = None, verify: str = "auto",
-            backend: str = "numpy", cache: bool = True,
+            backend: str = "numpy", batch: int = 1, cache: bool = True,
             disk_cache: Optional[bool] = None) -> CompiledPlan:
     """Compile ``graph`` to an arena plan through the registered pass chain.
 
@@ -888,6 +899,11 @@ def compile(graph: Graph, *, profile: str = "paper",
             gate (default: ``REPRO_DMO_VMEM_BUDGET`` env, else 16 MiB);
             over-budget chains are left unfused.
         verify: verification mode (``auto``/``constraints``/``numeric``/``off``).
+        batch: leading batch axis to compile the plan for (default 1). The
+            graph is rewritten through :func:`repro.core.graph.with_batch`
+            before any pass runs; every pass, the planner, the legaliser and
+            the verify tiers then operate on the batched graph, and the
+            batch is folded into the plan-cache key (memory + disk).
         backend: executor backend the plan is compiled for (``"numpy"`` or
             ``"pallas"``); ``"pallas"`` adds a verify tier cross-checking
             *both* pallas arena programs — the flat byte arena and the
@@ -933,12 +949,17 @@ def compile(graph: Graph, *, profile: str = "paper",
     if disk_cache and not cache:
         raise ValueError("disk_cache=True requires cache=True "
                          "(cache=False disables all caching)")
+    if not isinstance(batch, int) or isinstance(batch, bool) or batch < 1:
+        raise ValueError(f"batch must be an int >= 1, got {batch!r}")
+    if batch > 1:
+        from repro.core.graph import with_batch
+        graph = with_batch(graph, batch)
     opts = CompileOptions(profile=profile, method=method, budget_s=budget_s,
                           seed=seed, order_search=order_search, split=split,
                           split_max_parts=split_max_parts,
                           split_ops_limit=split_ops_limit, fuse=fuse,
                           fuse_vmem_budget=fuse_vmem_budget, verify=verify,
-                          backend=backend)
+                          backend=backend, batch=batch)
     names = tuple(passes) if passes is not None else default_passes()
     unknown = [n for n in names if n not in _PASSES]
     if unknown:
@@ -995,3 +1016,90 @@ def compile(graph: Graph, *, profile: str = "paper",
         # the cached entry (the hit path copies symmetrically)
         return dataclasses.replace(result, log=list(result.log))
     return result
+
+
+# ---------------------------------------------------------------------------
+# Batch sweeps + multi-process compilation (the serving-runtime front door)
+# ---------------------------------------------------------------------------
+
+
+def peak_vs_batch(graph: Graph, batches: Sequence[int] = (1, 2, 4, 8),
+                  **compile_kwargs) -> List[Dict[str, Any]]:
+    """Compile ``graph`` at every batch in ``batches`` and tabulate the
+    memory-vs-batch trade curve a server picks its batch variant from. Each
+    compile runs the full pass chain — ``Plan.validate`` re-checks the
+    no-clobber constraints at every swept batch — and hits the plan cache on
+    reruns. Returns one row per batch: byte peak, per-image peak, padded
+    (row-blocked) peak when the plan legalises, and the ratio to ``batch *
+    peak(1)``. The ratio is <= 1.0 whenever batch 1 and batch b compile
+    the same graph variant (the scaled batch-1 candidate inside
+    ``plan_dmo`` guarantees it); it can exceed 1.0 slightly when the VMEM
+    budget refuses a fused chain only at the larger batch (batched scratch
+    is b x bigger), forcing the bands back into the arena — e.g.
+    mobilenet_v2_1.0_224 at batch 8 (+2.5%)."""
+    rows: List[Dict[str, Any]] = []
+    peak1: Optional[int] = None
+    for b in sorted(set(int(x) for x in batches)):
+        cp = compile(graph, batch=b, **compile_kwargs)
+        if b == 1:
+            peak1 = cp.peak_bytes
+        bp = cp.legalised()
+        rows.append({
+            "batch": b,
+            "peak_bytes": cp.peak_bytes,
+            "per_image_bytes": -(-cp.peak_bytes // b),
+            "baseline_bytes": cp.baseline_bytes,
+            "saving_pct": round(cp.saving_pct, 2),
+            "padded_peak_bytes": (bp.padded_peak_bytes
+                                  if bp is not None else None),
+            "peak_ratio_vs_b1": (round(cp.peak_bytes / (b * peak1), 4)
+                                 if peak1 else None),
+            "verified": cp.verified,
+        })
+    return rows
+
+
+def _compile_many_worker(job: Tuple[Graph, int, Dict[str, Any]]
+                         ) -> Dict[str, Any]:
+    """One (graph, batch) compile in a worker process. Module-level (spawn
+    pickling); reports per-job disk-cache deltas so the parent can prove
+    cross-process sharing."""
+    graph, batch, kwargs = job
+    before = dict(_CACHE_STATS)
+    t0 = time.perf_counter()
+    cp = compile(graph, batch=batch, **kwargs)
+    return {
+        "graph": graph.name,
+        "batch": batch,
+        "peak_bytes": cp.peak_bytes,
+        "baseline_bytes": cp.baseline_bytes,
+        "saving_pct": round(cp.saving_pct, 2),
+        "verified": cp.verified,
+        "cache_hit": cp.cache_hit,
+        "disk_hits": _CACHE_STATS["disk_hits"] - before["disk_hits"],
+        "disk_misses": _CACHE_STATS["disk_misses"] - before["disk_misses"],
+        "wall_s": round(time.perf_counter() - t0, 4),
+    }
+
+
+def compile_many(graphs: Sequence[Graph], batches: Sequence[int] = (1,),
+                 workers: int = 2, **compile_kwargs) -> List[Dict[str, Any]]:
+    """Fan the ``graphs x batches`` compile grid across ``workers``
+    processes sharing the content-addressed disk plan-cache (process-safe:
+    :func:`_disk_store` writes via temp file + atomic ``os.replace``, so
+    concurrent writers of one key race benignly to an identical entry).
+
+    ``disk_cache=True`` is the default here — it is the only channel worker
+    processes share results through; pass ``disk_cache=False`` to measure
+    cold compiles. ``workers <= 1`` runs inline (no subprocess), which the
+    deterministic tests use. Returns one picklable summary dict per (graph,
+    batch) job, in grid order."""
+    kwargs = dict(compile_kwargs)
+    kwargs.setdefault("disk_cache", True)
+    jobs = [(g, int(b), kwargs) for g in graphs for b in batches]
+    if workers <= 1:
+        return [_compile_many_worker(j) for j in jobs]
+    import multiprocessing as mp
+    ctx = mp.get_context("spawn")
+    with ctx.Pool(processes=min(workers, len(jobs) or 1)) as pool:
+        return pool.map(_compile_many_worker, jobs)

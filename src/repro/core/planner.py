@@ -274,13 +274,27 @@ class BlockLayout:
     rowlen: int              # elements of each arena row this tensor uses
     cols_per_row: int = 1    # image rows packed per arena row
     row_span: int = 1        # arena rows spanned by one image row
+    #: Leading batch axis: the block holds ``batch`` per-image sub-blocks of
+    #: ``rows // batch`` arena rows each, back to back (each image is packed
+    #: and padded independently, so image ``b`` starts at its own arena row
+    #: — the per-image addressability the batched lowering relies on).
+    batch: int = 1
 
     @property
     def elems(self) -> int:
-        n = 1
+        n = self.batch
         for s in self.shape:
             n *= int(s)
         return n
+
+    @property
+    def image_rows(self) -> int:
+        """Arena rows of ONE image's sub-block."""
+        return self.rows // self.batch
+
+    def image_row_offset(self, b: int) -> int:
+        """First arena row of image ``b``'s sub-block."""
+        return self.row_offset + b * self.image_rows
 
     @property
     def image_rowlen(self) -> int:
@@ -539,7 +553,12 @@ def _legalise_at(plan: Plan, sub: int, lanes: int, db: int,
     tensors = list(plan.offsets)
     row_bytes = arena_rowlen * db
 
+    # Per-image geometry times the batch: each image's sub-block is packed
+    # and padded independently (rows = batch * per-image rows), so image b
+    # of any operand starts at its own arena row — the addressability the
+    # batched per-image lowering and the batched row O_s both rely on.
     rows: Dict[Tensor, int] = {}
+    img_rows: Dict[Tensor, int] = {}
     rowlen: Dict[Tensor, int] = {}
     addr: Dict[Tensor, Tuple[int, int]] = {}
     for t in tensors:
@@ -547,27 +566,37 @@ def _legalise_at(plan: Plan, sub: int, lanes: int, db: int,
             h, rl = image[t]
             c, k = pack_geometry(rl, arena_rowlen) if packed else (1, 1)
             addr[t] = (c, k)
-            rows[t] = -(-h // c) if c > 1 else h * k
+            img_rows[t] = -(-h // c) if c > 1 else h * k
             rowlen[t] = c * rl if k == 1 else arena_rowlen
         else:
             addr[t] = (1, 1)
-            rows[t] = -(-t.elems // arena_rowlen)
+            img_rows[t] = -(-t.image_elems // arena_rowlen)
             rowlen[t] = arena_rowlen
+        rows[t] = t.batch * img_rows[t]
 
-    # row-granular O_s per recorded overlap: the byte distance re-derived in
-    # (packed) arena-row units, stiffened by the exact row-streaming bound
+    # row-granular O_s per recorded overlap: the *per-image* byte distance
+    # re-derived in (packed) arena-row units, stiffened by the exact
+    # row-streaming bound, then scaled to the batch exactly like
+    # :func:`batched_os_bytes` — D_B = D_1 + (B-1) * max(0, out - in)
+    # per-image arena rows (batch-major per-image execution over the
+    # per-image-padded sub-blocks)
     row_overlaps: Dict[Tuple[int, int], int] = {}
     for (oi, ii), v in plan.overlaps.items():
         op = plan.order[oi]
         outp = op.output.storage()
+        inp = op.inputs[ii].storage()
+        B = outp.batch
+        v1 = v  # per-image byte O_s (undo the batched_os_bytes scaling)
+        if B > 1:
+            v1 = max(0, v - (B - 1) * min(inp.image_nbytes,
+                                          outp.image_nbytes))
         if not packed:
-            dist = -(-(outp.nbytes - v) // row_bytes)
+            dist = -(-(outp.image_nbytes - v1) // row_bytes)
             dist = max(dist, _min_row_distance(op))
         else:
-            inp = op.inputs[ii].storage()
             co, ko = addr[outp]
             # last clobber-endangered element -> its last packed arena row
-            last = -(-(outp.nbytes - v) // db) - 1
+            last = -(-(outp.image_nbytes - v1) // db) - 1
             if outp in image:
                 h, rl = image[outp]
                 dist = _ar_top(min(last // rl, h - 1), co, ko) + 1
@@ -575,6 +604,8 @@ def _legalise_at(plan: Plan, sub: int, lanes: int, db: int,
                 dist = last // arena_rowlen + 1
             ci, ki = addr.get(inp, (1, 1))
             dist = max(dist, _min_row_distance(op, ci, ki, co, ko))
+        if B > 1:
+            dist += (B - 1) * max(0, img_rows[outp] - img_rows.get(inp, 0))
         row_overlaps[(oi, ii)] = max(0, rows[outp] - dist)
 
     align = min(sub, 8) if packed else sub
@@ -589,7 +620,7 @@ def _legalise_at(plan: Plan, sub: int, lanes: int, db: int,
     layouts = {
         t: BlockLayout(t.name, tuple(t.shape), db, placed[t], rows[t],
                        rowlen[t], cols_per_row=addr[t][0],
-                       row_span=addr[t][1])
+                       row_span=addr[t][1], batch=t.batch)
         for t in tensors
     }
     # the legalised plan re-expressed in bytes: offsets are row-aligned and
@@ -1013,19 +1044,44 @@ def chain_rows_of(bplan: BlockPlan):
     return rows_of
 
 
+def chain_image_rows_of(bplan: BlockPlan):
+    """Per-IMAGE row resolver for fused-chain operands: like
+    :func:`chain_rows_of` but for one image's sub-block — the unit the
+    batched per-image fused lowering stages in VMEM. Identical to
+    :func:`chain_rows_of` on batch-1 plans."""
+    addr_of = chain_addr_of(bplan)
+
+    def rows_of(s: Tensor) -> int:
+        lay = bplan.layouts.get(s)
+        if lay is not None:
+            return lay.image_rows
+        c, k = addr_of(s)
+        h = int(s.shape[-3])
+        return -(-h // c) if c > 1 else h * k
+
+    return rows_of
+
+
 def _fused_window(bplan: BlockPlan, members: Sequence[Op],
                   sub: int) -> OpWindow:
-    """One staged window for a whole fused band chain. The streaming fused
+    """One staged window for a fused band chain. The streaming fused
     kernel DMAs every external-input block into VMEM up front, runs all
     chain stages inside the scratch buffer and writes only the terminal
     block back — so the resident rows are the ``include_io``
     :func:`fused_slots` packing (chain scratch plus the staged I/O blocks),
     and the row extent spans the external operands' arena placements.
     Chain-internal tensors have no layouts; their scratch rows come from
-    the shared :func:`chain_rows_of` rule (one arena row per image row on
-    legacy layouts, packed geometry on packed ones)."""
+    the shared :func:`chain_image_rows_of` rule (one arena row per image
+    row on legacy layouts, packed geometry on packed ones). A batched
+    chain stages ALL images at once (its stages run op-major inside the
+    one kernel, so every image of a member's output is live before the
+    next member runs) — the VMEM window scales with the batch and the
+    budget gate polices that honestly."""
     internal = {op.output.storage() for op in members[:-1]}
-    rows_of = chain_rows_of(bplan)
+    irows_of = chain_image_rows_of(bplan)
+
+    def rows_of(s: Tensor) -> int:
+        return irows_of(s) * (s.batch if s.batch > 1 else 1)
 
     _, total = fused_slots(members, rows_of, round_to=sub, include_io=True)
     ext: List[BlockLayout] = []
@@ -1064,37 +1120,49 @@ def window_schedule(bplan: BlockPlan) -> "WindowSchedule":
     for op in bplan.order:
         if op.kind == "reshape":
             continue
+        batch = op.output.storage().batch
         cname = op.params.get("fuse_chain")
         if cname is not None:
             if cname not in emitted:
                 emitted.add(cname)
                 windows.append(_fused_window(bplan, chains[cname], sub))
             continue
+        # one window per IMAGE (batch-major, same order the backends lower
+        # their per-image specs): the streaming VMEM ceiling is per-image,
+        # so it does not scale with the batch
         ins = [t for t in op.inputs if t.storage().kind != "weight"]
         lays = [bplan.layout_of(t) for t in ins]
         out = bplan.layout_of(op.output)
-        lo_e = min([l.row_offset for l in lays] + [out.row_offset])
-        hi_e = max([l.row_offset + l.rows for l in lays]
-                   + [out.row_offset + out.rows])
-        if op.kind in _ROW_STREAMING_KINDS and len(lays) == 1:
-            in_addr = (lays[0].cols_per_row, lays[0].row_span)
-            out_addr = (out.cols_per_row, out.row_span)
-            starts, win_in = rolling_starts(
-                op, lays[0].row_offset, out.row_offset,
-                int(op.inputs[0].shape[-3]), int(op.output.shape[-3]),
-                sub, bplan.total_rows, in_addr=in_addr, out_addr=out_addr)
-            out_ar = tile_arena_rows(*out_addr, sub)
-            lo = (min(min(starts), lo_e) // sub) * sub
-            hi = _round_up(max(max(s + win_in for s in starts), hi_e), sub)
-            windows.append(OpWindow(op.name, op.kind, lo, hi,
-                                    win_rows=win_in + out_ar,
-                                    resident_rows=2 * win_in + out_ar,
-                                    starts=starts))
-        else:
-            _, _, total = staged_slots([l.rows for l in lays], out.rows, sub)
-            windows.append(OpWindow(
-                op.name, op.kind, (lo_e // sub) * sub,
-                _round_up(hi_e, sub), win_rows=total, resident_rows=total))
+        for b in range(batch):
+            offs = [l.image_row_offset(b if l.batch == batch else 0)
+                    for l in lays]
+            out_off = out.image_row_offset(b)
+            lo_e = min(offs + [out_off])
+            hi_e = max([o + l.image_rows for o, l in zip(offs, lays)]
+                       + [out_off + out.image_rows])
+            if op.kind in _ROW_STREAMING_KINDS and len(lays) == 1:
+                in_addr = (lays[0].cols_per_row, lays[0].row_span)
+                out_addr = (out.cols_per_row, out.row_span)
+                starts, win_in = rolling_starts(
+                    op, offs[0], out_off,
+                    int(op.inputs[0].shape[-3]), int(op.output.shape[-3]),
+                    sub, bplan.total_rows, in_addr=in_addr,
+                    out_addr=out_addr)
+                out_ar = tile_arena_rows(*out_addr, sub)
+                lo = (min(min(starts), lo_e) // sub) * sub
+                hi = _round_up(max(max(s + win_in for s in starts), hi_e),
+                               sub)
+                windows.append(OpWindow(op.name, op.kind, lo, hi,
+                                        win_rows=win_in + out_ar,
+                                        resident_rows=2 * win_in + out_ar,
+                                        starts=starts))
+            else:
+                _, _, total = staged_slots([l.image_rows for l in lays],
+                                           out.image_rows, sub)
+                windows.append(OpWindow(
+                    op.name, op.kind, (lo_e // sub) * sub,
+                    _round_up(hi_e, sub), win_rows=total,
+                    resident_rows=total))
     return WindowSchedule(tuple(windows), bplan.total_rows,
                           bplan.arena_rowlen, bplan.dtype_bytes)
 
@@ -1104,10 +1172,42 @@ def window_schedule(bplan: BlockPlan) -> "WindowSchedule":
 # ---------------------------------------------------------------------------
 
 
+def batched_os_bytes(os_image: int, inp: Tensor, outp: Tensor) -> int:
+    """Scale a per-image byte ``O_s`` to the batched tensors' layout.
+
+    Batched execution is batch-major and per-image independent: image ``b``
+    of the op reads only image ``b`` of the input and writes only image
+    ``b`` of the output, images in ascending order. Writing output image
+    ``b`` must leave input image ``b`` intact up to the per-image overlap
+    (the ordinary per-image condition, worst at the last image when
+    ``|out| > |in|``) and must not touch the still-unread input images
+    ``> b``. Solving both for the smallest safe input/output distance gives
+
+        ``D_B = (|out| - O_s_1) + (B - 1) * max(0, |out| - |in|)``
+
+    (per-image byte sizes), i.e. the batched overlap
+
+        ``O_s_B = O_s_1 + (B - 1) * min(|in|, |out|)``.
+
+    Valid for any per-image ``O_s_1 >= 0`` — the batched term only relies
+    on image ``b`` of the input being dead once image ``b`` is computed.
+    Tensors with mismatched batches (e.g. a broadcast operand shared by
+    every image, which must survive until the last image) get no batched
+    relaxation."""
+    B = outp.batch
+    if B == 1:
+        return os_image
+    if inp.batch != B:
+        return 0
+    return os_image + (B - 1) * min(inp.image_nbytes, outp.image_nbytes)
+
+
 def _compute_overlaps(order: List[Op], overlap_fn: Optional[OverlapFn],
                       scopes) -> Dict[Tuple[int, int], int]:
     """O_s for every (op, input) pair where the relaxation is legal: the input
-    is an intermediate whose *last* use is this op (paper §II.D)."""
+    is an intermediate whose *last* use is this op (paper §II.D). Per-image
+    overlaps from ``overlap_fn`` are scaled to the batch via
+    :func:`batched_os_bytes`."""
     if overlap_fn is None:
         return {}
     out: Dict[Tuple[int, int], int] = {}
@@ -1133,7 +1233,7 @@ def _compute_overlaps(order: List[Op], overlap_fn: Optional[OverlapFn],
                 continue
             if s is op.output.storage():
                 continue
-            v = overlap_fn(op, ii)
+            v = batched_os_bytes(overlap_fn(op, ii), s, op.output.storage())
             if v > 0:
                 out[(oi, ii)] = v
         # multiple overlappable inputs of one op would collide with each
@@ -1313,17 +1413,57 @@ def plan_modified_heap(graph: Graph, order: Optional[Sequence[Op]] = None,
     return Plan(graph, order, placed, overlaps, name)
 
 
+def _plan_scaled_batch1(graph: Graph, order: Optional[Sequence[Op]],
+                        method: str, profile: str) -> Optional[Plan]:
+    """Batched candidate: plan the per-image (batch-1) graph, then scale
+    every byte offset by the batch B. Always valid: for any overlapping
+    (input, output) pair the scaled distance is ``B * (|out|_1 - O_s_1)``
+    and the batched requirement is ``B*|out|_1 - O_s_1 - (B-1)*min(|in|_1,
+    |out|_1)``, so validity reduces to ``O_s_1 <= min(|in|_1, |out|_1)`` —
+    true by construction (an overlap of two buffers cannot exceed either
+    size) — while disjoint pairs stay disjoint under uniform scaling.
+    Guarantees ``peak(B) <= B * peak(1)``: the batch never costs more than
+    B independent copies, whatever the heap heuristics do at batch B."""
+    from repro.core.graph import with_batch
+    B = getattr(graph, "batch", 1)
+    if B <= 1:
+        return None
+    g1 = with_batch(graph, 1)
+    order1 = None
+    if order is not None:
+        pos = {id(op): i for i, op in enumerate(graph.ops)}
+        order1 = [g1.ops[pos[id(op)]] for op in order]
+    p1 = plan_dmo(g1, order1, method, profile)
+    by_name = {t.name: t for t in graph.tensors}
+    offsets = {by_name[t.name]: off * B for t, off in p1.offsets.items()}
+    fn = _default_overlap(method, profile)
+    ord_b = list(order or graph.ops)
+    overlaps = _compute_overlaps(ord_b, fn, graph.scopes(ord_b))
+    plan = Plan(graph, ord_b, offsets, overlaps,
+                p1.strategy + f"+scaled_b{B}")
+    try:
+        plan.validate()
+    except AssertionError:  # pragma: no cover - defensive; see docstring
+        return None
+    return plan
+
+
 def plan_dmo(graph: Graph, order: Optional[Sequence[Op]] = None,
              method: str = "auto", profile: str = "paper") -> Plan:
     """Diagonal memory optimisation: the better of the strict reverse-order
     heap (§II.D) and the modified-heap frontier heuristic (§IV), both with
-    the O_s overlap relaxation."""
+    the O_s overlap relaxation. Batched graphs add the scaled batch-1
+    candidate (:func:`_plan_scaled_batch1`), bounding the batched peak by
+    ``B x`` the per-image peak."""
     fn = _default_overlap(method, profile)
     plans = [
         plan_greedy_size(graph, order, fn),
         plan_reverse_heap(graph, order, fn),
         plan_modified_heap(graph, order, fn, direction="backward"),
     ]
+    scaled = _plan_scaled_batch1(graph, order, method, profile)
+    if scaled is not None:
+        plans.append(scaled)
     return min(plans, key=lambda p: p.peak_bytes)
 
 

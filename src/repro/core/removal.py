@@ -41,6 +41,7 @@ def removable(g: Graph, op: Op) -> bool:
 def remove_concats(g: Graph) -> Graph:
     """Return a new graph with every removable concat elided."""
     ng = Graph(g.name + "_noconcat")
+    ng.batch = g.batch
     mapping: Dict[Tensor, Tensor] = {}
 
     def map_t(t: Tensor) -> Tensor:

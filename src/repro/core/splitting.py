@@ -85,6 +85,7 @@ def split_pair(g: Graph, ia: int, parts: int
         return None
 
     ng = Graph(g.name + f"_split{ia}x{parts}")
+    ng.batch = g.batch
     mapping = {}
 
     def map_t(t: Tensor) -> Tensor:
@@ -252,6 +253,7 @@ def fuse_chains(g: Graph, chains: Optional[List[List[Op]]] = None
                 internal.update(t.storage() for t in op.outputs)
 
     ng = Graph(g.name + "_fused")
+    ng.batch = g.batch
     mapping: Dict[Tensor, Tensor] = {}
 
     def map_t(t: Tensor) -> Tensor:

@@ -1,1 +1,12 @@
-"""repro.serve subpackage."""
+"""repro.serve subpackage.
+
+- :mod:`.engine` / :mod:`.continuous` — KV-cache decoding engines (the
+  transformer-family serving path);
+- :mod:`.plan_server` — the plan-routed CNN serving runtime: batch-aware
+  compiled arena plans behind a deadline-batching request queue
+  (:class:`~repro.serve.plan_server.PlanServer`).
+"""
+from repro.serve.plan_server import (FastExec, PlanServer, ServeRequest,
+                                     throughput_demo)
+
+__all__ = ["FastExec", "PlanServer", "ServeRequest", "throughput_demo"]

@@ -1,0 +1,168 @@
+"""Plan-routed serving runtime (PR 10): FastExec + PlanServer.
+
+- FastExec: the vectorised batched executor matches the reference backend
+  per image — f32 within the shared fp32 tolerance (BLAS may reassociate
+  the accumulations), int8 <= 1 LSB (its float64 accumulation reproduces
+  the reference int32 accumulation exactly);
+- PlanServer: batch-variant compilation, arena-budget admission and
+  rejection, deadline batching + forced drain with tail padding, correct
+  per-request outputs, timing spans and the stats surface;
+- throughput_demo: the closed-loop demo the benchmark harness embeds.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from test_batching import band_graph
+from repro.core import exec as X
+from repro.core import zoo
+from repro.core.exec.numpy_backend import run_reference
+from repro.core.pipeline import compile as compile_graph
+from repro.serve import FastExec, PlanServer, throughput_demo
+
+
+def _images(graph, n, quant=None):
+    """n per-image input dicts (int8 tensors pre-quantised when a spec is
+    given — FastExec also accepts raw floats and quantises itself)."""
+    return [(X.quant_inputs(graph, quant, seed=i) if quant is not None
+             else X.random_inputs(graph, seed=i)) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# FastExec parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("db", [4, 1])
+@pytest.mark.parametrize("batch", [1, 3, 8])
+def test_fastexec_matches_reference(db, batch):
+    g = band_graph(db=db)
+    fx = FastExec(g, seed=0)
+    imgs = _images(g, batch, fx.quant)
+    stacked = {k: np.stack([im[k] for im in imgs]) for k in imgs[0]}
+    got = fx.run(stacked)
+    for i, im in enumerate(imgs):
+        ref = run_reference(g, im, weights=fx.weights, quant=fx.quant)
+        for k, v in ref.items():
+            if v.dtype == np.int8:
+                diff = np.abs(got[k][i].astype(np.int32)
+                              - v.astype(np.int32))
+                assert diff.max(initial=0) <= 1, f"img {i} {k}"
+            else:
+                np.testing.assert_allclose(got[k][i], v, rtol=X.FP32_RTOL,
+                                           atol=X.FP32_ATOL)
+
+
+def test_fastexec_quantises_float_inputs():
+    from repro.core.exec.ops import quantise
+    g = band_graph(db=1)
+    fx = FastExec(g, seed=0)
+    floats = X.random_inputs(g, seed=0)
+    out_f = fx.run(floats)
+    out_q = fx.run({k: quantise(v, fx.quant.tensors[k])
+                    for k, v in floats.items()})
+    for k in out_f:
+        assert np.array_equal(out_f[k], out_q[k])
+
+
+def test_fastexec_flagship_model():
+    g = zoo.mobilenet_v1(0.25, 32, 1)
+    fx = FastExec(g, seed=0)
+    imgs = _images(g, 2, fx.quant)
+    stacked = {k: np.stack([im[k] for im in imgs]) for k in imgs[0]}
+    got = fx.run(stacked)
+    for i, im in enumerate(imgs):
+        ref = run_reference(g, im, weights=fx.weights, quant=fx.quant)
+        for k, v in ref.items():
+            diff = np.abs(got[k][i].astype(np.int32) - v.astype(np.int32))
+            assert diff.max(initial=0) <= 1
+
+
+# ---------------------------------------------------------------------------
+# PlanServer
+# ---------------------------------------------------------------------------
+
+
+def test_server_routes_to_largest_variant():
+    srv = PlanServer(band_graph(), batches=(1, 2, 4), max_delay_s=10.0)
+    for im in _images(srv.graph, 4):
+        srv.submit(im)
+    assert srv.step() == 4                 # full largest variant: no wait
+    st = srv.stats()
+    assert st["batches_run"] == {1: 0, 2: 0, 4: 1}
+    assert st["requests_served"] == 4 and st["queued"] == 0
+    assert st["throughput_inf_s"] is None or st["throughput_inf_s"] > 0
+
+
+def test_server_deadline_and_padded_tail():
+    srv = PlanServer(band_graph(), batches=(2, 4), max_delay_s=10.0)
+    srv.submit(_images(srv.graph, 1)[0])
+    assert srv.step() == 0                 # deadline not reached: hold
+    assert srv.drain() == 1                # forced: pad up to the b=2 plan
+    r = srv.done[0]
+    assert r.batch == 2 and r.output is not None
+
+
+def test_server_outputs_match_reference():
+    g = band_graph(db=1)
+    srv = PlanServer(g, batches=(1, 2, 4), max_delay_s=0.0)
+    imgs = _images(g, 5, srv._exec.quant)
+    for im in imgs:
+        srv.submit(im)
+    srv.drain()
+    assert len(srv.done) == 5
+    by_rid = {r.rid: r for r in srv.done}
+    for i, im in enumerate(imgs):
+        ref = run_reference(g, im, weights=srv._exec.weights,
+                            quant=srv._exec.quant)
+        for k, v in ref.items():
+            diff = np.abs(by_rid[i].output[k].astype(np.int32)
+                          - v.astype(np.int32))
+            assert diff.max(initial=0) <= 1
+
+
+def test_server_budget_admission():
+    mk = lambda: band_graph(db=1)          # noqa: E731
+    p1 = compile_graph(mk(), batch=1).peak_bytes
+    p4 = compile_graph(mk(), batch=4).peak_bytes
+    assert p1 < p4
+    srv = PlanServer(mk(), arena_budget=(p1 + p4) // 2, batches=(1, 4))
+    assert sorted(srv.variants) == [1]
+    assert 4 in srv.rejected and srv.rejected[4] == p4
+    st = srv.stats()
+    assert st["per_batch_peak_bytes"] == {1: p1}
+    assert st["rejected_batches"] == {4: p4}
+
+
+def test_server_no_variant_fits():
+    with pytest.raises(ValueError, match="admits no batch variant"):
+        PlanServer(band_graph(), arena_budget=1, batches=(1, 2))
+
+
+def test_server_spans_and_cache_stats():
+    srv = PlanServer(band_graph(), batches=(1, 2), max_delay_s=0.0)
+    for im in _images(srv.graph, 3):
+        srv.submit(im)
+        srv.step(force=True)
+    spans = srv.spans()
+    assert len(spans) == 3
+    for s in spans:
+        assert set(s) == {"rid", "batch", "t_submit", "queue_wait_s",
+                          "assemble_s", "execute_s"}
+        assert s["queue_wait_s"] >= 0 and s["execute_s"] > 0
+    st = srv.stats()
+    assert st["plan_cache"]["hits"] + st["plan_cache"]["misses"] >= 2
+    assert st["plan_cache"]["hit_rate"] is not None
+    # a second server over the same graph is served from the plan cache
+    srv2 = PlanServer(band_graph(), batches=(1, 2), max_delay_s=0.0)
+    assert srv2.stats()["plan_cache"]["hit_rate"] == 1.0
+
+
+def test_throughput_demo_smoke():
+    st = throughput_demo(band_graph(db=1), n_requests=32,
+                         batches=(1, 2, 4, 8))
+    assert st["requests_served"] == 32
+    assert st["queued"] == 0
+    assert st["throughput_inf_s"] and st["throughput_inf_s"] > 0
+    assert sum(b * n for b, n in st["batches_run"].items()) >= 32
